@@ -1,0 +1,24 @@
+"""Benchmark utilities: paper-style timing (warm-up + 16 reps, §5.1)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def timeit(fn, *args, reps: int = 16, warmup: int = 3) -> dict:
+    """Median wall time per call in microseconds (paper runs 16 reps)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts = np.asarray(ts)
+    return {"us": float(np.median(ts) * 1e6), "std_us": float(ts.std() * 1e6)}
+
+
+def emit(name: str, us: float, derived: str = "") -> None:
+    print(f"{name},{us:.1f},{derived}", flush=True)

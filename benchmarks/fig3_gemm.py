@@ -1,0 +1,33 @@
+"""Paper Fig 3: GeMM throughput vs batch size.
+
+Validates the premise of the reordered computation (§4): matmul throughput
+only approaches peak when the per-expert batch is large — the motivation for
+batching all of an expert's tokens into one GeMM.  CPU-scaled dims (the
+paper used d_m=1024, d_h=4096 on V100); the qualitative claim is the
+monotone throughput growth with batch size.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+
+D_M, D_H = 512, 2048
+BATCHES = [1, 4, 16, 64, 256, 1024]
+
+
+def run(quick: bool = False) -> list[dict]:
+    w = jax.random.normal(jax.random.PRNGKey(0), (D_M, D_H), jnp.float32)
+    f = jax.jit(lambda x, w: x @ w)
+    rows = []
+    batches = BATCHES[:4] if quick else BATCHES
+    for nb in batches:
+        x = jax.random.normal(jax.random.PRNGKey(1), (nb, D_M), jnp.float32)
+        t = timeit(f, x, w)
+        gflops = 2 * nb * D_M * D_H / (t["us"] * 1e-6) / 1e9
+        emit(f"fig3_gemm_b{nb}", t["us"], f"{gflops:.1f}GFLOP/s")
+        rows.append({"batch": nb, "us": t["us"], "gflops": gflops})
+    # the paper's point: large-batch GeMM must beat tiny-batch throughput
+    assert rows[-1]["gflops"] > 3 * rows[0]["gflops"], rows
+    return rows

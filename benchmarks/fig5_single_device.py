@@ -1,0 +1,49 @@
+"""Paper Fig 5: single-device MoE latency, FastMoE vs the naive baseline
+(Rau 2019), forward and forward+backward, sweeping the number of experts.
+
+Paper claim: the baseline's time grows with num_experts while FastMoE stays
+roughly flat (its batched dispatch does the same total work regardless of E).
+CPU-scaled: n_b=512, d_m=128, d_h=512, k=2 (paper: 4096/1024/4096/2).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+from repro.configs.base import MoEConfig
+from repro.core import fmoe, naive
+
+NB, DM, DH, K = 512, 128, 512, 2
+EXPERTS = [2, 4, 8, 16]
+
+
+def run(quick: bool = False) -> list[dict]:
+    x = jax.random.normal(jax.random.PRNGKey(0), (NB, DM), jnp.float32)
+    rows = []
+    experts = EXPERTS[:3] if quick else EXPERTS
+    for E in experts:
+        cfg = MoEConfig(num_experts=E, top_k=K, d_expert_hidden=DH,
+                        capacity_factor=2.0)
+        params = fmoe.fmoe_init(jax.random.PRNGKey(E), DM, cfg)
+
+        fast_fwd = jax.jit(lambda p, x: fmoe.fmoe_apply(p, x, cfg)[0])
+        naive_fwd = jax.jit(lambda p, x: naive.moe_loop_masked(p, x, cfg))
+        fast_bwd = jax.jit(jax.grad(lambda p, x: (fmoe.fmoe_apply(p, x, cfg)[0] ** 2).mean()))
+        naive_bwd = jax.jit(jax.grad(lambda p, x: (naive.moe_loop_masked(p, x, cfg) ** 2).mean()))
+
+        r = {"experts": E}
+        for label, fn in [("fastmoe_fwd", fast_fwd), ("baseline_fwd", naive_fwd),
+                          ("fastmoe_bwd", fast_bwd), ("baseline_bwd", naive_bwd)]:
+            t = timeit(fn, params, x)
+            emit(f"fig5_{label}_E{E}", t["us"])
+            r[label] = t["us"]
+        rows.append(r)
+    # paper claim: baseline scales with E, FastMoE much less
+    base_growth = rows[-1]["baseline_fwd"] / rows[0]["baseline_fwd"]
+    fast_growth = rows[-1]["fastmoe_fwd"] / rows[0]["fastmoe_fwd"]
+    emit("fig5_growth_ratio", 0.0,
+         f"baseline x{base_growth:.2f} vs fastmoe x{fast_growth:.2f} "
+         f"over E={rows[0]['experts']}->{rows[-1]['experts']}")
+    assert rows[-1]["fastmoe_fwd"] < rows[-1]["baseline_fwd"], rows[-1]
+    return rows

@@ -1,0 +1,45 @@
+"""Benchmark driver — one module per paper figure.  Prints
+``name,us_per_call,derived`` CSV and writes JSON results.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig5,fig7]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default="")
+    ap.add_argument("--out", default="benchmarks/results")
+    args = ap.parse_args()
+
+    from benchmarks import (fig3_gemm, fig5_single_device, fig6_scaling,
+                            fig7_end_to_end, tab_capacity)
+    suites = {
+        "fig3": fig3_gemm.run,
+        "fig5": fig5_single_device.run,
+        "fig6": fig6_scaling.run,
+        "fig7": fig7_end_to_end.run,
+        "tab_capacity": tab_capacity.run,
+    }
+    picked = args.only.split(",") if args.only else list(suites)
+
+    os.makedirs(args.out, exist_ok=True)
+    results = {}
+    print("name,us_per_call,derived")
+    for name in picked:
+        t0 = time.time()
+        results[name] = suites[name](quick=args.quick)
+        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+    with open(os.path.join(args.out, "results.json"), "w") as f:
+        json.dump(results, f, indent=1)
+    print(f"# wrote {args.out}/results.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Capacity-factor ablation (extends the paper's §4 load-imbalance
+discussion): token drop rate, routing imbalance, and step latency vs the
+static capacity factor — the knob the TPU adaptation introduces in place of
+FastMoE's dynamic buffers (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.configs.base import MoEConfig
+from repro.core import fmoe
+from repro.core.monitor import LoadMonitor
+
+FACTORS = [0.5, 1.0, 1.25, 2.0, 4.0]
+NB, DM, DH, E, K = 1024, 128, 256, 8, 2
+
+
+def run(quick: bool = False) -> list[dict]:
+    x = jax.random.normal(jax.random.PRNGKey(0), (NB, DM), jnp.float32)
+    rows = []
+    for cf in (FACTORS[1:4] if quick else FACTORS):
+        cfg = MoEConfig(num_experts=E, top_k=K, d_expert_hidden=DH,
+                        capacity_factor=cf)
+        params = fmoe.fmoe_init(jax.random.PRNGKey(1), DM, cfg)
+        fn = jax.jit(lambda p, x: fmoe.fmoe_apply(p, x, cfg))
+        y, m = fn(params, x)
+        mon = LoadMonitor(E, ema=0.0)
+        mon.update(m)
+        t = timeit(lambda p, x: fn(p, x)[0], params, x)
+        row = {"capacity_factor": cf, "drop_frac": float(m.drop_frac),
+               "imbalance": mon.imbalance, "us": t["us"]}
+        emit(f"tab_capacity_cf{cf}", t["us"],
+             f"drop={row['drop_frac']:.3f} imbalance={row['imbalance']:.2f}")
+        rows.append(row)
+    # drops must be monotone non-increasing in capacity
+    drops = [r["drop_frac"] for r in rows]
+    assert all(a >= b - 1e-9 for a, b in zip(drops, drops[1:])), drops
+    return rows

@@ -1,0 +1,35 @@
+"""Quickstart: build an MoE layer, route tokens, inspect the load monitor.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.core import fmoe
+from repro.core.naive import moe_loop_masked
+
+
+def main() -> None:
+    # 1. An MoE FFN: 8 experts, top-2 gating (paper Algorithm 1)
+    cfg = MoEConfig(num_experts=8, top_k=2, d_expert_hidden=256,
+                    capacity_factor=1.5)
+    params = fmoe.fmoe_init(jax.random.PRNGKey(0), 128, cfg)
+
+    # 2. Route a batch of tokens through the reordered computation (Fig 4)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 32, 128))
+    y, metrics = jax.jit(lambda p, x: fmoe.fmoe_apply(p, x, cfg))(params, x)
+    print(f"output: {y.shape}, aux_loss={float(metrics.aux_loss):.3f}, "
+          f"dropped={float(metrics.drop_frac):.1%}")
+    print("per-expert load:", [f"{v:.2f}" for v in metrics.load.tolist()])
+
+    # 3. It is numerically identical to the naive per-expert loop
+    y_naive = moe_loop_masked(params, x, cfg)
+    print("max |fast - naive| =", float(jnp.abs(y - y_naive).max()))
+
+    # 4. The same layer runs distributed: see examples/expert_parallel.py
+    print("ok")
+
+
+if __name__ == "__main__":
+    main()

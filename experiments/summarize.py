@@ -1,0 +1,85 @@
+"""Generate the EXPERIMENTS.md tables from experiments/dryrun/*.json.
+
+  PYTHONPATH=src python experiments/summarize.py
+"""
+import glob
+import json
+import os
+
+DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)), "dryrun")
+
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+ARCHS = ["granite-3-2b", "whisper-tiny", "arctic-480b", "qwen2-72b",
+         "deepseek-v2-236b", "hymba-1.5b", "rwkv6-7b", "smollm-360m",
+         "internvl2-76b", "starcoder2-15b"]
+
+
+def load(arch, shape, mesh="16x16", tag=""):
+    suffix = f"_{tag}" if tag else ""
+    fn = os.path.join(DIR, f"{arch}_{shape}_{mesh}{suffix}.json")
+    if not os.path.exists(fn):
+        return None
+    return json.load(open(fn))
+
+
+def fmt_s(x):
+    return f"{x:.3g}"
+
+
+def roofline_table(tag=""):
+    print(f"| arch | shape | compute_s | memory_s | collective_s | dominant | "
+          f"useful | bound_s |")
+    print("|---|---|---|---|---|---|---|---|")
+    for arch in ARCHS:
+        for shape in SHAPES:
+            r = load(arch, shape, tag=tag)
+            if r is None or not r.get("ok"):
+                print(f"| {arch} | {shape} | - | - | - | MISSING | - | - |")
+                continue
+            rl = r["roofline"]
+            print(f"| {arch} | {shape} | {fmt_s(rl['compute_s'])} | "
+                  f"{fmt_s(rl['memory_s'])} | {fmt_s(rl['collective_s'])} | "
+                  f"{rl['dominant']} | {rl['useful_flops_ratio']:.3f} | "
+                  f"{fmt_s(rl['step_s_bound'])} |")
+
+
+def dryrun_table():
+    print("| arch | shape | 16x16 | 2x16x16 | args GB/dev (16x16) | temp GB/dev |")
+    print("|---|---|---|---|---|---|")
+    for arch in ARCHS:
+        for shape in SHAPES:
+            r1 = load(arch, shape, "16x16")
+            r2 = load(arch, shape, "2x16x16")
+            ok1 = "OK" if (r1 and r1.get("ok")) else "FAIL"
+            ok2 = "OK" if (r2 and r2.get("ok")) else "FAIL"
+            mem = r1["memory"] if r1 and r1.get("ok") else {}
+            arg = mem.get("argument_bytes")
+            tmp = mem.get("temp_bytes")
+            print(f"| {arch} | {shape} | {ok1} | {ok2} | "
+                  f"{arg / 1e9:.2f} | {tmp / 1e9:.2f} |" if arg is not None
+                  else f"| {arch} | {shape} | {ok1} | {ok2} | - | - |")
+
+
+def opt_delta_table():
+    print("| arch | shape | bound base | bound opt | x | dominant base->opt |")
+    print("|---|---|---|---|---|---|")
+    for arch in ARCHS:
+        for shape in SHAPES:
+            b = load(arch, shape)
+            o = load(arch, shape, tag="opt")
+            if not (b and b.get("ok") and o and o.get("ok")):
+                continue
+            rb, ro = b["roofline"], o["roofline"]
+            x = rb["step_s_bound"] / max(ro["step_s_bound"], 1e-12)
+            print(f"| {arch} | {shape} | {fmt_s(rb['step_s_bound'])} | "
+                  f"{fmt_s(ro['step_s_bound'])} | {x:.2f}x | "
+                  f"{rb['dominant']}->{ro['dominant']} |")
+
+
+if __name__ == "__main__":
+    print("## Baseline roofline (single-pod 16x16)\n")
+    roofline_table()
+    print("\n## Dry-run status + memory\n")
+    dryrun_table()
+    print("\n## Optimized (head_aware+constrain_tokens+serve_tp+cache_seq)\n")
+    opt_delta_table()

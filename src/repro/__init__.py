@@ -1,0 +1,9 @@
+"""repro: FastMoE (He et al., 2021) as a TPU-native JAX framework.
+
+Public API re-exports; see README.md for the tour.
+"""
+__version__ = "0.1.0"
+
+from repro.configs import ARCHS, ASSIGNED, INPUT_SHAPES, get_config, reduced  # noqa: F401
+from repro.core.fmoe import DistConfig, fmoe_apply, fmoe_init  # noqa: F401
+from repro.core.fmoefy import fmoefy  # noqa: F401

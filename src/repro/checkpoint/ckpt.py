@@ -1,0 +1,88 @@
+"""Sharding-aware checkpointing (paper §6 lists MoE save/load as future work).
+
+Layout: one ``.npz``-style directory per step with a JSON manifest mapping
+flat param paths -> file names + dtypes + shapes.  Expert-parallel params are
+gathered to host before save (addressable shards concatenated), so a
+checkpoint written on any mesh restores on any other mesh — the property
+FastMoE's tag system makes hard and sharding-by-spec makes trivial.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any, prefix: str = "") -> dict:
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)) and not hasattr(tree, "_fields"):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    elif hasattr(tree, "_fields"):  # NamedTuple
+        for k in tree._fields:
+            out.update(_flatten(getattr(tree, k), f"{prefix}{k}/"))
+    else:
+        out[prefix[:-1]] = tree
+    return out
+
+
+def save(path: str, tree: Any, *, step: int | None = None) -> None:
+    os.makedirs(path, exist_ok=True)
+    flat = _flatten(tree)
+    manifest = {"step": step, "params": {}}
+    for i, (key, val) in enumerate(flat.items()):
+        arr = np.asarray(jax.device_get(val))
+        dtype = str(arr.dtype)
+        if dtype == "bfloat16":  # np.save can't serialize ml_dtypes
+            arr = arr.astype(np.float32)
+        fname = f"arr_{i:05d}.npy"
+        np.save(os.path.join(path, fname), arr)
+        manifest["params"][key] = {"file": fname, "dtype": dtype,
+                                   "shape": list(arr.shape)}
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def restore(path: str, like: Any) -> Any:
+    """Restore into the structure of ``like`` (shapes/dtypes validated)."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    flat_like = _flatten(like)
+    missing = set(flat_like) - set(manifest["params"])
+    extra = set(manifest["params"]) - set(flat_like)
+    if missing or extra:
+        raise ValueError(f"checkpoint mismatch: missing={sorted(missing)[:5]} "
+                         f"extra={sorted(extra)[:5]}")
+    loaded = {}
+    for key, meta in manifest["params"].items():
+        arr = np.load(os.path.join(path, meta["file"]))
+        want = flat_like[key]
+        if tuple(arr.shape) != tuple(want.shape):
+            raise ValueError(f"{key}: shape {arr.shape} != {tuple(want.shape)}")
+        loaded[key] = arr.astype(want.dtype)
+    return _unflatten_like(like, loaded, "")
+
+
+def _unflatten_like(like: Any, flat: dict, prefix: str) -> Any:
+    if isinstance(like, dict):
+        return {k: _unflatten_like(like[k], flat, f"{prefix}{k}/") for k in like}
+    if hasattr(like, "_fields"):
+        return type(like)(*(_unflatten_like(getattr(like, k), flat, f"{prefix}{k}/")
+                            for k in like._fields))
+    if isinstance(like, (list, tuple)):
+        return type(like)(_unflatten_like(v, flat, f"{prefix}{i}/")
+                          for i, v in enumerate(like))
+    return flat[prefix[:-1]]
+
+
+def latest_step(root: str) -> str | None:
+    if not os.path.isdir(root):
+        return None
+    steps = sorted(d for d in os.listdir(root) if d.startswith("step_"))
+    return os.path.join(root, steps[-1]) if steps else None

@@ -1,0 +1,16 @@
+"""The paper's primary contribution: the FastMoE system in JAX.
+
+gate      — top-k / noisy-topk / expert-choice gating (§2.1, §3.1)
+dispatch  — scatter/gather token reordering, capacity + ragged (§4, Fig 4)
+fmoe      — the FMoE layer; local + distributed (a2a / psum) paths (§3)
+comm      — collective helpers incl. hierarchical a2a (§3.2, Fig 2)
+sync      — world/dp/none gradient-sync tags as sharding rules (§3.2)
+balance   — load-balance losses + metrics (§6 future work)
+monitor   — host-side load monitor + expert placement (§6 future work)
+fmoefy    — the Megatron-plugin config rewrite (Listing 1)
+naive     — the Rau-2019-style baselines the paper beats (§5.2)
+"""
+from repro.core.balance import MoEMetrics  # noqa: F401
+from repro.core.fmoe import DistConfig, dense_ffn, expert_ffn, fmoe_apply, fmoe_init  # noqa: F401
+from repro.core.fmoefy import fmoefy  # noqa: F401
+from repro.core.gate import GateOutput, gate_forward, gate_init  # noqa: F401

@@ -1,0 +1,64 @@
+"""Collective helpers for expert parallelism (paper §3.2 "global data
+exchange") + beyond-paper hierarchical variants for the multi-pod mesh."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def exchange_counts(counts: jax.Array, axis: str) -> jax.Array:
+    """Fig 2 step 1: exchange per-expert token counts over the expert axis.
+
+    counts: (E,) local assignment counts, E = mp * E_local.
+    returns (mp, E_local): incoming token counts per source rank.
+    """
+    mp = jax.lax.axis_size(axis)
+    return jax.lax.all_to_all(counts.reshape(mp, -1), axis, 0, 0, tiled=True)
+
+
+def exchange_tokens(buf: jax.Array, axis: str) -> jax.Array:
+    """Fig 2 step 2: payload all-to-all.  buf (E, C, d) -> (E_local, mp*C, d)."""
+    mp = jax.lax.axis_size(axis)
+    E, C, d = buf.shape
+    buf = buf.reshape(mp, E // mp, C, d)
+    buf = jax.lax.all_to_all(buf, axis, 0, 0, tiled=True)
+    return buf.transpose(1, 0, 2, 3).reshape(E // mp, mp * C, d)
+
+
+def return_tokens(out: jax.Array, axis: str) -> jax.Array:
+    """Inverse of :func:`exchange_tokens`: (E_local, mp*C, d) -> (E, C, d)."""
+    mp = jax.lax.axis_size(axis)
+    E_local, n, d = out.shape
+    C = n // mp
+    out = out.reshape(E_local, mp, C, d).transpose(1, 0, 2, 3)
+    out = jax.lax.all_to_all(out, axis, 0, 0, tiled=True)
+    return out.reshape(E_local * mp, C, d)
+
+
+def hierarchical_all_to_all(buf: jax.Array, inner_axis: str,
+                            outer_axis: str) -> jax.Array:
+    """Beyond-paper: 2-hop all-to-all for multi-pod meshes.
+
+    Cross-pod ICI/DCN links are far slower than intra-pod links, so exchange
+    pod-locally first (aggregating messages destined for the same remote pod)
+    and then do one large cross-pod exchange: (outer, inner, ...) layout.
+
+    buf: (n_outer, n_inner, chunk...) — dim0 indexes destination outer rank,
+    dim1 destination inner rank.
+    """
+    # hop 1: intra-pod exchange over the inner axis (fast links) so each inner
+    # rank holds the traffic of its whole pod destined for one inner-peer slot
+    buf = jax.lax.all_to_all(buf, inner_axis, 1, 1, tiled=True)
+    # hop 2: cross-pod exchange over the outer (slow) axis, fully aggregated
+    buf = jax.lax.all_to_all(buf, outer_axis, 0, 0, tiled=True)
+    return buf
+
+
+def all_to_all_bf16(buf: jax.Array, axis: str, split_axis: int = 0,
+                    concat_axis: int = 0) -> jax.Array:
+    """Beyond-paper: cast payload to bf16 across the wire (halves collective
+    bytes; combine-weight math stays f32)."""
+    orig = buf.dtype
+    out = jax.lax.all_to_all(buf.astype(jnp.bfloat16), axis, split_axis,
+                             concat_axis, tiled=True)
+    return out.astype(orig)

@@ -1,0 +1,169 @@
+"""Token scatter/gather — the paper's §4 reordered computation (Fig 4).
+
+FastMoE's core single-device insight: batch all tokens routed to the same
+expert contiguously (**scatter**), run one big GeMM per expert, then put
+outputs back in original order (**gather**).
+
+Two TPU-native realizations (DESIGN.md §2):
+
+* ``capacity`` — GShard-style static buffers ``(E, C, d)``.  XLA needs static
+  shapes, so FastMoE's runtime-sized recv buffers become a fixed per-expert
+  capacity; overflow tokens are dropped (tracked).  This is the mode that
+  composes with expert-parallel all-to-all.
+* ``ragged`` — expert-sorted token array + group sizes, no drops; feeds the
+  Pallas grouped-GEMM kernel.  Static total size (T*k), ragged within.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+def expert_capacity(num_tokens: int, num_experts: int, top_k: int,
+                    capacity_factor: float, *, multiple: int = 8) -> int:
+    """Static per-expert buffer length C."""
+    c = math.ceil(num_tokens * top_k * capacity_factor / num_experts)
+    return max(multiple, math.ceil(c / multiple) * multiple)
+
+
+# ---------------------------------------------------------------------------
+# Capacity (static-buffer) dispatch
+# ---------------------------------------------------------------------------
+
+
+class CapacityPlan(NamedTuple):
+    """Routing of each (token, slot) pair into the (E, C) buffer grid."""
+
+    expert_ids: jax.Array  # (T, k) int32
+    positions: jax.Array  # (T, k) int32 — row within the expert buffer; ==C if dropped
+    keep: jax.Array  # (T, k) bool
+    load: jax.Array  # (E,) int32 — tokens *assigned* per expert (pre-drop)
+    capacity: int
+
+
+def make_capacity_plan(expert_ids: jax.Array, num_experts: int,
+                       capacity: int) -> CapacityPlan:
+    """Assign buffer positions with slot-major priority (top-1 choices first),
+    matching GShard so lower-k choices survive overflow."""
+    T, k = expert_ids.shape
+    # slot-major flatten: all slot-0 assignments precede slot-1, etc.
+    flat = expert_ids.T.reshape(-1)  # (k*T,)
+    onehot = jax.nn.one_hot(flat, num_experts, dtype=jnp.int32)  # (kT, E)
+    # 0-indexed position of each row within its expert's arrival order
+    pos_in_expert = jnp.cumsum(onehot, axis=0) - onehot
+    pos = jnp.take_along_axis(pos_in_expert, flat[:, None], axis=1)[:, 0]
+    keep = pos < capacity
+    pos = jnp.where(keep, pos, capacity)  # out-of-range rows are dropped by scatter
+    load = onehot.sum(axis=0)
+    # back to token-major (T, k)
+    unflatten = lambda a: a.reshape(k, T).T
+    return CapacityPlan(expert_ids, unflatten(pos), unflatten(keep), load, capacity)
+
+
+def dispatch_capacity(x: jax.Array, plan: CapacityPlan,
+                      num_experts: int) -> jax.Array:
+    """Scatter tokens (T, d) into per-expert buffers (E, C, d)."""
+    T, d = x.shape
+    k = plan.expert_ids.shape[1]
+    buf = jnp.zeros((num_experts, plan.capacity, d), x.dtype)
+    eid = plan.expert_ids.reshape(-1)
+    pos = plan.positions.reshape(-1)
+    rows = jnp.repeat(jnp.arange(T), k)  # token index per (token, slot)
+    # out-of-bounds pos==C rows are dropped (jnp scatter drop semantics)
+    return buf.at[eid, pos].set(x[rows], mode="drop")
+
+
+def combine_capacity(out_buf: jax.Array, plan: CapacityPlan,
+                     combine_weights: jax.Array) -> jax.Array:
+    """Gather expert outputs (E, C, dout) back to token order, weighted-sum over k."""
+    T, k = plan.expert_ids.shape
+    eid = plan.expert_ids.reshape(-1)
+    pos = plan.positions.reshape(-1)
+    gathered = out_buf.at[eid, pos].get(mode="fill", fill_value=0)  # (T*k, dout)
+    gathered = gathered.reshape(T, k, -1)
+    w = (combine_weights * plan.keep).astype(gathered.dtype)
+    return jnp.einsum("tk,tkd->td", w, gathered)
+
+
+# ---------------------------------------------------------------------------
+# Ragged (sorted) dispatch — FastMoE-faithful, no drops
+# ---------------------------------------------------------------------------
+
+
+class RaggedPlan(NamedTuple):
+    sort_idx: jax.Array  # (T*k,) int32 — argsort of flat expert ids
+    group_sizes: jax.Array  # (E,) int32
+    token_rows: jax.Array  # (T*k,) int32 — source token per sorted row
+
+
+def make_ragged_plan(expert_ids: jax.Array, num_experts: int) -> RaggedPlan:
+    T, k = expert_ids.shape
+    flat = expert_ids.reshape(-1)  # token-major
+    sort_idx = jnp.argsort(flat, stable=True).astype(jnp.int32)
+    group_sizes = jnp.bincount(flat, length=num_experts).astype(jnp.int32)
+    token_rows = (sort_idx // k).astype(jnp.int32)
+    return RaggedPlan(sort_idx, group_sizes, token_rows)
+
+
+def dispatch_ragged(x: jax.Array, plan: RaggedPlan) -> jax.Array:
+    """Gather tokens (T, d) into expert-sorted order (T*k, d)."""
+    return x[plan.token_rows]
+
+
+def combine_ragged(y_sorted: jax.Array, plan: RaggedPlan,
+                   combine_weights: jax.Array) -> jax.Array:
+    """Un-sort expert outputs (T*k, dout) and weighted-sum the k slots."""
+    T, k = combine_weights.shape
+    y_flat = jnp.zeros_like(y_sorted).at[plan.sort_idx].set(y_sorted)
+    y = y_flat.reshape(T, k, -1)
+    return jnp.einsum("tk,tkd->td", combine_weights.astype(y.dtype), y)
+
+
+# ---------------------------------------------------------------------------
+# Tile padding for the Pallas grouped GEMM (groups aligned to row tiles)
+# ---------------------------------------------------------------------------
+
+
+class TiledRagged(NamedTuple):
+    x: jax.Array  # (P, d) — sorted rows scattered into tile-aligned slots
+    row_valid: jax.Array  # (P,) bool
+    tile_group: jax.Array  # (P // tile,) int32 — expert id owning each row tile
+    dest: jax.Array  # (T*k,) int32 — tile-aligned slot of each sorted row
+    padded_offsets: jax.Array  # (E,) int32 — start of each expert's padded block
+
+
+def pad_to_tiles(x_sorted: jax.Array, group_sizes: jax.Array, tile: int,
+                 num_experts: int) -> TiledRagged:
+    """Re-lay sorted rows so every expert's block starts on a tile boundary.
+
+    Static output size P = ceil(T*k/tile)*tile + E*tile upper bound (each group
+    padded up to a tile multiple).
+    """
+    n = x_sorted.shape[0]
+    padded_sizes = (group_sizes + tile - 1) // tile * tile
+    padded_offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                                      jnp.cumsum(padded_sizes)[:-1].astype(jnp.int32)])
+    group_starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                                    jnp.cumsum(group_sizes)[:-1].astype(jnp.int32)])
+    P = (n + tile - 1) // tile * tile + num_experts * tile  # static upper bound
+    sorted_eid = jnp.repeat(jnp.arange(num_experts, dtype=jnp.int32),
+                            group_sizes, total_repeat_length=n)
+    within = jnp.arange(n, dtype=jnp.int32) - group_starts[sorted_eid]
+    dest = padded_offsets[sorted_eid] + within
+    x_p = jnp.zeros((P, x_sorted.shape[1]), x_sorted.dtype).at[dest].set(x_sorted)
+    row_valid = jnp.zeros((P,), jnp.bool_).at[dest].set(True)
+    # expert owning each tile: tiles within [padded_offsets[e], +padded_sizes[e])
+    tile_starts = jnp.arange(P // tile, dtype=jnp.int32) * tile
+    tile_group = jnp.clip(
+        jnp.searchsorted(padded_offsets, tile_starts, side="right") - 1,
+        0, num_experts - 1).astype(jnp.int32)
+    return TiledRagged(x_p, row_valid, tile_group, dest.astype(jnp.int32),
+                       padded_offsets)
+
+
+def unpad_tiles(y_padded: jax.Array, tiled: TiledRagged) -> jax.Array:
+    """Inverse of :func:`pad_to_tiles` row layout (back to sorted order)."""
+    return y_padded[tiled.dest]

@@ -1,0 +1,383 @@
+"""The FMoE layer — paper §3 (system design) + §4 (reordered computation).
+
+Functional analogue of FastMoE's ``FMoE`` / ``FMoETransformerMLP``:
+
+* arbitrary expert networks via an overloadable ``expert_fn`` (paper §3.1);
+* scatter → batched per-expert GeMM → gather reordering (paper §4, Fig 4);
+* expert parallelism across workers with explicit all-to-all global data
+  exchange (paper §3.2, Fig 2), realized as ``shard_map`` + ``lax.all_to_all``
+  over the ``model`` mesh axis;
+* a ``psum`` mode for decode-time shapes where tokens cannot be sharded
+  across the expert axis (each rank computes its local experts for all its
+  tokens, partial outputs are psum-combined);
+* load-balance losses + monitoring (paper §6 future work, beyond-paper).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import MoEConfig
+from repro.core import dispatch as D
+from repro.core.balance import MoEMetrics, load_balance_loss, load_metrics, router_z_loss
+from repro.core.gate import gate_forward, gate_init
+
+
+class DistConfig(NamedTuple):
+    """How the MoE layer is distributed over the device mesh.
+
+    mode "a2a" (tokens sharded over the expert axis too -> all-to-all
+    exchange, the paper's §3.2 pattern) is chosen automatically when
+    ``expert_axis`` appears in ``token_axes``; otherwise "psum".
+
+    Beyond-paper options (§Perf):
+      tp_axis — expert-internal tensor parallelism: expert hidden dims stay
+        sharded over this axis and activations psum, instead of FSDP
+        all-gathering the expert weights every layer.
+      constrain_tokens — pin the flat-token sharding for the shared/dense
+        residual FFNs so XLA doesn't replicate the token array when leaving
+        the shard_map region (fixes the SPMD "involuntary rematerialization").
+    """
+
+    mesh: Any
+    token_axes: tuple  # mesh axes sharding the flat token dim
+    # single axis name, or a tuple of axes (e.g. ("pod", "model") for
+    # cross-pod expert parallelism, §Perf multi-pod)
+    expert_axis: Any = "model"
+    tp_axis: Optional[str] = None
+    constrain_tokens: bool = False
+    fsdp_axis: Optional[str] = None  # constrain bf16-cast weights sharded
+    # so the per-layer FSDP gather moves bf16, not the f32 master (§Perf)
+
+    @property
+    def expert_axes(self) -> tuple:
+        return (self.expert_axis if isinstance(self.expert_axis, tuple)
+                else (self.expert_axis,))
+
+    @property
+    def mode(self) -> str:
+        return ("a2a" if all(a in self.token_axes for a in self.expert_axes)
+                else "psum")
+
+    @property
+    def expert_parallelism(self) -> int:
+        n = 1
+        for a in self.expert_axes:
+            n *= self.mesh.shape[a]
+        return n
+
+
+# ---------------------------------------------------------------------------
+# Expert networks (the default expert: a transformer FFN)
+# ---------------------------------------------------------------------------
+
+
+def _ffn_init(rng: jax.Array, num: int, d: int, h: int, act: str, dtype) -> dict:
+    ks = jax.random.split(rng, 3)
+    si, so = d ** -0.5, h ** -0.5
+    shape_i, shape_o = (num, d, h), (num, h, d)
+    if num == 0:
+        shape_i, shape_o = (d, h), (h, d)
+    p = {"wo": (jax.random.normal(ks[2], shape_o) * so).astype(dtype)}
+    if act == "swiglu":
+        p["wi_gate"] = (jax.random.normal(ks[0], shape_i) * si).astype(dtype)
+        p["wi_up"] = (jax.random.normal(ks[1], shape_i) * si).astype(dtype)
+    else:
+        p["wi"] = (jax.random.normal(ks[0], shape_i) * si).astype(dtype)
+    return p
+
+
+def _act(h: jax.Array, act: str) -> jax.Array:
+    if act == "gelu":
+        return jax.nn.gelu(h)
+    if act == "rwkv":  # squared relu (RWKV channel-mix)
+        return jnp.square(jax.nn.relu(h))
+    return jax.nn.silu(h)  # swiglu gate handled by caller
+
+
+def dense_ffn(params: dict, x: jax.Array, act: str) -> jax.Array:
+    """Plain (non-expert) FFN on (..., d)."""
+    if act == "swiglu":
+        h = jax.nn.silu(x @ params["wi_gate"]) * (x @ params["wi_up"])
+    else:
+        h = _act(x @ params["wi"], act)
+    return h @ params["wo"]
+
+
+def expert_ffn(params: dict, xs: jax.Array, act: str) -> jax.Array:
+    """Default ``expert_fn``: batched per-expert FFN on (E, n, d) buffers.
+
+    One einsum per projection = one big GeMM batched over experts — the MXU
+    analogue of FMoELinear's multi-stream concurrent expert execution (C2).
+    """
+    if act == "swiglu":
+        h = jax.nn.silu(jnp.einsum("end,edh->enh", xs, params["wi_gate"]))
+        h = h * jnp.einsum("end,edh->enh", xs, params["wi_up"])
+    else:
+        h = _act(jnp.einsum("end,edh->enh", xs, params["wi"]), act)
+    return jnp.einsum("enh,ehd->end", h, params["wo"])
+
+
+def expert_ffn_pallas(params: dict, xs: jax.Array, act: str) -> jax.Array:
+    """expert_fn backed by the Pallas grouped-GEMM kernel (equal-size groups)."""
+    from repro.kernels import ops  # lazy: keeps core importable without kernels
+
+    E, n, d = xs.shape
+    flat = xs.reshape(E * n, d)
+    sizes = jnp.full((E,), n, jnp.int32)
+    if act == "swiglu":
+        h = jax.nn.silu(ops.grouped_matmul(flat, params["wi_gate"], sizes))
+        h = h * ops.grouped_matmul(flat, params["wi_up"], sizes)
+    else:
+        h = _act(ops.grouped_matmul(flat, params["wi"], sizes), act)
+    return ops.grouped_matmul(h, params["wo"], sizes).reshape(E, n, -1)
+
+
+EXPERT_FNS: dict[str, Callable] = {
+    "einsum": expert_ffn,
+    "pallas": expert_ffn_pallas,
+}
+
+
+# ---------------------------------------------------------------------------
+# Layer init
+# ---------------------------------------------------------------------------
+
+
+def fmoe_init(rng: jax.Array, d_model: int, cfg: MoEConfig, *, act: str = "swiglu",
+              d_ff_dense: int = 0, dtype=jnp.float32) -> dict:
+    """Parameters for one MoE FFN block."""
+    ks = jax.random.split(rng, 4)
+    params = {
+        "router": gate_init(ks[0], d_model, cfg.num_experts, dtype=jnp.float32),
+        "experts": _ffn_init(ks[1], cfg.num_experts, d_model,
+                             cfg.d_expert_hidden, act, dtype),
+    }
+    if cfg.num_shared_experts:
+        params["shared"] = _ffn_init(
+            ks[2], 0, d_model, cfg.num_shared_experts * cfg.d_expert_hidden,
+            act, dtype)
+    if cfg.dense_residual:
+        params["dense"] = _ffn_init(ks[3], 0, d_model, d_ff_dense or cfg.d_expert_hidden,
+                                    act, dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Local (single-worker) forward — paper §4 reordering
+# ---------------------------------------------------------------------------
+
+
+def _moe_local(x: jax.Array, router: dict, experts: dict, cfg: MoEConfig,
+               act: str, expert_fn: Callable, rng=None):
+    T = x.shape[0]
+    g = gate_forward(router, x, cfg, rng=rng)
+    if cfg.dispatch == "ragged":
+        plan = D.make_ragged_plan(g.expert_ids, cfg.num_experts)
+        xs = D.dispatch_ragged(x, plan)  # (T*k, d) expert-sorted
+        # ragged path uses the grouped-GEMM kernel directly (variable groups)
+        from repro.kernels import ops
+        if act == "swiglu":
+            h = jax.nn.silu(ops.grouped_matmul(xs, experts["wi_gate"], plan.group_sizes))
+            h = h * ops.grouped_matmul(xs, experts["wi_up"], plan.group_sizes)
+        else:
+            h = _act(ops.grouped_matmul(xs, experts["wi"], plan.group_sizes), act)
+        ys = ops.grouped_matmul(h, experts["wo"], plan.group_sizes)
+        y = D.combine_ragged(ys, plan, g.combine_weights)
+        load, drop = load_metrics(plan.group_sizes, None, T * cfg.top_k)
+    else:
+        C = D.expert_capacity(T, cfg.num_experts, cfg.top_k, cfg.capacity_factor)
+        plan = D.make_capacity_plan(g.expert_ids, cfg.num_experts, C)
+        buf = D.dispatch_capacity(x, plan, cfg.num_experts)  # scatter (Fig 4)
+        out = expert_fn(experts, buf, act)  # batched per-expert GeMM
+        y = D.combine_capacity(out, plan, g.combine_weights)  # gather
+        load, drop = load_metrics(plan.load, plan.keep, T * cfg.top_k)
+    metrics = MoEMetrics(load_balance_loss(g.probs, g.expert_ids, cfg.num_experts),
+                         router_z_loss(g.logits), load, drop)
+    return y, metrics
+
+
+# ---------------------------------------------------------------------------
+# Distributed forward — paper §3.2 global data exchange
+# ---------------------------------------------------------------------------
+
+
+def _moe_a2a(x, router, experts, extra, cfg: MoEConfig, act, expert_fn,
+             dist: DistConfig):
+    """Tokens sharded over all mesh axes; experts sharded over ``expert_axis``.
+
+    Per-rank: gate -> dispatch into (E, C, d) -> all-to-all over the expert
+    axis -> local experts compute on (E_local, mp*C, d) -> reverse all-to-all
+    -> combine.  The Fig-2 "exchange sizes" step survives as the counts
+    all-to-all feeding the load monitor.
+    """
+    ax = dist.expert_axis
+    mp = dist.expert_parallelism
+    E = cfg.num_experts
+    E_local = E // mp
+    t, d = x.shape
+
+    g = gate_forward(router, x, cfg)
+    C = D.expert_capacity(t, E, cfg.top_k, cfg.capacity_factor)
+    plan = D.make_capacity_plan(g.expert_ids, E, C)
+    buf = D.dispatch_capacity(x, plan, E)  # (E, C, d)
+
+    # ---- global data exchange (Fig 2) ----
+    counts = plan.load.reshape(mp, E_local)
+    incoming = jax.lax.all_to_all(counts, ax, 0, 0, tiled=True)  # (mp, E_local) per-src
+    buf = buf.reshape(mp, E_local, C, d)
+    buf = jax.lax.all_to_all(buf, ax, 0, 0, tiled=True)  # (mp=src, E_local, C, d)
+    buf = buf.transpose(1, 0, 2, 3).reshape(E_local, mp * C, d)
+
+    if dist.tp_axis:
+        # Expert-internal TP: expert hidden dims stay sharded over tp_axis
+        # (no per-layer FSDP weight all-gather / grad reduce-scatter).
+        # Different tp ranks hold different tokens, so gather tokens first
+        # and reduce-scatter the partial outputs back to own shard.
+        buf = jax.lax.all_gather(buf, dist.tp_axis, axis=1, tiled=True)
+        out = expert_fn(experts, buf, act)  # partial over hidden shards
+        out = jax.lax.psum_scatter(out, dist.tp_axis, scatter_dimension=1,
+                                   tiled=True)
+    else:
+        out = expert_fn(experts, buf, act)  # (E_local, mp*C, d)
+
+    out = out.reshape(E_local, mp, C, -1).transpose(1, 0, 2, 3)
+    out = jax.lax.all_to_all(out, ax, 0, 0, tiled=True)  # back to (mp, E_local, C, d)
+    out = out.reshape(E, C, -1)
+    y = D.combine_capacity(out, plan, g.combine_weights)
+
+    # shared-expert / dense-residual FFNs on the LOCAL token shard with
+    # replicated weights — avoids the full-token replication SPMD falls back
+    # to when these cross the shard_map boundary (§Perf fix)
+    for p in extra.values():
+        y = y + dense_ffn(p, x, act)
+
+    # ---- metrics: the Fig-2 counts exchange feeds the load monitor ----
+    axes = tuple(dist.token_axes)
+    other_axes = tuple(a for a in axes if a not in dist.expert_axes)
+    recv_local = incoming.sum(0)  # (E_local,) tokens arriving at my experts
+    load_global = jax.lax.all_gather(recv_local, ax, tiled=True)  # (E,)
+    if other_axes:
+        load_global = jax.lax.psum(load_global, other_axes)
+    load, _ = load_metrics(load_global, None,
+                           jnp.maximum(load_global.sum(), 1))
+    _, drop = load_metrics(plan.load, plan.keep, t * cfg.top_k)
+    metrics = MoEMetrics(
+        jax.lax.pmean(load_balance_loss(g.probs, g.expert_ids, E), axes),
+        jax.lax.pmean(router_z_loss(g.logits), axes),
+        load,
+        jax.lax.pmean(drop, axes),
+    )
+    return y, metrics
+
+
+def _moe_psum(x, router, experts, extra, cfg: MoEConfig, act, expert_fn,
+              dist: DistConfig):
+    """Tokens NOT sharded over the expert axis (decode): every rank gates all
+    its tokens, computes only its local experts, partial outputs psum over the
+    expert axis.  No all-to-all; communication = one psum of (t, d)."""
+    ax = dist.expert_axis
+    mp = dist.expert_parallelism
+    E = cfg.num_experts
+    E_local = E // mp
+    t = x.shape[0]
+
+    g = gate_forward(router, x, cfg)
+    C = D.expert_capacity(t, E, cfg.top_k, cfg.capacity_factor)
+    plan = D.make_capacity_plan(g.expert_ids, E, C)
+    buf = D.dispatch_capacity(x, plan, E)  # (E, C, d)
+    rank = 0  # row-major rank within the (possibly tuple) expert axis group
+    for a in dist.expert_axes:
+        rank = rank * dist.mesh.shape[a] + jax.lax.axis_index(a)
+    buf_local = jax.lax.dynamic_slice_in_dim(buf, rank * E_local, E_local, axis=0)
+    out_local = expert_fn(experts, buf_local, act)  # (E_local, C, d)
+    out = jax.lax.dynamic_update_slice_in_dim(
+        jnp.zeros((E, C, out_local.shape[-1]), out_local.dtype), out_local,
+        rank * E_local, axis=0)
+    y = D.combine_capacity(out, plan, g.combine_weights)
+    y = jax.lax.psum(y, ax)
+    for p in extra.values():  # see _moe_a2a
+        y = y + dense_ffn(p, x, act)
+
+    axes = tuple(dist.token_axes)
+    load, drop = load_metrics(plan.load, plan.keep, t * cfg.top_k)
+    pm = (lambda v: jax.lax.pmean(v, axes)) if axes else (lambda v: v)
+    metrics = MoEMetrics(pm(load_balance_loss(g.probs, g.expert_ids, E)),
+                         pm(router_z_loss(g.logits)), pm(load), pm(drop))
+    return y, metrics
+
+
+# ---------------------------------------------------------------------------
+# Public entry point
+# ---------------------------------------------------------------------------
+
+
+def fmoe_apply(params: dict, x: jax.Array, cfg: MoEConfig, *, act: str = "swiglu",
+               dist: Optional[DistConfig] = None, impl: str = "einsum",
+               rng: Optional[jax.Array] = None):
+    """Apply the MoE FFN to ``x`` of shape (..., d_model).
+
+    Returns ``(y, MoEMetrics)``.  ``impl`` selects the expert_fn ("einsum" |
+    "pallas"); ``dist=None`` runs the single-worker §4 path, otherwise the
+    §3.2 distributed path (mode picked by ``dist``).
+    """
+    expert_fn = EXPERT_FNS[impl]
+    shape = x.shape
+    xf = x.reshape(-1, shape[-1])
+    router, experts = params["router"], params["experts"]
+
+    residual_keys = [k for k in ("shared", "dense") if k in params]
+    if dist is None:
+        y, metrics = _moe_local(xf, router, experts, cfg, act, expert_fn, rng)
+        for k in residual_keys:
+            y = y + dense_ffn(params[k], xf, act)
+    else:
+        local = _moe_a2a if dist.mode == "a2a" else _moe_psum
+        tok_spec = P(dist.token_axes if dist.token_axes else None, None)
+
+        def espec_for(path_w):
+            if dist.tp_axis and dist.mode == "a2a":
+                # hidden dim stays sharded (expert-internal TP, §Perf)
+                if path_w == "wo":
+                    return P(dist.expert_axis, dist.tp_axis, None)
+                return P(dist.expert_axis, None, dist.tp_axis)
+            return P(dist.expert_axis, None, None)
+        espec = {k: espec_for(k) for k in experts}
+
+        if dist.fsdp_axis and not dist.tp_axis:
+            # keep the bf16 cast *sharded* so XLA gathers half the bytes
+            # (otherwise the convert is hoisted after the f32-master gather)
+            from jax.sharding import NamedSharding
+            fspec = {k: (P(dist.expert_axis, dist.fsdp_axis, None) if k == "wo"
+                         else P(dist.expert_axis, None, dist.fsdp_axis))
+                     for k in experts}
+            experts = {k: jax.lax.with_sharding_constraint(
+                v, NamedSharding(dist.mesh, fspec[k]))
+                for k, v in experts.items()}
+
+        if dist.constrain_tokens:
+            # shared/dense residual FFNs run INSIDE shard_map on local tokens
+            # with replicated weights (§Perf fix — see _moe_a2a)
+            extra = {k: params[k] for k in residual_keys}
+            residual_keys = []
+        else:
+            extra = {}
+        xspec = {k: jax.tree.map(lambda _: P(None, None), v)
+                 for k, v in extra.items()}
+        fn = functools.partial(local, cfg=cfg, act=act, expert_fn=expert_fn, dist=dist)
+        mspec = MoEMetrics(P(), P(), P(None), P())
+        y, metrics = jax.shard_map(
+            fn, mesh=dist.mesh,
+            in_specs=(tok_spec, jax.tree.map(lambda _: P(None, None), router),
+                      espec, xspec),
+            out_specs=(tok_spec, mspec),
+            check_vma=False,
+        )(xf, router, experts, extra)
+        # paper-faithful baseline: residuals outside shard_map (auto-sharded)
+        for k in residual_keys:
+            y = y + dense_ffn(params[k], xf, act)
+    return y.reshape(shape), metrics

@@ -1,0 +1,121 @@
+"""Top-k gate networks (paper §2.1, Algorithm 1).
+
+The gate scores every expert for every token and selects the top-k.  FastMoE
+lets users swap the gate; we support the two standard score policies and keep
+the router in float32 (routing decisions are precision-sensitive).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+
+
+class GateOutput(NamedTuple):
+    """Routing decision for a flat batch of T tokens."""
+
+    expert_ids: jax.Array  # (T, k) int32 — selected expert per slot
+    combine_weights: jax.Array  # (T, k) float32 — mixing weight per slot
+    probs: jax.Array  # (T, E) float32 — full router distribution (for aux losses)
+    logits: jax.Array  # (T, E) float32 (for z-loss)
+
+
+def gate_init(rng: jax.Array, d_model: int, num_experts: int,
+              dtype=jnp.float32) -> dict:
+    scale = d_model ** -0.5
+    return {"w": (jax.random.normal(rng, (d_model, num_experts)) * scale).astype(dtype)}
+
+
+def gate_forward(params: dict, x: jax.Array, cfg: MoEConfig, *,
+                 rng: jax.Array | None = None) -> GateOutput:
+    """Score and select experts for flat tokens ``x`` of shape (T, d)."""
+    router_dtype = jnp.dtype(cfg.router_dtype)
+    logits = jnp.asarray(x, router_dtype) @ jnp.asarray(params["w"], router_dtype)
+    if rng is not None:  # optional exploration jitter (train-time)
+        logits = logits + jax.random.normal(rng, logits.shape, router_dtype) * 0.01
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    k = cfg.top_k
+    if cfg.gate_policy == "softmax_topk":
+        weights, expert_ids = jax.lax.top_k(probs, k)
+    elif cfg.gate_policy == "topk_softmax":
+        top_logits, expert_ids = jax.lax.top_k(logits, k)
+        weights = jax.nn.softmax(top_logits, axis=-1)
+    else:
+        raise ValueError(f"unknown gate_policy {cfg.gate_policy!r}")
+
+    if cfg.renormalize:
+        weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+    return GateOutput(expert_ids.astype(jnp.int32), weights.astype(router_dtype),
+                      probs, logits)
+
+
+# ---------------------------------------------------------------------------
+# Gate variants (paper §3.1: the gate is user-swappable)
+# ---------------------------------------------------------------------------
+
+
+def noisy_topk_init(rng: jax.Array, d_model: int, num_experts: int) -> dict:
+    """Shazeer et al. 2017 noisy top-k gate — the original gate of the MoE
+    line FastMoE implements.  Learned per-expert noise scale."""
+    k1, k2 = jax.random.split(rng)
+    scale = d_model ** -0.5
+    return {"w": jax.random.normal(k1, (d_model, num_experts)) * scale,
+            "w_noise": jax.random.normal(k2, (d_model, num_experts)) * scale * 0.1}
+
+
+def noisy_topk_forward(params: dict, x: jax.Array, cfg: MoEConfig, *,
+                       rng: jax.Array | None = None) -> GateOutput:
+    """H(x) = x.W + eps * softplus(x.W_noise); top-k over H (train-time noise
+    encourages exploration; deterministic when rng is None)."""
+    xf = jnp.asarray(x, jnp.float32)
+    clean = xf @ jnp.asarray(params["w"], jnp.float32)
+    logits = clean
+    if rng is not None:
+        noise_scale = jax.nn.softplus(
+            xf @ jnp.asarray(params["w_noise"], jnp.float32))
+        logits = clean + jax.random.normal(rng, clean.shape) * noise_scale
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_logits, expert_ids = jax.lax.top_k(logits, cfg.top_k)
+    weights = jax.nn.softmax(top_logits, axis=-1)
+    return GateOutput(expert_ids.astype(jnp.int32), weights, probs, logits)
+
+
+def expert_choice_forward(params: dict, x: jax.Array, cfg: MoEConfig, *,
+                          capacity: int) -> tuple:
+    """Expert-choice routing (Zhou et al. 2022, beyond-paper): each EXPERT
+    picks its top-``capacity`` tokens instead of tokens picking experts —
+    perfectly load-balanced by construction (no aux loss, no drops beyond
+    the capacity itself).
+
+    Returns (token_idx (E, C) int32, weights (E, C) f32, probs (T, E)).
+    """
+    logits = jnp.asarray(x, jnp.float32) @ jnp.asarray(params["w"], jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    # scores transposed: experts choose tokens
+    weights, token_idx = jax.lax.top_k(probs.T, capacity)  # (E, C)
+    return token_idx.astype(jnp.int32), weights, probs
+
+
+def expert_choice_moe(params: dict, x: jax.Array, cfg: MoEConfig, *,
+                      act: str = "swiglu", capacity_factor: float = 2.0):
+    """Full expert-choice MoE layer (gather by expert choice, FFN, scatter-add
+    back weighted).  Single-worker reference implementation."""
+    from repro.core.fmoe import expert_ffn
+
+    shape = x.shape
+    xf = x.reshape(-1, shape[-1])
+    T = xf.shape[0]
+    E = cfg.num_experts
+    C = max(1, int(T * capacity_factor / E))
+    token_idx, weights, probs = expert_choice_forward(
+        params["router"], xf, cfg, capacity=C)
+    bufs = xf[token_idx]  # (E, C, d)
+    out = expert_ffn(params["experts"], bufs, act)
+    y = jnp.zeros_like(xf)
+    y = y.at[token_idx.reshape(-1)].add(
+        (out * weights[..., None].astype(out.dtype)).reshape(E * C, -1))
+    return y.reshape(shape), probs

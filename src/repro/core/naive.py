@@ -1,0 +1,59 @@
+"""Naive MoE baselines the paper compares against (§5.2, Fig 5).
+
+The Rau (2019) baseline computes experts without batching tokens per expert.
+Two JAX renditions of that inefficiency (both numerically equivalent to
+:func:`repro.core.fmoe.fmoe_apply`):
+
+* ``loop_masked`` — python loop over experts; every expert processes ALL
+  tokens densely, outputs masked by the gate.  O(E) full-batch GeMMs.
+* ``per_sample`` — vmap over tokens; each token gathers its k experts'
+  weights and does GeMV-shaped matvecs (the degenerate GeMM of paper Fig 3).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.core.fmoe import _act
+from repro.core.gate import gate_forward
+
+
+def _one_expert(experts: dict, e, x: jax.Array, act: str) -> jax.Array:
+    """Apply expert ``e`` (static or traced index) to tokens (..., d)."""
+    take = lambda w: w[e]
+    if act == "swiglu":
+        h = jax.nn.silu(x @ take(experts["wi_gate"])) * (x @ take(experts["wi_up"]))
+    else:
+        h = _act(x @ take(experts["wi"]), act)
+    return h @ take(experts["wo"])
+
+
+def moe_loop_masked(params: dict, x: jax.Array, cfg: MoEConfig, *,
+                    act: str = "swiglu") -> jax.Array:
+    """Every expert computes every token; gate mask zeroes the rest."""
+    shape = x.shape
+    xf = x.reshape(-1, shape[-1])
+    g = gate_forward(params["router"], xf, cfg)
+    y = jnp.zeros_like(xf)
+    for e in range(cfg.num_experts):
+        out = _one_expert(params["experts"], e, xf, act)
+        w = jnp.where(g.expert_ids == e, g.combine_weights, 0.0).sum(-1)
+        y = y + out * w[:, None].astype(out.dtype)
+    return y.reshape(shape)
+
+
+def moe_per_sample(params: dict, x: jax.Array, cfg: MoEConfig, *,
+                   act: str = "swiglu") -> jax.Array:
+    """Per-token expert gather + GeMV — the batch-size-1 regime of Fig 3."""
+    shape = x.shape
+    xf = x.reshape(-1, shape[-1])
+    g = gate_forward(params["router"], xf, cfg)
+
+    def token_fn(tok, eids, ws):
+        def slot(eid, w):
+            return w.astype(tok.dtype) * _one_expert(params["experts"], eid, tok, act)
+        return jax.vmap(slot)(eids, ws).sum(0)
+
+    y = jax.vmap(token_fn)(xf, g.expert_ids, g.combine_weights)
+    return y.reshape(shape)

@@ -1,0 +1,69 @@
+"""Heterogeneity-aware gradient synchronization (paper §3.2).
+
+FastMoE tags every parameter ``world`` / ``data parallel`` / ``none`` and runs
+a custom DDP that all-reduces each gradient within the right group.  Under
+pjit, gradient synchronization *is* the sharding spec: a parameter replicated
+over a mesh axis gets its gradient all-reduced over that axis automatically
+by the SPMD partitioner.  This module makes the correspondence explicit — it
+derives the FastMoE tag from a parameter's PartitionSpec and verifies the
+rule table realizes the paper's semantics (tested in tests/test_sync.py).
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+from jax.sharding import PartitionSpec
+
+
+def spec_axes(spec: PartitionSpec) -> set:
+    """Mesh axes a PartitionSpec shards over."""
+    axes: set = set()
+    for entry in spec:
+        if entry is None:
+            continue
+        if isinstance(entry, (tuple, list)):
+            axes.update(entry)
+        else:
+            axes.add(entry)
+    return axes
+
+
+def grad_sync_axes(spec: PartitionSpec, mesh_axes: Sequence[str]) -> tuple:
+    """Mesh axes over which this parameter's gradient is implicitly
+    all-reduced by XLA = the axes the parameter is *replicated* over."""
+    used = spec_axes(spec)
+    return tuple(a for a in mesh_axes if a not in used)
+
+
+def fastmoe_tag(path: str, spec: PartitionSpec, mesh_axes: Sequence[str], *,
+                expert_axis: str = "model",
+                data_axes: tuple = ("pod", "data")) -> str:
+    """Map a parameter to the paper's sync tag.
+
+    * ``world``  — replicated on every axis (gate/router, norms): gradient
+      all-reduced across all workers.
+    * ``dp``     — sharded over the model axis (TP attention / FFN shards):
+      synchronized only within the data-parallel group orthogonal to model.
+    * ``none``   — unique expert parameters: sharded over the expert axis on
+      their expert dimension; no synchronization across expert peers.  (On a
+      mesh with a data axis the expert is still replicated across data
+      replicas, so its gradient syncs over ``data`` — the paper's pure
+      model-parallel deployment is the data=1 special case.)
+    """
+    used = spec_axes(spec)
+    model_like = used - set(data_axes)
+    if not model_like:
+        return "world"
+    is_expert = ("expert" in path) or ("router" not in path and path.startswith("moe"))
+    if expert_axis in model_like and is_expert:
+        return "none"
+    return "dp"
+
+
+def sync_report(specs: dict, mesh_axes: Sequence[str]) -> dict:
+    """{param_path: (tag, sync_axes)} for the whole param tree (flat paths)."""
+    report = {}
+    for path, spec in specs.items():
+        report[path] = (fastmoe_tag(path, spec, mesh_axes),
+                        grad_sync_axes(spec, mesh_axes))
+    return report

@@ -1,0 +1,3 @@
+from repro.data.synthetic import ByteTokenizer, SyntheticLM
+
+__all__ = ["ByteTokenizer", "SyntheticLM"]

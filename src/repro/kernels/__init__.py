@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the compute hot-spots the paper optimizes.
+
+grouped_gemm    — MegaBlocks-style expert-batched GEMM (FMoELinear, C2)
+token_shuffle   — scatter/gather row movers (the paper's §4 CUDA kernels)
+flash_attention — fused attention (the §Perf-identified memory fix)
+ops             — jit'd public wrappers (custom_vjp grouped_matmul, ...)
+ref             — pure-jnp oracles asserted against in tests
+"""

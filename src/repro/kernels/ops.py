@@ -1,0 +1,99 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+``grouped_matmul`` is differentiable (custom_vjp): both the forward GEMM and
+dX reuse the Pallas kernel; dW transposes through ``jax.lax.ragged_dot`` (the
+XLA grouped-GEMM primitive) since its reduction layout is rows-major.
+
+On non-TPU backends the kernels run in interpret mode (CPU validation path);
+``impl="xla"`` routes everything through ``ragged_dot`` instead.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dispatch import pad_to_tiles
+from repro.kernels import grouped_gemm as gg
+from repro.kernels import token_shuffle as ts
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# grouped_matmul
+# ---------------------------------------------------------------------------
+
+
+def _gm_pallas(x: jax.Array, w: jax.Array, group_sizes: jax.Array,
+               bm: int) -> jax.Array:
+    """Pad groups to row tiles, run the kernel, un-pad."""
+    E = w.shape[0]
+    tiled = pad_to_tiles(x, group_sizes, bm, E)
+    y_p = gg.grouped_gemm_tiled(tiled.x, w, tiled.tile_group, bm=bm,
+                                interpret=_interpret())
+    return y_p[tiled.dest]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def grouped_matmul(x: jax.Array, w: jax.Array, group_sizes: jax.Array,
+                   impl: str = "pallas", bm: int = gg.DEFAULT_BM) -> jax.Array:
+    """y[i] = x[i] @ w[g(i)] for rows sorted by group.
+
+    x (M, K); w (E, K, N); group_sizes (E,) ints summing to <= M (trailing
+    rows beyond the sum get group E-1's weights; callers keep M == sum).
+    """
+    if impl == "xla":
+        return jax.lax.ragged_dot(x, w, group_sizes.astype(jnp.int32))
+    return _gm_pallas(x, w, group_sizes, bm)
+
+
+def _gm_fwd(x, w, group_sizes, impl, bm):
+    return grouped_matmul(x, w, group_sizes, impl, bm), (x, w, group_sizes)
+
+
+def _gm_bwd(impl, bm, res, dy):
+    x, w, group_sizes = res
+    # dX: same grouped GEMM against w^T (kernel-served)
+    dx = grouped_matmul(dy, w.swapaxes(1, 2), group_sizes, impl, bm)
+    # dW[e] = x_e^T @ dy_e: transpose of ragged_dot w.r.t. rhs
+    _, vjp_fn = jax.vjp(
+        lambda ww: jax.lax.ragged_dot(x, ww, group_sizes.astype(jnp.int32)), w)
+    (dw,) = vjp_fn(dy.astype(w.dtype))
+    return dx.astype(x.dtype), dw, None
+
+
+grouped_matmul.defvjp(_gm_fwd, _gm_bwd)
+
+
+# ---------------------------------------------------------------------------
+# token shuffle
+# ---------------------------------------------------------------------------
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    window: jax.Array | int, causal: bool = True,
+                    bq: int | None = None, bk: int | None = None) -> jax.Array:
+    """Fused flash attention (Pallas TPU kernel; interpret-mode on CPU)."""
+    from repro.kernels import flash_attention as fa
+
+    kw = {}
+    if bq:
+        kw["bq"] = bq
+    if bk:
+        kw["bk"] = bk
+    return fa.flash_attention(q, k, v, window=window, causal=causal,
+                              interpret=_interpret(), **kw)
+
+
+def gather_tokens(x: jax.Array, idx: jax.Array) -> jax.Array:
+    """Expert-sort scatter (paper Fig 4): y[i] = x[idx[i]]."""
+    return ts.gather_rows(x, idx.astype(jnp.int32), interpret=_interpret())
+
+
+def combine_tokens(src: jax.Array, idx: jax.Array, w: jax.Array) -> jax.Array:
+    """Gate-weighted un-shuffle (paper Fig 4 gather)."""
+    return ts.combine_topk(src, idx.astype(jnp.int32), w, interpret=_interpret())

@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for every Pallas kernel (asserted against in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def grouped_matmul_ref(x: jax.Array, w: jax.Array, group_sizes: jax.Array) -> jax.Array:
+    """y[i] = x[i] @ w[g(i)], rows sorted by group.  O(E) masked matmuls."""
+    E = w.shape[0]
+    M = x.shape[0]
+    ends = jnp.cumsum(group_sizes)
+    starts = ends - group_sizes
+    rows = jnp.arange(M)
+    y = jnp.zeros((M, w.shape[2]), jnp.promote_types(x.dtype, w.dtype))
+    for e in range(E):
+        mask = ((rows >= starts[e]) & (rows < ends[e]))[:, None]
+        y = y + jnp.where(mask, x @ w[e], 0.0)
+    return y.astype(x.dtype)
+
+
+def flash_attention_ref(q, k, v, *, window, causal=True):
+    """Naive softmax oracle for the flash kernel (f32 throughout)."""
+    B, Sq, H, dk = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, dk).astype(jnp.float32)
+    s = jnp.einsum("bskgd,bckd->bskgc", qg, k.astype(jnp.float32)) * dk ** -0.5
+    i = jnp.arange(Sq)[:, None]
+    j = jnp.arange(Skv)[None, :]
+    mask = (i - j) < window
+    if causal:
+        mask &= (i - j) >= 0
+    s = jnp.where(mask[None, :, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bskgc,bckd->bskgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, -1).astype(q.dtype)
+
+
+def gather_rows_ref(x: jax.Array, idx: jax.Array) -> jax.Array:
+    return x[idx]
+
+
+def combine_topk_ref(src: jax.Array, idx: jax.Array, w: jax.Array) -> jax.Array:
+    gathered = src[idx]  # (T, k, d)
+    return jnp.einsum("tk,tkd->td", w.astype(jnp.float32),
+                      gathered.astype(jnp.float32)).astype(src.dtype)

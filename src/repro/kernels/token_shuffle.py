@@ -1,0 +1,84 @@
+"""Pallas token scatter/gather kernels — the paper's §4 dedicated memory-
+movement CUDA kernels, re-tiled for TPU.
+
+``gather_rows``  : y[i] = x[idx[i]]            (the *scatter* step of Fig 4 —
+                   tokens gathered into expert-sorted order)
+``combine_topk`` : y[t] = sum_k w[t,k] * src[idx[t,k]]   (the *gather* step —
+                   expert outputs back in original order, mixed by the gate)
+
+Row indices are scalar-prefetched so each grid step's BlockSpec index_map
+resolves the source row before the block DMA is issued — the TPU analogue of
+coalesced global-memory indexing.  Blocks are (1, d_model): one token row per
+grid step, lane dim = d_model (>=128 for all assigned archs).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gather_kernel(idx_ref, x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gather_rows(x: jax.Array, idx: jax.Array, *, interpret: bool = False) -> jax.Array:
+    """y[i] = x[idx[i]] ; x (M, d), idx (T,) int32 -> (T, d)."""
+    T = idx.shape[0]
+    d = x.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(T,),
+        in_specs=[pl.BlockSpec((1, d), lambda i, idx: (idx[i], 0))],
+        out_specs=pl.BlockSpec((1, d), lambda i, idx: (i, 0)),
+    )
+    return pl.pallas_call(
+        _gather_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((T, d), x.dtype),
+        interpret=interpret,
+    )(idx, x)
+
+
+def _combine_kernel(idx_ref, w_ref, *refs, k: int):
+    srcs, o_ref = refs[:k], refs[k]
+    acc = jnp.zeros(o_ref.shape, jnp.float32)
+    for slot in range(k):
+        acc += w_ref[0, slot].astype(jnp.float32) * srcs[slot][...].astype(jnp.float32)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def combine_topk(src: jax.Array, idx: jax.Array, w: jax.Array, *,
+                 interpret: bool = False) -> jax.Array:
+    """y[t] = sum_k w[t, k] * src[idx[t, k]].
+
+    src (M, d) expert outputs; idx (T, k) int32 rows; w (T, k) weights.
+    The k source rows of one output row arrive as k separate (1, d) blocks,
+    each with its own scalar-prefetched index map.
+    """
+    T, k = idx.shape
+    d = src.shape[1]
+    in_specs = [
+        pl.BlockSpec((1, k), lambda i, idx: (i, 0)),  # weights row
+    ] + [
+        pl.BlockSpec((1, d), functools.partial(
+            lambda i, idx, slot=None: (idx[i, slot], 0), slot=s))
+        for s in range(k)
+    ]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(T,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, d), lambda i, idx: (i, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_combine_kernel, k=k),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((T, d), src.dtype),
+        interpret=interpret,
+    )(idx, w, *([src] * k))

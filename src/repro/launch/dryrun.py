@@ -1,0 +1,293 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: prove every (arch x input-shape x mesh) combination
+lowers, compiles, and fits — without hardware.
+
+For each combination this driver builds the production mesh (16x16 single
+pod, 2x16x16 multi-pod), constructs ShapeDtypeStruct stand-ins for every
+input (no allocation), lowers + compiles the right step function
+(train_step / prefill forward / serve decode_step), and records
+memory_analysis + cost_analysis + the HLO collective schedule for
+EXPERIMENTS.md §Dry-run and §Roofline.
+
+NOTE: the XLA_FLAGS line above MUST run before any other import — jax locks
+the device count at first init.
+"""
+import argparse
+import functools
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ASSIGNED, INPUT_SHAPES, get_config
+from repro.configs.base import InputShape, ModelConfig
+from repro.launch import roofline as R
+from repro.launch.mesh import make_production_mesh
+from repro.launch.serve import cache_len_for, jit_serve_step, make_serve_step
+from repro.launch.sharding import batch_spec, cache_specs, tree_shardings
+from repro.launch.train import jit_train_step, moe_dist
+from repro.models import lm
+from repro.optim import AdamW
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    """ShapeDtypeStruct stand-ins for the data inputs of this shape."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.mode in ("train", "prefill"):
+        specs = {"tokens": jax.ShapeDtypeStruct((B, S), I32)}
+        if cfg.frontend == "vision":
+            specs["patches"] = jax.ShapeDtypeStruct(
+                (B, cfg.num_patches, cfg.d_model), jnp.dtype(cfg.dtype))
+        if cfg.family == "audio":
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.encoder.num_frames, cfg.d_model), jnp.dtype(cfg.dtype))
+        return specs
+    return {"tokens": jax.ShapeDtypeStruct((B, 1), I32),
+            "pos": jax.ShapeDtypeStruct((), I32)}
+
+
+def _sds(tree):
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def lower_combo(cfg: ModelConfig, shape: InputShape, mesh, opts=None):
+    """Returns (lowered, n_devices).  Picks the step function by shape.mode."""
+    rng = jax.random.PRNGKey(0)
+    rcfg = cfg if (opts or {}).get("head_aware") else None
+    params_shape = jax.eval_shape(lambda: lm.init_params(rng, cfg))
+    pshard = tree_shardings(params_shape, mesh, cfg=rcfg)
+    data = input_specs(cfg, shape)
+    B, S = shape.global_batch, shape.seq_len
+
+    if shape.mode == "train":
+        opt = AdamW()
+        jitted, pshard, oshard = jit_train_step(cfg, opt, mesh, B, S, opts=opts)
+        opt_shape = jax.eval_shape(opt.init, params_shape)
+        return jitted.lower(_sds(params_shape), _sds(opt_shape), data,
+                            jax.ShapeDtypeStruct((), I32))
+
+    if shape.mode == "prefill":
+        dist = moe_dist(cfg, mesh, B * S, opts=opts)
+
+        def prefill(params, batch):
+            logits, _ = lm.forward(params, cfg, batch["tokens"],
+                                   frames=batch.get("frames"),
+                                   patches=batch.get("patches"), dist=dist)
+            return logits
+        bshard = {k: jax.sharding.NamedSharding(
+            mesh, batch_spec(B, mesh, len(v.shape) - 1)) for k, v in data.items()}
+        jitted = jax.jit(prefill, in_shardings=(pshard, bshard))
+        return jitted.lower(_sds(params_shape), data)
+
+    # decode
+    jitted, cache_shape = jit_serve_step(cfg, mesh, B, S, opts=opts)
+    return jitted.lower(_sds(params_shape), data["tokens"], data["pos"],
+                        _sds(cache_shape))
+
+
+def lower_layer_probe(cfg: ModelConfig, shape: InputShape, mesh, opts=None):
+    """Single-layer probe (the "B program" of the roofline decomposition).
+
+    XLA's cost analysis counts a while-loop body ONCE regardless of trip
+    count, so the full program (scan over L layers) under-reports per-layer
+    FLOPs/bytes/collectives by ~L.  We therefore lower one layer standalone —
+    with the kv-chunk scan disabled so attention is fully visible — and
+    combine: total = full_program + (L-1) * layer_probe (see roofline.py).
+    Train mode probes grad-of-remat(layer) so backward + recompute count.
+    """
+    import repro.models.attention as A
+    import repro.models.blocks as B
+    from repro.core.balance import MoEMetrics
+    from repro.models.lm import _cast_params
+
+    opts = dict(opts or {})
+    mp = mesh.shape["model"] if "model" in mesh.axis_names else 1
+    if shape.mode == "decode" and shape.global_batch < mp and cfg.moe is None:
+        opts.pop("serve_tp", None)  # mirror jit_serve_step's tiny-batch policy
+        opts.pop("head_aware", None)
+    rngp = jax.random.PRNGKey(0)
+    layer_shape = jax.eval_shape(
+        lambda: B.layer_init(rngp, cfg, cross=cfg.family == "audio"))
+    from repro.launch.sharding import tree_specs
+    from repro.launch.sharding import option_overrides
+    pmode = "serve" if (shape.mode == "decode" and opts.get("serve_tp")) else "train"
+    with option_overrides(opts, mesh):
+        pspec = tree_specs(layer_shape, mesh, pmode,
+                           cfg if opts.get("head_aware") else None)
+    pshard = jax.tree.map(lambda s: jax.sharding.NamedSharding(mesh, s), pspec,
+                          is_leaf=lambda s: isinstance(s, jax.sharding.PartitionSpec))
+    Bsz, S = shape.global_batch, shape.seq_len
+    dtype = jnp.dtype(cfg.dtype)
+    window = B.FULL_WINDOW if (cfg.attention is None or
+                               cfg.attention.sliding_window is None) \
+        else cfg.attention.sliding_window
+
+    if shape.mode in ("train", "prefill"):
+        dist = moe_dist(cfg, mesh, Bsz * S, opts=opts)
+        x_sds = jax.ShapeDtypeStruct((Bsz, S, cfg.d_model), dtype)
+        xshard = jax.sharding.NamedSharding(mesh, batch_spec(Bsz, mesh, 2))
+
+        def fwd(p_l, x):
+            state0 = B.mixer_state(cfg, Bsz, dtype)
+            y, m = B.layer_apply_seq(_cast_params(p_l, dtype), cfg, x,
+                                     window=window, dist=dist,
+                                     mixer_state=state0)
+            loss = y.astype(jnp.float32).sum()
+            if m is not None:
+                loss = loss + m.aux_loss
+            return loss
+
+        if shape.mode == "train":
+            inner = fwd if opts.get("no_remat") else jax.remat(fwd)
+            f = jax.value_and_grad(inner, argnums=(0, 1))
+            # pin cotangent shardings to the primal layouts — otherwise SPMD
+            # replicates the dx output (a full-batch f32 all-reduce that the
+            # real scanned program never performs)
+            rep = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+            out_shardings = (rep, (pshard, xshard))
+        else:
+            f = fwd
+            out_shardings = None
+        jitted = jax.jit(f, in_shardings=(pshard, xshard),
+                         out_shardings=out_shardings)
+        with A.chunk_override(S):
+            return jitted.lower(_sds(layer_shape), x_sds)
+
+    # decode probe
+    dist = moe_dist(cfg, mesh, Bsz, opts=opts)
+    clen = cache_len_for(cfg, S)
+    cache_shape = jax.eval_shape(
+        lambda: B.layer_cache(cfg, Bsz, clen, dtype))
+    cshard = jax.tree.map(
+        lambda s: jax.sharding.NamedSharding(mesh, s),
+        cache_specs(cache_shape, mesh, Bsz,
+                    seq_shard=bool(opts.get("cache_seq"))),
+        is_leaf=lambda s: isinstance(s, jax.sharding.PartitionSpec))
+    x_sds = jax.ShapeDtypeStruct((Bsz, 1, cfg.d_model), dtype)
+    xshard = jax.sharding.NamedSharding(mesh, batch_spec(Bsz, mesh, 2))
+    w_eff = min(window, clen)
+
+    def dec(p_l, x, pos, cache):
+        y, new_cache, _ = B.layer_apply_decode(
+            _cast_params(p_l, dtype), cfg, x, cache, pos, window=w_eff,
+            dist=dist)
+        return y, new_cache
+
+    rep = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+    jitted = jax.jit(dec, in_shardings=(pshard, xshard, rep, cshard))
+    return jitted.lower(_sds(layer_shape), x_sds,
+                        jax.ShapeDtypeStruct((), I32), _sds(cache_shape))
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool,
+            out_dir: str | None = None, opts: dict | None = None,
+            tag: str = "") -> dict:
+    import dataclasses
+    cfg = get_config(arch)
+    if (opts or {}).get("no_remat"):
+        cfg = dataclasses.replace(cfg, remat="none")
+    for k in list(opts or {}):  # "cf_<x>": override MoE capacity factor
+        if k.startswith("cf_") and cfg.moe is not None:
+            cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+                cfg.moe, capacity_factor=float(k[3:])))
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = 512 if multi_pod else 256
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "opts": opts or {}}
+    t0 = time.time()
+    import contextlib
+    import repro.models.attention as _A
+
+    def sdt_ctx():  # fresh context per use (generator CMs are single-shot)
+        return (_A.score_dtype(jnp.bfloat16) if (opts or {}).get("attn_bf16")
+                else contextlib.nullcontext())
+    try:
+        with sdt_ctx():
+            lowered = lower_combo(cfg, shape, mesh, opts=opts)
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+        mem = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+        }
+        rl_full = R.analyze(compiled, n_devices=n_dev,
+                            model_flops=R.model_flops_for(cfg, shape))
+        # layer probe: recover the (L-1) scanned layers that XLA's
+        # trip-count-blind cost analysis leaves out of the full program
+        t2 = time.time()
+        with sdt_ctx():
+            probe = lower_layer_probe(cfg, shape, mesh, opts=opts).compile()
+        rec["probe_s"] = round(time.time() - t2, 1)
+        rl_layer = R.analyze(probe, n_devices=n_dev)
+        rl = R.combine(rl_full, rl_layer, cfg.num_layers - 1)
+        rec["roofline"] = rl.as_dict()
+        rec["roofline_full_program_only"] = rl_full.as_dict()
+        rec["roofline_per_layer"] = rl_layer.as_dict()
+        rec["ok"] = True
+    except Exception as e:  # a failure here is a bug in the system
+        rec["ok"] = False
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    rec["total_s"] = round(time.time() - t0, 1)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        suffix = f"_{tag}" if tag else ""
+        fn = os.path.join(out_dir, f"{arch}_{shape_name}_{mesh_name}{suffix}.json")
+        with open(fn, "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--opts", default="",
+                    help="comma list of §Perf flags: expert_tp,constrain_tokens,serve_tp")
+    ap.add_argument("--tag", default="", help="suffix for output JSON files")
+    args = ap.parse_args()
+    opts = {k: True for k in args.opts.split(",") if k}
+
+    archs = ASSIGNED if args.arch == "all" else args.arch.split(",")
+    shapes = list(INPUT_SHAPES) if args.shape == "all" else args.shape.split(",")
+    pods = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in pods:
+                rec = run_one(arch, shape, multi_pod=mp, out_dir=args.out,
+                              opts=opts, tag=args.tag)
+                if rec["ok"]:
+                    rl = rec["roofline"]
+                    print(f"OK   {arch:18s} {shape:12s} {rec['mesh']:8s} "
+                          f"comp={rl['compute_s']:.3e}s mem={rl['memory_s']:.3e}s "
+                          f"coll={rl['collective_s']:.3e}s dom={rl['dominant']:10s} "
+                          f"({rec['total_s']}s)", flush=True)
+                else:
+                    n_fail += 1
+                    print(f"FAIL {arch:18s} {shape:12s} {rec['mesh']:8s} "
+                          f"{rec['error'][:160]}", flush=True)
+    print(f"failures: {n_fail}")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,148 @@
+"""Roofline analysis from compiled dry-run artifacts (no real hardware).
+
+Three terms per (arch x shape x mesh), all in seconds-per-step on TPU v5e
+constants:
+
+  compute    = HLO_FLOPs_per_device / PEAK_FLOPS
+  memory     = HLO_bytes_per_device / HBM_BW
+  collective = sum_c  bytes(c) * hops(c) / ICI_BW      (parsed from HLO text)
+
+HLO after SPMD partitioning is per-device, so cost_analysis numbers are
+already per-chip.  Collective bytes are not in cost_analysis; we parse the
+optimized HLO and sum output-operand sizes of every collective op, weighting
+all-reduce x2 (reduce + broadcast phases of a ring).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+# --- TPU v5e hardware constants (per chip) ---
+PEAK_FLOPS = 197e12  # bf16
+HBM_BW = 819e9  # bytes/s
+ICI_BW = 50e9  # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(\(?[a-z0-9_\[\],{}/ ]+?\)?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(", re.IGNORECASE)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_HOPS = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+         "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def _shape_bytes(shapes_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shapes_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-collective-type output bytes (per device) from optimized HLO."""
+    out: dict = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        shapes, op = m.group(1), m.group(2).lower()
+        out[op] = out.get(op, 0) + _shape_bytes(shapes)
+    return out
+
+
+@dataclass
+class Roofline:
+    flops: float  # per device
+    hbm_bytes: float  # per device
+    coll_bytes: dict  # per device, by op type
+    n_devices: int
+    model_flops: float = 0.0  # 6*N_active*D etc (global)
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return sum(b * _HOPS.get(op, 1.0) for op, b in self.coll_bytes.items()) / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        total = self.flops * self.n_devices
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def step_s(self) -> float:
+        """Roofline step-time lower bound (max of the three terms)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops_per_dev": self.flops,
+            "hbm_bytes_per_dev": self.hbm_bytes,
+            "collective_bytes": self.coll_bytes,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "step_s_bound": self.step_s,
+        }
+
+
+def analyze(compiled, *, n_devices: int, model_flops: float = 0.0) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # some backends return [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    coll = collective_bytes(compiled.as_text())
+    return Roofline(flops, hbm, coll, n_devices, model_flops)
+
+
+def combine(full: Roofline, layer: Roofline, extra_layers: int) -> Roofline:
+    """total = full_program + extra_layers * layer_probe.
+
+    XLA cost analysis counts while-loop bodies once, so the full program's
+    numbers include ONE layer's worth of the scanned stack; the remaining
+    (L-1) layers come from the standalone layer probe (which has no outer
+    while and full-sequence attention chunks).
+    """
+    coll = dict(full.coll_bytes)
+    for op, b in layer.coll_bytes.items():
+        coll[op] = coll.get(op, 0) + extra_layers * b
+    return Roofline(full.flops + extra_layers * layer.flops,
+                    full.hbm_bytes + extra_layers * layer.hbm_bytes,
+                    coll, full.n_devices, full.model_flops)
+
+
+def model_flops_for(cfg, shape) -> float:
+    """Paper-style useful-FLOPs estimate: 6*N_active*tokens (train) or
+    2*N_active*tokens (inference)."""
+    n_active = cfg.active_param_count()
+    if shape.mode == "train":
+        return 6.0 * n_active * shape.global_batch * shape.seq_len
+    if shape.mode == "prefill":
+        return 2.0 * n_active * shape.global_batch * shape.seq_len
+    return 2.0 * n_active * shape.global_batch  # decode: 1 new token/seq

@@ -1,0 +1,118 @@
+"""Continuous batching scheduler (beyond-paper serving subsystem).
+
+A fixed-size decode batch whose slots are independently occupied by
+requests: new prompts prefill into a free slot (single-sequence prefill
+inserted into the batched cache), every decode step advances all active
+slots with PER-SEQUENCE positions, finished sequences free their slot
+immediately for the next queued request — no head-of-line blocking on the
+longest sequence (the vLLM-style serving pattern, sized down).
+
+Host-side orchestration; the device work is one jitted batched decode_step
+per tick regardless of occupancy.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray  # (S,) int32
+    max_new: int
+    out: list = field(default_factory=list)
+    done: bool = False
+
+
+class ContinuousBatcher:
+    def __init__(self, params, cfg: ModelConfig, *, max_batch: int = 8,
+                 cache_len: int = 256, eos_id: Optional[int] = None):
+        self.params = params
+        self.cfg = cfg
+        self.B = max_batch
+        self.W = cache_len
+        self.eos_id = eos_id
+        self.cache = lm.init_cache(cfg, max_batch, cache_len)
+        self.pos = np.zeros(max_batch, np.int32)  # next position per slot
+        self.slot_req: list = [None] * max_batch
+        self.queue: list = []
+        self.next_tok = np.zeros(max_batch, np.int32)
+        self._decode = jax.jit(functools.partial(lm.decode_step, cfg=cfg))
+        self._prefill = jax.jit(functools.partial(lm.prefill, cfg=cfg))
+        self._empty_slot_cache = lm.init_cache(cfg, 1, cache_len)
+
+    # -- request lifecycle ---------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _free_slots(self):
+        return [i for i, r in enumerate(self.slot_req) if r is None]
+
+    def _admit(self) -> None:
+        for slot in self._free_slots():
+            if not self.queue:
+                break
+            req = self.queue.pop(0)
+            prompt = jnp.asarray(req.prompt, jnp.int32)[None]  # (1, S)
+            logits, c1, _ = self._prefill(self.params, tokens=prompt,
+                                          cache=self._empty_slot_cache)
+            # insert the single-sequence cache into batch slot `slot`
+            self.cache = jax.tree.map(
+                lambda big, one: big.at[:, slot].set(one[:, 0]),
+                self.cache, c1)
+            self.slot_req[slot] = req
+            self.pos[slot] = req.prompt.shape[0]
+            self.next_tok[slot] = int(jnp.argmax(logits[0, -1]))
+            req.out.append(int(self.next_tok[slot]))
+
+    def _retire(self, slot: int) -> None:
+        req = self.slot_req[slot]
+        req.done = True
+        self.slot_req[slot] = None
+        # reset the slot's cache so stale entries never leak into a new request
+        self.cache = jax.tree.map(
+            lambda big, one: big.at[:, slot].set(one[:, 0]),
+            self.cache, self._empty_slot_cache)
+        self.pos[slot] = 0
+
+    # -- one decode tick -----------------------------------------------------
+
+    def step(self) -> int:
+        """Admit queued requests, decode one token for every active slot.
+        Returns the number of active slots this tick."""
+        self._admit()
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not active:
+            return 0
+        toks = jnp.asarray(self.next_tok, jnp.int32)[:, None]  # (B, 1)
+        pos = jnp.asarray(self.pos, jnp.int32)  # per-sequence positions
+        logits, self.cache, _ = self._decode(self.params, tokens=toks,
+                                             pos=pos, cache=self.cache)
+        nxt = np.asarray(jnp.argmax(logits[:, 0], -1), np.int32)
+        for slot in active:
+            req = self.slot_req[slot]
+            self.pos[slot] += 1
+            tok = int(nxt[slot])
+            req.out.append(tok)
+            self.next_tok[slot] = tok
+            if (len(req.out) >= req.max_new
+                    or (self.eos_id is not None and tok == self.eos_id)):
+                self._retire(slot)
+        return len(active)
+
+    def run(self, max_ticks: int = 10000) -> None:
+        for _ in range(max_ticks):
+            if not self.queue and all(r is None for r in self.slot_req):
+                return
+            self.step()
+        raise RuntimeError("scheduler did not drain")

@@ -1,0 +1,189 @@
+"""Training driver: jitted train_step (with optional microbatch gradient
+accumulation), sharding-aware jit wiring, and a CLI for real runs.
+
+Usage (example, CPU-scale):
+  PYTHONPATH=src python -m repro.launch.train --arch fastmoe-gpt --steps 100 \
+      --batch 8 --seq 256 --reduced
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import INPUT_SHAPES, get_config, reduced
+from repro.configs.base import ModelConfig
+from repro.core.fmoe import DistConfig
+from repro.data import SyntheticLM
+from repro.launch.mesh import all_axes, data_axes, make_local_mesh
+from repro.launch.sharding import batch_spec, tree_shardings
+from repro.models import lm
+from repro.optim import AdamW, warmup_cosine
+
+
+def moe_dist(cfg: ModelConfig, mesh, num_tokens: int, *,
+             opts: Optional[dict] = None) -> Optional[DistConfig]:
+    """Pick the expert-parallel mode for this (config, mesh, token count).
+
+    a2a (the paper's §3.2 exchange) when tokens split across every axis
+    including the expert axis; psum otherwise (decode-time small batches);
+    None when the config has no MoE or the mesh has no expert axis.
+    ``opts`` toggles the §Perf beyond-paper optimizations (expert_tp,
+    constrain_tokens).
+    """
+    opts = opts or {}
+    if cfg.moe is None or "model" not in mesh.axis_names:
+        return None
+    expert_axis = "model"
+    if (opts.get("expert_pod") and "pod" in mesh.axis_names
+            and cfg.moe.num_experts
+            % (mesh.shape["pod"] * mesh.shape["model"]) == 0):
+        # §Perf multi-pod: expert parallelism spans pods (no cross-pod
+        # expert-gradient sync; the a2a crosses pods instead)
+        expert_axis = ("pod", "model")
+    ep = 1
+    for a in (expert_axis if isinstance(expert_axis, tuple) else (expert_axis,)):
+        ep *= mesh.shape[a]
+    if cfg.moe.num_experts % ep:
+        return None
+    extra = dict(
+        expert_axis=expert_axis,
+        tp_axis="data" if opts.get("expert_tp") and "data" in mesh.axis_names else None,
+        constrain_tokens=bool(opts.get("constrain_tokens")),
+        fsdp_axis="data" if (opts.get("constrain_tokens")
+                             and "data" in mesh.axis_names) else None,
+    )
+    total = 1
+    for a in mesh.axis_names:
+        total *= mesh.shape[a]
+    if num_tokens % total == 0:
+        return DistConfig(mesh, all_axes(mesh), **extra)
+    d_axes = data_axes(mesh)
+    dsize = 1
+    for a in d_axes:
+        dsize *= mesh.shape[a]
+    if num_tokens % dsize == 0:
+        return DistConfig(mesh, d_axes, expert_axis=expert_axis, tp_axis=None,
+                          constrain_tokens=extra["constrain_tokens"])
+    return DistConfig(mesh, (), expert_axis=expert_axis, tp_axis=None,
+                      constrain_tokens=extra["constrain_tokens"])
+
+
+def make_train_step(cfg: ModelConfig, opt: AdamW, *, dist=None,
+                    num_microbatches: int = 1, warmup: int = 100,
+                    total_steps: int = 10000):
+    """(params, opt_state, batch, step) -> (params, opt_state, metrics)."""
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(
+            lambda p: lm.loss_fn(p, cfg, batch, dist=dist), has_aux=True)(params)
+
+    def train_step(params, opt_state, batch, step):
+        if num_microbatches == 1:
+            (loss, aux), grads = grads_of(params, batch)
+        else:
+            def split(x):
+                b = x.shape[0] // num_microbatches
+                return x.reshape(num_microbatches, b, *x.shape[1:])
+            micro = jax.tree.map(split, batch)
+
+            def body(acc, mb):
+                (l, a), g = grads_of(params, mb)
+                return jax.tree.map(jnp.add, acc, (g, l, a)), None
+
+            zero_g = jax.tree.map(jnp.zeros_like, params)
+            n_e = cfg.moe.num_experts if cfg.moe is not None else 1
+            aux0 = {"ce": jnp.zeros(()), "aux_loss": jnp.zeros(()),
+                    "z_loss": jnp.zeros(()), "drop_frac": jnp.zeros(()),
+                    "load": jnp.zeros((n_e,))}
+            (grads, loss, aux), _ = jax.lax.scan(
+                body, (zero_g, jnp.zeros(()), aux0), micro)
+            inv = 1.0 / num_microbatches
+            grads = jax.tree.map(lambda g: g * inv, grads)
+            loss, aux = loss * inv, jax.tree.map(lambda a: a * inv, aux)
+        lr_scale = warmup_cosine(step, warmup=warmup, total=total_steps)
+        params, opt_state, gnorm = opt.update(grads, opt_state, params,
+                                              lr_scale=lr_scale)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm,
+                                   "lr_scale": lr_scale, **aux}
+
+    return train_step
+
+
+def jit_train_step(cfg: ModelConfig, opt: AdamW, mesh, global_batch: int,
+                   seq_len: int, *, num_microbatches: int = 1,
+                   opts: Optional[dict] = None):
+    """Fully sharding-annotated jitted train step for ``mesh``."""
+    from repro.launch.sharding import option_overrides
+    rng = jax.random.PRNGKey(0)
+    rcfg = cfg if (opts or {}).get("head_aware") else None
+    with option_overrides(opts or {}, mesh):
+        params_shape = jax.eval_shape(lambda: lm.init_params(rng, cfg))
+        pshard = tree_shardings(params_shape, mesh, cfg=rcfg)
+        oshard_shape = jax.eval_shape(opt.init, params_shape)
+        oshard = tree_shardings(oshard_shape, mesh, cfg=rcfg)
+    bspec = {"tokens": jax.sharding.NamedSharding(mesh, batch_spec(global_batch, mesh))}
+    if cfg.frontend == "vision":
+        bspec["patches"] = jax.sharding.NamedSharding(mesh, batch_spec(global_batch, mesh, 2))
+    if cfg.family == "audio":
+        bspec["frames"] = jax.sharding.NamedSharding(mesh, batch_spec(global_batch, mesh, 2))
+    dist = moe_dist(cfg, mesh, global_batch * seq_len, opts=opts)
+    step_fn = make_train_step(cfg, opt, dist=dist,
+                              num_microbatches=num_microbatches)
+    rep = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+    return jax.jit(
+        step_fn,
+        in_shardings=(pshard, oshard, bspec, rep),
+        out_shardings=(pshard, oshard, None),
+        donate_argnums=(0, 1),
+    ), pshard, oshard
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="fastmoe-gpt")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--reduced", action="store_true",
+                    help="train the reduced CPU-scale variant")
+    ap.add_argument("--log_every", type=int, default=10)
+    ap.add_argument("--microbatches", type=int, default=1)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg, num_layers=4, d_model=256)
+    opt = AdamW(lr=args.lr)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    opt_state = opt.init(params)
+    step_fn = jax.jit(make_train_step(cfg, opt,
+                                      num_microbatches=args.microbatches))
+
+    data = SyntheticLM(cfg.vocab_size, args.seq)
+    t0 = time.time()
+    for step, batch in enumerate(data.batches(args.batch)):
+        if step >= args.steps:
+            break
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        params, opt_state, metrics = step_fn(params, opt_state, batch,
+                                             jnp.int32(step))
+        if step % args.log_every == 0:
+            print(f"step {step:5d} loss {float(metrics['loss']):.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} "
+                  f"({time.time() - t0:.1f}s)")
+    print(f"done: {args.steps} steps in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,259 @@
+"""Full language models assembled from configs.
+
+Public API (all functional):
+  init_params(rng, cfg)                        -> params pytree
+  forward(params, cfg, tokens, ...)            -> (logits, MoEMetrics)
+  loss_fn(params, cfg, batch, ...)             -> (loss, aux dict)
+  init_cache(cfg, batch, cache_len, ...)       -> stacked decode cache
+  decode_step(params, cfg, tokens, pos, cache) -> (logits, new_cache, metrics)
+
+The layer stack is stored stacked (leading L dim on every leaf) and applied
+with jax.lax.scan (+ jax.remat per layer when cfg.remat == "full") — essential
+for compile time at 80 layers x 512 devices.  Per-layer sliding windows ride
+along as a scanned (L,) array so Hymba's global layers coexist with windowed
+ones inside one homogeneous scan.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.balance import MoEMetrics
+from repro.core.fmoe import DistConfig
+from repro.models import attention as A
+from repro.models import blocks as B
+from repro.models.layers import (apply_norm, embed_init, embed_lookup,
+                                 linear, linear_init, norm_init, unembed)
+
+
+def _n_experts(cfg: ModelConfig) -> int:
+    return cfg.moe.num_experts if cfg.moe is not None else 1
+
+
+def _cast_params(p, dtype):
+    """Cast float params to the compute dtype at point of use (master weights
+    stay float32; the router re-promotes to f32 internally)."""
+    return jax.tree.map(
+        lambda a: a.astype(dtype) if jnp.issubdtype(a.dtype, jnp.floating)
+        and a.dtype != dtype else a, p)
+
+
+def _stacked_layer_init(rng: jax.Array, cfg: ModelConfig, n: int,
+                        cross: bool = False) -> dict:
+    keys = jax.random.split(rng, n)
+    return jax.vmap(lambda k: B.layer_init(k, cfg, cross=cross))(keys)
+
+
+def init_params(rng: jax.Array, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(rng, 6)
+    dtype = jnp.dtype(cfg.param_dtype)
+    p: dict = {
+        "embed": embed_init(ks[0], cfg.vocab_size, cfg.d_model, dtype),
+        "layers": _stacked_layer_init(ks[1], cfg, cfg.num_layers,
+                                      cross=cfg.family == "audio"),
+        "final_norm": norm_init(cfg.d_model, cfg.norm),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = linear_init(ks[2], cfg.d_model, cfg.vocab_size, dtype)
+    if cfg.encoder is not None:
+        p["enc_layers"] = _stacked_layer_init(ks[3], cfg, cfg.encoder.num_layers)
+        p["enc_norm"] = norm_init(cfg.d_model, cfg.norm)
+    return p
+
+
+def _logits(params: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        return unembed(params["embed"], x)
+    return linear(params["lm_head"], x.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Encoder (whisper) — bidirectional stack over stubbed frame embeddings
+# ---------------------------------------------------------------------------
+
+
+def encode(params: dict, cfg: ModelConfig, frames: jax.Array) -> jax.Array:
+    """frames: (B, F, d_model) precomputed conv-frontend embeddings (stub)."""
+    x = frames.astype(jnp.dtype(cfg.dtype))
+
+    def body(x, p_l):
+        p_l = _cast_params(p_l, jnp.dtype(cfg.dtype))
+        h = A.gqa_apply(p_l["attn"], apply_norm(p_l["norm1"], x, cfg.norm),
+                        cfg.attention, window=B.FULL_WINDOW, causal=False)
+        x = x + h
+        from repro.core.fmoe import dense_ffn
+        h = dense_ffn(p_l["ffn"], apply_norm(p_l["norm2"], x, cfg.norm), cfg.act)
+        return (x + h).astype(x.dtype), None
+
+    if cfg.remat == "full":
+        body = jax.remat(body)
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return apply_norm(params["enc_norm"], x, cfg.norm)
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def forward(params: dict, cfg: ModelConfig, tokens: jax.Array, *,
+            frames: Optional[jax.Array] = None,
+            patches: Optional[jax.Array] = None,
+            dist: Optional[DistConfig] = None):
+    """tokens (B, S) -> (logits (B, S', V), MoEMetrics).
+
+    vlm: ``patches`` (B, P, d) are prepended; logits cover the full combined
+    sequence (caller slices text positions for the loss).
+    audio: ``frames`` (B, F, d) go through the encoder; decoder cross-attends.
+    """
+    dtype = jnp.dtype(cfg.dtype)
+    x = embed_lookup(params["embed"], tokens, dtype)
+    if cfg.frontend == "vision" and patches is not None:
+        x = jnp.concatenate([patches.astype(dtype), x], axis=1)
+    enc_out = None
+    if cfg.family == "audio":
+        enc_out = encode(params, cfg, frames)
+
+    batch = x.shape[0]
+    windows = B.layer_windows(cfg)
+    state0 = B.mixer_state(cfg, batch, dtype)
+    n_e = _n_experts(cfg)
+
+    def body(carry, xs):
+        x, metrics = carry
+        p_l, window = xs
+        x, m = B.layer_apply_seq(_cast_params(p_l, dtype), cfg, x,
+                                 window=window, dist=dist,
+                                 enc_out=enc_out, mixer_state=state0)
+        metrics = metrics + m if m is not None else metrics
+        return (x.astype(dtype), metrics), None
+
+    if cfg.remat == "full":
+        body = jax.remat(body)
+    (x, metrics), _ = jax.lax.scan(
+        body, (x, MoEMetrics.zero(n_e)), (params["layers"], windows))
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    return _logits(params, cfg, x), metrics
+
+
+def loss_fn(params: dict, cfg: ModelConfig, batch: dict, *,
+            dist: Optional[DistConfig] = None):
+    """Next-token cross-entropy + MoE aux losses.  batch: {"tokens", and
+    optionally "frames"/"patches"}."""
+    tokens = batch["tokens"]
+    logits, metrics = forward(params, cfg, tokens,
+                              frames=batch.get("frames"),
+                              patches=batch.get("patches"), dist=dist)
+    if cfg.frontend == "vision" and "patches" in batch:
+        logits = logits[:, batch["patches"].shape[1]:]  # text positions only
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    ce = nll.mean()
+    loss = ce
+    if cfg.moe is not None:
+        L = cfg.num_layers
+        loss = loss + (cfg.moe.balance_loss_weight * metrics.aux_loss
+                       + cfg.moe.z_loss_weight * metrics.z_loss) / L
+    L = max(cfg.num_layers, 1)
+    aux = {"ce": ce, "aux_loss": metrics.aux_loss, "z_loss": metrics.z_loss,
+           "drop_frac": metrics.drop_frac / L,
+           "load": metrics.load / L}  # per-expert load for the §6 monitor
+    return loss, aux
+
+
+# ---------------------------------------------------------------------------
+# Prefill: one full pass that fills the decode cache (serving fast path)
+# ---------------------------------------------------------------------------
+
+
+def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array, cache: Any, *,
+            frames: Optional[jax.Array] = None,
+            patches: Optional[jax.Array] = None,
+            dist: Optional[DistConfig] = None):
+    """tokens (B, S) + empty cache -> (logits (B, S', V), filled cache,
+    metrics).  Decoding then continues at position S' with decode_step."""
+    dtype = jnp.dtype(cfg.dtype)
+    x = embed_lookup(params["embed"], tokens, dtype)
+    if cfg.frontend == "vision" and patches is not None:
+        x = jnp.concatenate([patches.astype(dtype), x], axis=1)
+    if cfg.family == "audio":
+        enc_out = encode(params, cfg, frames)
+        L = cfg.num_layers
+        cache = dict(cache)
+        cache["enc_out"] = jnp.broadcast_to(
+            enc_out[None].astype(dtype), (L,) + enc_out.shape)
+
+    windows = B.layer_windows(cfg)
+    n_e = _n_experts(cfg)
+
+    def body(carry, xs):
+        x, metrics = carry
+        p_l, window, cache_l = xs
+        x, new_cache_l, m = B.layer_apply_prefill(
+            _cast_params(p_l, dtype), cfg, x, cache_l, window=window,
+            dist=dist)
+        metrics = metrics + m if m is not None else metrics
+        return (x.astype(dtype), metrics), new_cache_l
+
+    (x, metrics), new_cache = jax.lax.scan(
+        body, (x, MoEMetrics.zero(n_e)), (params["layers"], windows, cache))
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    return _logits(params, cfg, x), new_cache, metrics
+
+
+# ---------------------------------------------------------------------------
+# Decode (one token, KV/state cache)
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int, *,
+               enc_out: Optional[jax.Array] = None) -> Any:
+    """Stacked (leading L dim) decode cache for the layer stack."""
+    dtype = jnp.dtype(cfg.dtype)
+    one = B.layer_cache(cfg, batch, cache_len, dtype, enc_out=enc_out)
+    L = cfg.num_layers
+    return jax.tree.map(lambda a: jnp.broadcast_to(a[None], (L,) + a.shape), one)
+
+
+def decode_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
+                pos: jax.Array, cache: Any, *,
+                dist: Optional[DistConfig] = None):
+    """tokens (B, 1) at absolute position ``pos`` -> (logits (B, 1, V),
+    new_cache, metrics)."""
+    dtype = jnp.dtype(cfg.dtype)
+    x = embed_lookup(params["embed"], tokens, dtype)
+    cache_len = _cache_len(cfg, cache)
+    windows = jnp.minimum(B.layer_windows(cfg),
+                          jnp.int32(cache_len)) if cache_len else B.layer_windows(cfg)
+    n_e = _n_experts(cfg)
+
+    def body(carry, xs):
+        x, metrics = carry
+        p_l, window, cache_l = xs
+        x, new_cache_l, m = B.layer_apply_decode(
+            _cast_params(p_l, dtype), cfg, x, cache_l, pos,
+            window=window, dist=dist)
+        metrics = metrics + m if m is not None else metrics
+        return (x.astype(dtype), metrics), new_cache_l
+
+    (x, metrics), new_cache = jax.lax.scan(
+        body, (x, MoEMetrics.zero(n_e)), (params["layers"], windows, cache))
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    return _logits(params, cfg, x), new_cache, metrics
+
+
+def _cache_len(cfg: ModelConfig, cache: Any) -> int:
+    """Ring-buffer length (0 for pure-state caches)."""
+    if cfg.family == "ssm":
+        return 0
+    leaf = cache
+    if cfg.family == "hybrid":
+        leaf = cache["attn"]
+    elif cfg.family == "audio":
+        leaf = cache["self"]
+    return leaf.positions.shape[-1]

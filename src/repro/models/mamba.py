@@ -1,0 +1,89 @@
+"""Mamba selective SSM head (used by Hymba's parallel attn+mamba layers).
+
+h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t * u_t ;  y_t = C_t . h_t + D * u_t
+with input-dependent (selective) B, C, dt.  lax.scan over time for sequences,
+single state update for decode.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from repro.models.layers import linear_init
+
+
+class MambaState(NamedTuple):
+    h: jax.Array  # (B, d_in, N) ssm state
+    conv: jax.Array  # (B, conv_width - 1, d_in) causal-conv tail
+
+
+def mamba_init(rng: jax.Array, d_model: int, cfg: SSMConfig, dtype) -> dict:
+    d_in = cfg.expand * d_model
+    dt_rank = cfg.dt_rank or max(1, (d_model + 15) // 16)
+    ks = jax.random.split(rng, 6)
+    A = jnp.tile(jnp.arange(1, cfg.state_size + 1, dtype=jnp.float32), (d_in, 1))
+    return {
+        "in_proj": linear_init(ks[0], d_model, 2 * d_in, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv_width, d_in)) *
+                   cfg.conv_width ** -0.5).astype(dtype),
+        "conv_b": jnp.zeros((d_in,), dtype),
+        "x_proj": linear_init(ks[2], d_in, dt_rank + 2 * cfg.state_size, dtype),
+        "dt_proj": linear_init(ks[3], dt_rank, d_in, dtype, bias=True),
+        "A_log": jnp.log(A),
+        "D": jnp.ones((d_in,)),
+        "out_proj": linear_init(ks[4], d_in, d_model, dtype),
+    }
+
+
+def _split_xproj(p: dict, xc: jax.Array, cfg: SSMConfig, dt_rank: int):
+    proj = xc @ p["x_proj"]["w"]
+    dt_low, Bc, Cc = jnp.split(proj, [dt_rank, dt_rank + cfg.state_size], axis=-1)
+    dt = jax.nn.softplus(dt_low @ p["dt_proj"]["w"] + p["dt_proj"]["b"])
+    return dt, Bc, Cc
+
+
+def mamba_apply(p: dict, x: jax.Array, state: MambaState, cfg: SSMConfig):
+    """x (B, S, d_model) -> (y, new_state)."""
+    B, S, d_model = x.shape
+    d_in = cfg.expand * d_model
+    dt_rank = cfg.dt_rank or max(1, (d_model + 15) // 16)
+
+    xz = x @ p["in_proj"]["w"]
+    xi, z = jnp.split(xz, 2, axis=-1)  # (B, S, d_in) each
+
+    # causal depthwise conv over time, seeded by cached tail
+    pad = jnp.concatenate([state.conv.astype(xi.dtype), xi], axis=1)
+    cw = cfg.conv_width
+    xc = sum(pad[:, i:i + S] * p["conv_w"][i] for i in range(cw)) + p["conv_b"]
+    xc = jax.nn.silu(xc)
+
+    dt, Bc, Cc = _split_xproj(p, xc, cfg, dt_rank)
+    A = -jnp.exp(p["A_log"])  # (d_in, N)
+
+    def step(h, inp):
+        xt, dtt, Bt, Ct = inp  # (B,d_in), (B,d_in), (B,N), (B,N)
+        dA = jnp.exp(dtt[..., None].astype(jnp.float32) * A)  # (B, d_in, N)
+        dBx = (dtt * xt)[..., None].astype(jnp.float32) * Bt[:, None, :]
+        h = dA * h + dBx
+        y = jnp.einsum("bdn,bn->bd", h, Ct.astype(jnp.float32))
+        return h, y
+
+    h_fin, ys = jax.lax.scan(
+        step, state.h,
+        (xc.transpose(1, 0, 2), dt.transpose(1, 0, 2),
+         Bc.transpose(1, 0, 2), Cc.transpose(1, 0, 2)))
+    y = ys.transpose(1, 0, 2).astype(x.dtype) + xc * p["D"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = y @ p["out_proj"]["w"]
+    new_conv = pad[:, -(cw - 1):] if cw > 1 else state.conv
+    return out, MambaState(h_fin, new_conv.astype(state.conv.dtype))
+
+
+def mamba_init_state(batch: int, d_model: int, cfg: SSMConfig,
+                     dtype=jnp.float32) -> MambaState:
+    d_in = cfg.expand * d_model
+    return MambaState(jnp.zeros((batch, d_in, cfg.state_size), jnp.float32),
+                      jnp.zeros((batch, cfg.conv_width - 1, d_in), dtype))

@@ -1,0 +1,132 @@
+"""RWKV6 "Finch" time-mix + channel-mix (arXiv:2404.05892).
+
+Attention-free linear recurrence with *data-dependent* per-channel decay
+(the Finch contribution): w_t = exp(-exp(w0 + lora(x_t))), state
+S_t = diag(w_t) S_{t-1} + k_t v_t^T per 64-wide head.  Sequence processing is
+a lax.scan over time; decode is a single state update — O(1) memory in
+sequence length, which is why rwkv6-7b runs long_500k natively.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import linear_init
+
+TSHIFT_RANK = 32
+_MIX = ("r", "k", "v", "w", "g")
+
+
+class RWKVState(NamedTuple):
+    S: jax.Array  # (B, n_heads, dk, dv) wkv state
+    sx_tm: jax.Array  # (B, d) previous token (time-mix shift)
+    sx_cm: jax.Array  # (B, d) previous token (channel-mix shift)
+
+
+def rwkv_init(rng: jax.Array, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    r = cfg.ssm.lora_rank
+    ks = jax.random.split(rng, 12)
+    n01 = lambda k, shape, s: (jax.random.normal(k, shape) * s).astype(dtype)
+    return {
+        # ddlerp token-shift mixers
+        "mu_x": jnp.zeros((d,), dtype),
+        "mu": jnp.zeros((5, d), dtype),
+        "ts_w1": n01(ks[0], (d, 5 * TSHIFT_RANK), d ** -0.5),
+        "ts_w2": n01(ks[1], (5, TSHIFT_RANK, d), TSHIFT_RANK ** -0.5),
+        # projections
+        "wr": linear_init(ks[2], d, d, dtype),
+        "wk": linear_init(ks[3], d, d, dtype),
+        "wv": linear_init(ks[4], d, d, dtype),
+        "wg": linear_init(ks[5], d, d, dtype),
+        "wo": linear_init(ks[6], d, d, dtype),
+        # data-dependent decay (Finch)
+        "w0": jnp.full((d,), -6.0, dtype),
+        "decay_w1": n01(ks[7], (d, r), d ** -0.5),
+        "decay_w2": n01(ks[8], (r, d), r ** -0.5),
+        "u": n01(ks[9], (d,), 0.5),  # per-channel bonus ("first")
+        "ln_x_scale": jnp.ones((d,), dtype),  # per-head group norm
+        # channel mix
+        "mu_ck": jnp.zeros((d,), dtype),
+        "mu_cr": jnp.zeros((d,), dtype),
+        "cm_k": linear_init(ks[10], d, cfg.d_ff, dtype),
+        "cm_v": linear_init(ks[11], cfg.d_ff, d, dtype),
+        "cm_r": linear_init(jax.random.fold_in(rng, 99), d, d, dtype),
+    }
+
+
+def _ddlerp(p: dict, x: jax.Array, sx: jax.Array):
+    """Data-dependent lerp between current and shifted token (5 targets)."""
+    dx = sx - x
+    xm = x + dx * p["mu_x"]
+    low = jnp.tanh(xm @ p["ts_w1"]).reshape(*x.shape[:-1], 5, TSHIFT_RANK)
+    dyn = jnp.einsum("...ct,ctd->...cd", low, p["ts_w2"])  # (..., 5, d)
+    mix = p["mu"] + dyn
+    return tuple(x + dx * mix[..., i, :] for i in range(5))
+
+
+def _rkvwg(p: dict, x: jax.Array, sx: jax.Array, n: int, hd: int):
+    xr, xk, xv, xw, xg = _ddlerp(p, x, sx)
+    B = x.shape[0]
+    shp = (B, n, hd)
+    r = (xr @ p["wr"]["w"]).reshape(shp)
+    k = (xk @ p["wk"]["w"]).reshape(shp)
+    v = (xv @ p["wv"]["w"]).reshape(shp)
+    g = xg @ p["wg"]["w"]
+    w_log = p["w0"] + jnp.tanh(xw @ p["decay_w1"]) @ p["decay_w2"]
+    w = jnp.exp(-jnp.exp(w_log.astype(jnp.float32))).reshape(shp)  # decay in (0,1)
+    return r, k, v, g, w
+
+
+def _groupnorm(y: jax.Array, scale: jax.Array, n: int, hd: int) -> jax.Array:
+    B = y.shape[0]
+    yh = y.reshape(B, n, hd).astype(jnp.float32)
+    yh = yh * jax.lax.rsqrt(jnp.mean(yh * yh, -1, keepdims=True) + 1e-5)
+    return (yh.reshape(B, n * hd) * scale).astype(y.dtype)
+
+
+def time_mix(p: dict, x: jax.Array, state: RWKVState, cfg: ModelConfig):
+    """Sequence time-mix: x (B, S, d) -> (y, new_state)."""
+    B, S, d = x.shape
+    hd = cfg.ssm.head_dim
+    n = d // hd
+    u = p["u"].reshape(n, hd).astype(jnp.float32)
+
+    sx_seq = jnp.concatenate([state.sx_tm[:, None], x[:, :-1]], axis=1)
+
+    def step(S_state, inp):
+        xt, sxt = inp  # (B, d) each
+        r, k, v, g, w = _rkvwg(p, xt, sxt, n, hd)
+        rf, kf, vf = (a.astype(jnp.float32) for a in (r, k, v))
+        kv = jnp.einsum("bhk,bhv->bhkv", kf, vf)
+        y = jnp.einsum("bhk,bhkv->bhv", rf, S_state + u[None, :, :, None] * kv)
+        S_state = w.astype(jnp.float32)[..., None] * S_state + kv
+        yo = _groupnorm(y.reshape(B, d), p["ln_x_scale"], n, hd)
+        return S_state, yo * jax.nn.silu(g)
+
+    S_fin, ys = jax.lax.scan(step, state.S,
+                             (x.transpose(1, 0, 2), sx_seq.transpose(1, 0, 2)))
+    y = ys.transpose(1, 0, 2) @ p["wo"]["w"]
+    return y, state._replace(S=S_fin, sx_tm=x[:, -1])
+
+
+def channel_mix(p: dict, x: jax.Array, state: RWKVState):
+    B, S, d = x.shape
+    sx = jnp.concatenate([state.sx_cm[:, None], x[:, :-1]], axis=1)
+    dx = sx - x
+    xk = x + dx * p["mu_ck"]
+    xr = x + dx * p["mu_cr"]
+    k = jnp.square(jax.nn.relu(xk @ p["cm_k"]["w"]))
+    y = jax.nn.sigmoid(xr @ p["cm_r"]["w"]) * (k @ p["cm_v"]["w"])
+    return y, state._replace(sx_cm=x[:, -1])
+
+
+def rwkv_init_state(batch: int, cfg: ModelConfig, dtype=jnp.float32) -> RWKVState:
+    d = cfg.d_model
+    hd = cfg.ssm.head_dim
+    n = d // hd
+    return RWKVState(jnp.zeros((batch, n, hd, hd), jnp.float32),
+                     jnp.zeros((batch, d), dtype), jnp.zeros((batch, d), dtype))

@@ -1,0 +1,4 @@
+from repro.optim.adamw import AdamW, AdamWState, global_norm
+from repro.optim.schedule import warmup_cosine, warmup_linear
+
+__all__ = ["AdamW", "AdamWState", "global_norm", "warmup_cosine", "warmup_linear"]

@@ -1,0 +1,19 @@
+"""Learning-rate schedules (linear warmup + cosine/linear decay)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, warmup: int, total: int, floor: float = 0.1):
+    step = jnp.asarray(step, jnp.float32) + 1.0  # step 0 trains too
+    warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+    frac = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return warm * cos
+
+
+def warmup_linear(step, *, warmup: int, total: int, floor: float = 0.0):
+    step = jnp.asarray(step, jnp.float32) + 1.0
+    warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+    frac = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    return warm * (1 - (1 - floor) * frac)

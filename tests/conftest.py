@@ -1,0 +1,16 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS device-count override here — smoke
+tests and benches must see the real single CPU device; multi-device tests
+spawn subprocesses with their own flags (tests/test_distributed.py)."""
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _x64_off():
+    jax.config.update("jax_enable_x64", False)
+    yield
+
+
+@pytest.fixture
+def rng():
+    return jax.random.PRNGKey(0)

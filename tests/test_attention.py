@@ -1,0 +1,93 @@
+"""Blockwise (flash-pattern) attention vs a naive softmax oracle —
+shape/window/chunk sweeps + hypothesis properties (guards the online-softmax
+rescaling, KV padding, and sliding-window masking)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.models.attention as A
+
+
+def naive_attention(q, k, v, *, window, causal=True, q_offset=0):
+    B, Sq, H, dk = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, dk).astype(jnp.float32)
+    s = jnp.einsum("bskgd,bckd->bskgc", qg, k.astype(jnp.float32)) * dk ** -0.5
+    i = q_offset + jnp.arange(Sq)[:, None]
+    j = jnp.arange(Skv)[None, :]
+    mask = (i - j) < window
+    if causal:
+        mask &= (i - j) >= 0
+    s = jnp.where(mask[None, :, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bskgc,bckd->bskgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, -1).astype(q.dtype)
+
+
+def _qkv(B, S, H, KV, dk, seed=0, Skv=None):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    Skv = Skv or S
+    return (jax.random.normal(ks[0], (B, S, H, dk)),
+            jax.random.normal(ks[1], (B, Skv, KV, dk)),
+            jax.random.normal(ks[2], (B, Skv, KV, dk)))
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 32])
+@pytest.mark.parametrize("S", [16, 30])  # 30: not a chunk multiple -> padding
+def test_blockwise_matches_naive(S, chunk):
+    q, k, v = _qkv(2, S, 8, 4, 16)
+    y = A.blockwise_attention(q, k, v, window=1 << 30, chunk=chunk)
+    y_ref = naive_attention(q, k, v, window=1 << 30)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=2e-5)
+
+
+@pytest.mark.parametrize("window", [1, 3, 8, 1 << 30])
+def test_sliding_window(window):
+    q, k, v = _qkv(1, 24, 4, 4, 8, seed=1)
+    y = A.blockwise_attention(q, k, v, window=window, chunk=8)
+    y_ref = naive_attention(q, k, v, window=window)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=2e-5)
+
+
+def test_non_causal_cross_attention_with_padding():
+    # whisper cross-attn: Skv=30 frames, chunk 16 -> padded tail masked
+    q, _, _ = _qkv(2, 6, 4, 4, 8, seed=2)
+    _, k, v = _qkv(2, 6, 4, 4, 8, seed=3, Skv=30)
+    y = A.blockwise_attention(q, k, v, window=1 << 30, chunk=16, causal=False)
+    y_ref = naive_attention(q, k, v, window=1 << 30, causal=False)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=2e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(S=st.integers(2, 40), KV=st.sampled_from([1, 2, 4]),
+       G=st.sampled_from([1, 2, 3]), chunk=st.sampled_from([4, 8, 16]),
+       window=st.integers(1, 50), seed=st.integers(0, 50))
+def test_blockwise_property(S, KV, G, chunk, window, seed):
+    q, k, v = _qkv(1, S, KV * G, KV, 8, seed=seed)
+    y = A.blockwise_attention(q, k, v, window=window, chunk=chunk)
+    y_ref = naive_attention(q, k, v, window=window)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=5e-5)
+
+
+def test_bf16_score_mode_close_to_f32():
+    q, k, v = _qkv(2, 32, 8, 4, 16, seed=4)
+    q, k, v = (t.astype(jnp.bfloat16) for t in (q, k, v))
+    y32 = A.blockwise_attention(q, k, v, window=1 << 30, chunk=8)
+    with A.score_dtype(jnp.bfloat16):
+        y16 = A.blockwise_attention(q, k, v, window=1 << 30, chunk=8)
+    np.testing.assert_allclose(np.asarray(y16, np.float32),
+                               np.asarray(y32, np.float32), atol=3e-2)
+
+
+def test_decode_attention_matches_naive_last_row():
+    B, S, H, KV, dk = 2, 12, 4, 2, 8
+    q, k, v = _qkv(B, S, H, KV, dk, seed=5)
+    full = naive_attention(q, k, v, window=1 << 30)
+    cache = A.KVCache(k, v, jnp.broadcast_to(jnp.arange(S), (B, S)))
+    out = A.decode_attention(q[:, -1:], cache.k, cache.v, cache.positions,
+                             jnp.int32(S - 1), 1 << 30)
+    np.testing.assert_allclose(np.asarray(out[:, 0]), np.asarray(full[:, -1]),
+                               atol=2e-5)

@@ -1,0 +1,229 @@
+"""Multi-(fake-)device execution tests, run in subprocesses so the main test
+process keeps its single CPU device (per the dry-run contract)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(script: str, devices: int = 8) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(script)],
+                         capture_output=True, text=True, env=env, timeout=560)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_a2a_and_psum_match_local():
+    print(_run("""
+        import jax, jax.numpy as jnp
+        from repro.configs.base import MoEConfig
+        from repro.core import fmoe, naive
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        cfg = MoEConfig(num_experts=8, top_k=2, d_expert_hidden=64,
+                        capacity_factor=8.0)
+        params = fmoe.fmoe_init(jax.random.PRNGKey(0), 32, cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (8, 16, 32))
+        y_ref = naive.moe_loop_masked(params, x, cfg)
+        for axes in [("data", "model"), ("data",)]:
+            dist = fmoe.DistConfig(mesh, axes)
+            with mesh:
+                y, m = jax.jit(lambda p, x: fmoe.fmoe_apply(p, x, cfg, dist=dist))(params, x)
+            err = float(jnp.abs(y - y_ref).max())
+            assert err < 1e-5, (axes, err)
+            print("mode", dist.mode, "ok", err)
+    """))
+
+
+def test_a2a_collective_appears_in_hlo():
+    out = _run("""
+        import jax, jax.numpy as jnp
+        from repro.configs.base import MoEConfig
+        from repro.core import fmoe
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        cfg = MoEConfig(num_experts=8, top_k=2, d_expert_hidden=64)
+        params = fmoe.fmoe_init(jax.random.PRNGKey(0), 32, cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (8, 16, 32))
+        dist = fmoe.DistConfig(mesh, ("data", "model"))
+        with mesh:
+            lowered = jax.jit(lambda p, x: fmoe.fmoe_apply(p, x, cfg, dist=dist)[0]).lower(params, x)
+        txt = lowered.compile().as_text()
+        assert "all-to-all" in txt, "expected all-to-all in HLO"
+        print("all-to-all present")
+    """)
+    assert "all-to-all present" in out
+
+
+def test_gradient_sync_semantics():
+    """Paper §3.2: replicated (world) param grads identical across all
+    devices; expert (none-tag) grads live only on their shard."""
+    print(_run("""
+        import jax, jax.numpy as jnp
+        import numpy as np
+        from repro.configs.base import MoEConfig
+        from repro.core import fmoe
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        cfg = MoEConfig(num_experts=8, top_k=2, d_expert_hidden=64,
+                        capacity_factor=8.0)
+        params = fmoe.fmoe_init(jax.random.PRNGKey(0), 32, cfg)
+        espec = jax.tree.map(lambda _: NamedSharding(mesh, P("model", None, None)),
+                             params["experts"])
+        rspec = jax.tree.map(lambda _: NamedSharding(mesh, P(None, None)),
+                             params["router"])
+        params = {"router": jax.device_put(params["router"], rspec),
+                  "experts": jax.device_put(params["experts"], espec)}
+        x = jax.random.normal(jax.random.PRNGKey(1), (8, 16, 32))
+        dist = fmoe.DistConfig(mesh, ("data", "model"))
+        def loss(p):
+            y, _ = fmoe.fmoe_apply(p, x, cfg, dist=dist)
+            return (y ** 2).mean()
+        with mesh:
+            g = jax.jit(jax.grad(loss))(params)
+        # router grad: replicated => every device shard identical (world tag)
+        rshards = [np.asarray(s.data) for s in g["router"]["w"].addressable_shards]
+        for s in rshards[1:]:
+            np.testing.assert_allclose(s, rshards[0], atol=1e-6)
+        # expert grad: sharded over model on dim 0 (none tag)
+        sh = g["experts"]["wi_gate"].sharding
+        assert "model" in (sh.spec[0] if isinstance(sh.spec[0], tuple) else (sh.spec[0],))
+        print("sync tags verified")
+    """))
+
+
+def test_train_step_runs_on_mesh():
+    print(_run("""
+        import jax, jax.numpy as jnp
+        from repro.configs import get_config, reduced
+        from repro.launch.mesh import make_local_mesh
+        from repro.launch.train import jit_train_step
+        from repro.models import lm
+        from repro.optim import AdamW
+        import dataclasses
+        cfg = reduced(get_config("arctic-480b"))
+        mesh = make_local_mesh(2, 4)
+        opt = AdamW()
+        step, pshard, oshard = jit_train_step(cfg, opt, mesh, global_batch=8,
+                                              seq_len=16)
+        params = jax.device_put(lm.init_params(jax.random.PRNGKey(0), cfg), pshard)
+        opt_state = jax.device_put(opt.init(params), oshard)
+        batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (8, 16), 0,
+                                              cfg.vocab_size)}
+        with mesh:
+            params, opt_state, m = step(params, opt_state, batch, jnp.int32(0))
+        loss = float(m["loss"])
+        assert loss > 0 and loss < 20
+        print("distributed train step ok, loss", loss)
+    """))
+
+
+def test_cache_seq_sharded_decode_matches_single_device():
+    """Window-sharded KV cache (§Perf decode opt) must be numerically
+    transparent: sharded decode == local decode."""
+    print(_run("""
+        import functools, jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.configs import get_config, reduced
+        from repro.launch.sharding import cache_specs
+        from repro.models import lm
+        import dataclasses
+        cfg = reduced(get_config("qwen2-72b"))
+        params = lm.init_params(jax.random.PRNGKey(0), cfg)
+        B, W = 8, 8192  # W >= model_axis*2048 so the seq-shard gate engages
+        cache = lm.init_cache(cfg, B, W)
+        toks = jax.random.randint(jax.random.PRNGKey(1), (B, 6), 0, cfg.vocab_size)
+        # local reference
+        ref_cache, outs = cache, []
+        for t in range(6):
+            lg, ref_cache, _ = lm.decode_step(params, cfg, toks[:, t:t+1],
+                                              jnp.int32(t), ref_cache)
+            outs.append(lg)
+        ref = jnp.concatenate(outs, 1)
+        # sharded: batch over data, window over model
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        specs = cache_specs(jax.eval_shape(lambda: lm.init_cache(cfg, B, W)),
+                            mesh, B, seq_shard=True)
+        flat = jax.tree.leaves(specs, is_leaf=lambda s: isinstance(s, P))
+        assert any("model" in str(s) for s in flat), specs  # gate engaged
+        cshard = jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                              is_leaf=lambda s: isinstance(s, P))
+        cache_s = jax.device_put(lm.init_cache(cfg, B, W), cshard)
+        step = jax.jit(functools.partial(lm.decode_step, cfg=cfg))
+        outs = []
+        with mesh:
+            for t in range(6):
+                lg, cache_s, _ = step(params, tokens=toks[:, t:t+1],
+                                      pos=jnp.int32(t), cache=cache_s)
+                outs.append(lg)
+        got = jnp.concatenate(outs, 1)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   atol=2e-3, rtol=2e-3)
+        print("cache-sharded decode ok")
+    """))
+
+
+def test_cross_pod_expert_parallelism_matches_local():
+    """§Perf multi-pod: experts sharded over (pod, model) — the tuple-axis
+    all-to-all must be numerically identical to the local layer."""
+    print(_run("""
+        import jax, jax.numpy as jnp
+        from repro.configs.base import MoEConfig
+        from repro.core import fmoe, naive
+        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+        cfg = MoEConfig(num_experts=8, top_k=2, d_expert_hidden=64,
+                        capacity_factor=8.0, num_shared_experts=1)
+        params = fmoe.fmoe_init(jax.random.PRNGKey(0), 32, cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (8, 16, 32))
+        y_ref = fmoe.fmoe_apply(params, x, cfg)[0]
+        dist = fmoe.DistConfig(mesh, ("pod", "data", "model"),
+                               expert_axis=("pod", "model"),
+                               constrain_tokens=True)
+        assert dist.mode == "a2a" and dist.expert_parallelism == 4
+        with mesh:
+            y, m = jax.jit(lambda p, x: fmoe.fmoe_apply(p, x, cfg, dist=dist))(params, x)
+        err = float(jnp.abs(y - y_ref).max())
+        assert err < 1e-5, err
+        # grads flow through the cross-pod a2a
+        def loss(p):
+            yy, mm = fmoe.fmoe_apply(p, x, cfg, dist=dist)
+            return (yy ** 2).mean() + 0.01 * mm.aux_loss
+        with mesh:
+            g = jax.jit(jax.grad(loss))(params)
+        import numpy as np
+        assert all(np.isfinite(np.asarray(l, np.float32)).all()
+                   for l in jax.tree.leaves(g))
+        print("cross-pod expert parallelism ok", err)
+    """))
+
+
+def test_hierarchical_a2a_equals_flat():
+    """Beyond-paper 2-hop all-to-all must move the same data as 1-hop."""
+    print(_run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core.comm import hierarchical_all_to_all
+        mesh = jax.make_mesh((2, 4), ("pod", "data"))
+        P = jax.sharding.PartitionSpec
+        def flat(x):
+            return jax.lax.all_to_all(x, ("pod", "data"), 0, 0, tiled=True)
+        def hier(x):
+            # (outer=pod, inner=data) layout: dim0 dest-pod, dim1 dest-data
+            y = x.reshape(2, 4, -1)
+            y = hierarchical_all_to_all(y, "data", "pod")
+            return y.reshape(8, -1)
+        # global (64, 16): local (8, 16) per device = one chunk per peer
+        x = jnp.arange(64 * 16, dtype=jnp.float32).reshape(64, 16)
+        f1 = jax.shard_map(flat, mesh=mesh, in_specs=P(("pod", "data"), None),
+                           out_specs=P(("pod", "data"), None), check_vma=False)
+        f2 = jax.shard_map(hier, mesh=mesh, in_specs=P(("pod", "data"), None),
+                           out_specs=P(("pod", "data"), None), check_vma=False)
+        with mesh:
+            y1, y2 = f1(x), f2(x)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2))
+        print("hierarchical a2a ok")
+    """))

@@ -1,0 +1,46 @@
+"""Every example script must run end-to-end (subprocess smoke)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(script, *args, timeout=560):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "examples", script), *args],
+        capture_output=True, text=True, env=env, timeout=timeout)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_quickstart():
+    out = _run("quickstart.py")
+    assert "ok" in out and "max |fast - naive|" in out
+
+
+def test_fmoefy_example():
+    out = _run("fmoefy_transformer.py")
+    assert "granite-3-2b-moe96" in out
+
+
+def test_expert_parallel_example():
+    out = _run("expert_parallel.py")
+    assert "all-to-all ops in compiled HLO: 3" in out
+
+
+def test_train_example_short():
+    out = _run("train_moe_lm.py", "--steps", "6", "--layers", "2",
+               "--d_model", "64", "--batch", "4", "--seq", "32")
+    assert "loss" in out
+
+
+def test_serve_example():
+    out = _run("serve_decode.py", "--batch", "2", "--gen", "4",
+               "--prompt_len", "4")
+    assert "tok/s" in out

@@ -1,0 +1,52 @@
+"""Smoke tests for the non-assigned pool configs: the paper's own fastmoe-gpt
+(96 experts), its dense baseline, and switch-base-128 (top-1 routing)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core import fmoe, naive
+from repro.launch.train import make_train_step
+from repro.models import lm
+from repro.optim import AdamW
+
+
+@pytest.mark.parametrize("name", ["fastmoe-gpt", "fastmoe-gpt-dense",
+                                  "switch-base-128"])
+def test_extra_arch_smoke(name):
+    cfg = reduced(get_config(name))
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                                          cfg.vocab_size)}
+    opt = AdamW(lr=1e-3)
+    step = jax.jit(make_train_step(cfg, opt))
+    p2, _, m = step(params, opt.init(params), batch, jnp.int32(0))
+    assert np.isfinite(float(m["loss"]))
+
+
+def test_top1_switch_gate_matches_naive():
+    """k=1 (Switch) path through dispatch/combine == naive loop."""
+    cfg = get_config("switch-base-128")
+    moe = dataclasses.replace(cfg.moe, num_experts=4, d_expert_hidden=32,
+                              capacity_factor=8.0)
+    params = fmoe.fmoe_init(jax.random.PRNGKey(0), 16, moe, act="gelu")
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, 16))
+    y, m = fmoe.fmoe_apply(params, x, moe, act="gelu")
+    y_ref = naive.moe_loop_masked(params, x, moe, act="gelu")
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=1e-5)
+    # top-1: every token contributes exactly one expert -> weights == 1
+    from repro.core.gate import gate_forward
+    g = gate_forward(params["router"], x.reshape(-1, 16), moe)
+    np.testing.assert_allclose(np.asarray(g.combine_weights), 1.0, rtol=1e-5)
+
+
+def test_paper_gpt_96_experts_config():
+    cfg = get_config("fastmoe-gpt")
+    assert cfg.moe.num_experts == 96 and cfg.moe.top_k == 2
+    # §5.4: d_h halved so active FLOPs ~= dense baseline
+    dense = get_config("fastmoe-gpt-dense")
+    ratio = cfg.active_param_count() / dense.param_count()
+    assert abs(ratio - 1.0) < 0.05, ratio

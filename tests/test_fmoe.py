@@ -1,0 +1,102 @@
+"""FMoE layer equivalence + gradient tests.
+
+The key correctness claim of the reordered computation (paper §4): the
+scatter->batched-GeMM->gather path is numerically identical to the naive
+per-expert formulation (paper Algorithm 1 / the Rau-2019 baseline)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import MoEConfig
+from repro.core import fmoe, naive
+
+CFG = MoEConfig(num_experts=8, top_k=2, d_expert_hidden=32, capacity_factor=8.0)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    params = fmoe.fmoe_init(jax.random.PRNGKey(0), 16, CFG)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, 16))
+    return params, x
+
+
+def test_capacity_matches_naive_loop(setup):
+    params, x = setup
+    y, _ = fmoe.fmoe_apply(params, x, CFG)
+    y_ref = naive.moe_loop_masked(params, x, CFG)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=1e-5)
+
+
+def test_capacity_matches_per_sample(setup):
+    params, x = setup
+    y, _ = fmoe.fmoe_apply(params, x, CFG)
+    y_ref = naive.moe_per_sample(params, x, CFG)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=1e-5)
+
+
+def test_ragged_matches_naive(setup):
+    params, x = setup
+    cfg = dataclasses.replace(CFG, dispatch="ragged")
+    y, _ = fmoe.fmoe_apply(params, x, cfg)
+    y_ref = naive.moe_loop_masked(params, x, CFG)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=1e-5)
+
+
+def test_pallas_expert_fn_matches(setup):
+    params, x = setup
+    y_e, _ = fmoe.fmoe_apply(params, x, CFG, impl="einsum")
+    y_p, _ = fmoe.fmoe_apply(params, x, CFG, impl="pallas")
+    np.testing.assert_allclose(np.asarray(y_e), np.asarray(y_p), atol=1e-4)
+
+
+@pytest.mark.parametrize("act", ["swiglu", "gelu"])
+def test_acts(act):
+    params = fmoe.fmoe_init(jax.random.PRNGKey(2), 16, CFG, act=act)
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 4, 16))
+    y, _ = fmoe.fmoe_apply(params, x, CFG, act=act)
+    y_ref = naive.moe_loop_masked(params, x, CFG, act=act)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=1e-5)
+
+
+def test_gradients_match_naive(setup):
+    params, x = setup
+
+    def loss_fast(p):
+        y, _ = fmoe.fmoe_apply(p, x, CFG)
+        return (y ** 2).mean()
+
+    def loss_naive(p):
+        return (naive.moe_loop_masked(p, x, CFG) ** 2).mean()
+
+    g1 = jax.grad(loss_fast)(params)
+    g2 = jax.grad(loss_naive)(params)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        np.asarray(a), np.asarray(b), atol=2e-5), g1, g2)
+
+
+def test_shared_experts_and_dense_residual():
+    cfg = dataclasses.replace(CFG, num_shared_experts=2, dense_residual=True)
+    params = fmoe.fmoe_init(jax.random.PRNGKey(4), 16, cfg, d_ff_dense=64)
+    x = jax.random.normal(jax.random.PRNGKey(5), (2, 4, 16))
+    y, _ = fmoe.fmoe_apply(params, x, cfg)
+    # removing shared/dense parts changes the output (they're live)
+    y_routed, _ = fmoe.fmoe_apply(
+        {k: v for k, v in params.items() if k in ("router", "experts")}, x, cfg)
+    assert not np.allclose(np.asarray(y), np.asarray(y_routed))
+
+
+def test_drop_metric_nonzero_at_tight_capacity():
+    cfg = dataclasses.replace(CFG, capacity_factor=0.25)
+    params = fmoe.fmoe_init(jax.random.PRNGKey(6), 16, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(7), (8, 16, 16))
+    _, m = fmoe.fmoe_apply(params, x, cfg)
+    assert float(m.drop_frac) > 0.0
+
+
+def test_metrics_load_sums_to_one(setup):
+    params, x = setup
+    _, m = fmoe.fmoe_apply(params, x, CFG)
+    np.testing.assert_allclose(float(m.load.sum()), 1.0, rtol=1e-5)

@@ -1,0 +1,79 @@
+"""Gate network unit + property tests (paper §2.1 Algorithm 1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import MoEConfig
+from repro.core.gate import gate_forward, gate_init
+
+
+def _mk(d=16, E=8, policy="softmax_topk", k=2, renorm=True):
+    cfg = MoEConfig(num_experts=E, top_k=k, d_expert_hidden=32,
+                    gate_policy=policy, renormalize=renorm)
+    params = gate_init(jax.random.PRNGKey(0), d, E)
+    return cfg, params
+
+
+@pytest.mark.parametrize("policy", ["softmax_topk", "topk_softmax"])
+def test_gate_shapes_and_ranges(policy):
+    cfg, params = _mk(policy=policy)
+    x = jax.random.normal(jax.random.PRNGKey(1), (32, 16))
+    g = gate_forward(params, x, cfg)
+    assert g.expert_ids.shape == (32, 2)
+    assert g.combine_weights.shape == (32, 2)
+    assert g.probs.shape == (32, 8)
+    assert bool(jnp.all((g.expert_ids >= 0) & (g.expert_ids < 8)))
+    np.testing.assert_allclose(np.asarray(g.probs.sum(-1)), 1.0, rtol=1e-5)
+
+
+def test_topk_picks_highest_prob():
+    cfg, params = _mk()
+    x = jax.random.normal(jax.random.PRNGKey(2), (64, 16))
+    g = gate_forward(params, x, cfg)
+    probs = np.asarray(g.probs)
+    ids = np.asarray(g.expert_ids)
+    for t in range(64):
+        top = set(np.argsort(-probs[t])[:2])
+        assert set(ids[t]) == top
+
+
+def test_renormalized_weights_sum_to_one():
+    cfg, params = _mk(renorm=True)
+    x = jax.random.normal(jax.random.PRNGKey(3), (16, 16))
+    g = gate_forward(params, x, cfg)
+    np.testing.assert_allclose(np.asarray(g.combine_weights.sum(-1)), 1.0,
+                               rtol=1e-5)
+
+
+def test_slots_are_distinct_experts():
+    cfg, params = _mk(k=4)
+    x = jax.random.normal(jax.random.PRNGKey(4), (64, 16))
+    g = gate_forward(params, x, cfg)
+    ids = np.asarray(g.expert_ids)
+    for row in ids:
+        assert len(set(row.tolist())) == len(row)
+
+
+@settings(max_examples=25, deadline=None)
+@given(T=st.integers(1, 64), E=st.sampled_from([2, 4, 8, 16]),
+       k=st.integers(1, 4))
+def test_gate_properties(T, E, k):
+    k = min(k, E)
+    cfg = MoEConfig(num_experts=E, top_k=k, d_expert_hidden=8)
+    params = gate_init(jax.random.PRNGKey(0), 8, E)
+    x = jax.random.normal(jax.random.PRNGKey(T), (T, 8))
+    g = gate_forward(params, x, cfg)
+    assert g.expert_ids.shape == (T, k)
+    w = np.asarray(g.combine_weights)
+    assert (w >= 0).all() and (w <= 1 + 1e-6).all()
+    np.testing.assert_allclose(w.sum(-1), 1.0, rtol=1e-4)
+
+
+def test_gate_deterministic_without_rng():
+    cfg, params = _mk()
+    x = jax.random.normal(jax.random.PRNGKey(5), (8, 16))
+    g1 = gate_forward(params, x, cfg)
+    g2 = gate_forward(params, x, cfg)
+    assert bool(jnp.all(g1.expert_ids == g2.expert_ids))

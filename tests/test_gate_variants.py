@@ -1,0 +1,121 @@
+"""Gate variants (noisy top-k, expert-choice) + load monitor + flash kernel."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import MoEConfig
+from repro.core import fmoe
+from repro.core.gate import (expert_choice_forward, expert_choice_moe,
+                             gate_init, noisy_topk_forward, noisy_topk_init)
+from repro.core.monitor import LoadMonitor, expert_placement
+
+
+CFG = MoEConfig(num_experts=8, top_k=2, d_expert_hidden=32)
+
+
+def test_noisy_topk_deterministic_without_rng():
+    params = noisy_topk_init(jax.random.PRNGKey(0), 16, 8)
+    x = jax.random.normal(jax.random.PRNGKey(1), (32, 16))
+    g1 = noisy_topk_forward(params, x, CFG)
+    g2 = noisy_topk_forward(params, x, CFG)
+    np.testing.assert_array_equal(np.asarray(g1.expert_ids),
+                                  np.asarray(g2.expert_ids))
+
+
+def test_noisy_topk_noise_changes_routing():
+    params = noisy_topk_init(jax.random.PRNGKey(0), 16, 8)
+    x = jax.random.normal(jax.random.PRNGKey(1), (256, 16))
+    g_clean = noisy_topk_forward(params, x, CFG)
+    g_noisy = noisy_topk_forward(params, x, CFG, rng=jax.random.PRNGKey(2))
+    assert not np.array_equal(np.asarray(g_clean.expert_ids),
+                              np.asarray(g_noisy.expert_ids))
+    np.testing.assert_allclose(np.asarray(g_noisy.combine_weights.sum(-1)),
+                               1.0, rtol=1e-5)
+
+
+def test_expert_choice_perfectly_balanced():
+    params = {"router": gate_init(jax.random.PRNGKey(0), 16, 8),
+              "experts": fmoe._ffn_init(jax.random.PRNGKey(1), 8, 16, 32,
+                                        "swiglu", jnp.float32)}
+    x = jax.random.normal(jax.random.PRNGKey(2), (4, 16, 16))
+    y, probs = expert_choice_moe(params, x, CFG, capacity_factor=2.0)
+    assert y.shape == x.shape
+    assert not bool(jnp.isnan(y).any())
+    # by construction every expert processes exactly C tokens
+    T = 64
+    C = int(T * 2.0 / 8)
+    idx, w, _ = expert_choice_forward(params["router"], x.reshape(-1, 16),
+                                      CFG, capacity=C)
+    assert idx.shape == (8, C)
+
+
+def test_load_monitor_tracks_imbalance():
+    from repro.core.balance import MoEMetrics
+    mon = LoadMonitor(4, ema=0.0)  # no smoothing: snapshot = last update
+    balanced = MoEMetrics(jnp.zeros(()), jnp.zeros(()),
+                          jnp.full((4,), 0.25), jnp.zeros(()))
+    mon.update(balanced)
+    assert mon.imbalance == pytest.approx(1.0)
+    skewed = MoEMetrics(jnp.zeros(()), jnp.zeros(()),
+                        jnp.array([0.7, 0.1, 0.1, 0.1]), jnp.array(0.2))
+    mon.update(skewed)
+    assert mon.imbalance == pytest.approx(2.8)
+    assert mon.snapshot()["drop_ema"] == pytest.approx(0.2)
+
+
+def test_expert_placement_balances_load():
+    load = np.array([8.0, 1.0, 7.0, 2.0, 6.0, 3.0, 5.0, 4.0])
+    place = expert_placement(8, 4, load)
+    # each worker gets exactly 2 experts
+    assert sorted(np.bincount(place, minlength=4).tolist()) == [2, 2, 2, 2]
+    worker_loads = np.zeros(4)
+    for e, w in enumerate(place):
+        worker_loads[w] += load[e]
+    # greedy: spread within 25% of ideal (=9.0)
+    assert worker_loads.max() <= 9.0 * 1.25
+
+
+# ---------------------------------------------------------------------------
+# Flash attention kernel vs oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("window", [1 << 30, 16])
+def test_flash_attention_kernel(dtype, window):
+    from repro.kernels import ops, ref
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    B, S, H, KV, dk = 2, 64, 8, 4, 32
+    q = jax.random.normal(ks[0], (B, S, H, dk)).astype(dtype)
+    k = jax.random.normal(ks[1], (B, S, KV, dk)).astype(dtype)
+    v = jax.random.normal(ks[2], (B, S, KV, dk)).astype(dtype)
+    y = ops.flash_attention(q, k, v, window=window, bq=16, bk=16)
+    y_ref = ref.flash_attention_ref(q, k, v, window=window)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32), atol=tol)
+
+
+def test_flash_attention_non_causal():
+    from repro.kernels import ops, ref
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (1, 32, 4, 16))
+    k = jax.random.normal(ks[1], (1, 32, 4, 16))
+    v = jax.random.normal(ks[2], (1, 32, 4, 16))
+    y = ops.flash_attention(q, k, v, window=1 << 30, causal=False, bq=8, bk=8)
+    y_ref = ref.flash_attention_ref(q, k, v, window=1 << 30, causal=False)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=2e-5)
+
+
+def test_flash_matches_model_blockwise():
+    """The kernel and the model's jnp blockwise scan agree (same window)."""
+    import repro.models.attention as A
+    from repro.kernels import ops
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (2, 48, 6, 16))
+    k = jax.random.normal(ks[1], (2, 48, 2, 16))
+    v = jax.random.normal(ks[2], (2, 48, 2, 16))
+    y_k = ops.flash_attention(q, k, v, window=12, bq=8, bk=8)
+    y_b = A.blockwise_attention(q, k, v, window=12, chunk=8)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_b), atol=2e-5)

@@ -1,0 +1,88 @@
+"""Prefill fast path: one full pass fills the decode cache; continuation
+must match token-by-token decoding exactly, for every cache family."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.launch.serve import generate
+from repro.models import lm
+
+ARCHS = ["smollm-360m", "deepseek-v2-236b", "rwkv6-7b", "hymba-1.5b",
+         "whisper-tiny"]
+B, S = 2, 10
+
+
+def _setup(name):
+    cfg = reduced(get_config(name))
+    if cfg.moe is not None:  # no-drop capacity so prefill==decode exactly
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+    kw, enc = {}, None
+    if cfg.family == "audio":
+        frames = jax.random.normal(
+            jax.random.PRNGKey(2), (B, cfg.encoder.num_frames, cfg.d_model))
+        kw["frames"] = frames
+        enc = lm.encode(params, cfg, frames)
+    return cfg, params, toks, kw, enc
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_prefill_cache_matches_decode_cache(name):
+    cfg, params, toks, kw, enc = _setup(name)
+    cache_p = lm.init_cache(cfg, B, 32, enc_out=enc)
+    logits_p, cache_p, _ = lm.prefill(params, cfg, toks, cache_p, **kw)
+
+    cache_d = lm.init_cache(cfg, B, 32, enc_out=enc)
+    for t in range(S):
+        logits_d, cache_d, _ = lm.decode_step(params, cfg, toks[:, t:t + 1],
+                                              jnp.int32(t), cache_d)
+    # last-position logits agree
+    np.testing.assert_allclose(np.asarray(logits_p[:, -1]),
+                               np.asarray(logits_d[:, 0]), atol=2e-4)
+    # continuation from either cache agrees
+    nxt = jnp.ones((B, 1), jnp.int32)
+    lp, _, _ = lm.decode_step(params, cfg, nxt, jnp.int32(S), cache_p)
+    ld, _, _ = lm.decode_step(params, cfg, nxt, jnp.int32(S), cache_d)
+    np.testing.assert_allclose(np.asarray(lp), np.asarray(ld), atol=2e-4)
+
+
+def test_prefill_ring_overflow_keeps_tail():
+    """Prompt longer than the ring: prefill keeps the last W entries."""
+    cfg = reduced(get_config("smollm-360m"))
+    cfg = dataclasses.replace(
+        cfg, attention=dataclasses.replace(cfg.attention, sliding_window=8))
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 20), 0, cfg.vocab_size)
+    W = 8
+    cache_p = lm.init_cache(cfg, 1, W)
+    _, cache_p, _ = lm.prefill(params, cfg, toks, cache_p)
+    cache_d = lm.init_cache(cfg, 1, W)
+    for t in range(20):
+        _, cache_d, _ = lm.decode_step(params, cfg, toks[:, t:t + 1],
+                                       jnp.int32(t), cache_d)
+    np.testing.assert_array_equal(np.asarray(cache_p["positions"]
+                                             if isinstance(cache_p, dict)
+                                             else cache_p.positions),
+                                  np.asarray(cache_d.positions))
+    nxt = jnp.ones((1, 1), jnp.int32)
+    lp, _, _ = lm.decode_step(params, cfg, nxt, jnp.int32(20), cache_p)
+    ld, _, _ = lm.decode_step(params, cfg, nxt, jnp.int32(20), cache_d)
+    np.testing.assert_allclose(np.asarray(lp), np.asarray(ld), atol=2e-4)
+
+
+def test_generate_prefill_equals_stepwise():
+    cfg = reduced(get_config("smollm-360m"))
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    prompt = jax.random.randint(jax.random.PRNGKey(3), (2, 6), 0,
+                                cfg.vocab_size)
+    fast = generate(params, cfg, prompt, steps=5, cache_len=32,
+                    use_prefill=True)
+    slow = generate(params, cfg, prompt, steps=5, cache_len=32,
+                    use_prefill=False)
+    np.testing.assert_array_equal(np.asarray(fast), np.asarray(slow))

@@ -19,12 +19,13 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (fig3_gemm, fig5_single_device, fig6_scaling,
-                            fig7_end_to_end, tab_capacity)
+                            fig7_end_to_end, fig8_imbalance, tab_capacity)
     suites = {
         "fig3": fig3_gemm.run,
         "fig5": fig5_single_device.run,
         "fig6": fig6_scaling.run,
         "fig7": fig7_end_to_end.run,
+        "fig8": fig8_imbalance.run,
         "tab_capacity": tab_capacity.run,
     }
     picked = args.only.split(",") if args.only else list(suites)

@@ -1,0 +1,6 @@
+#!/usr/bin/env sh
+# Lightweight CI: the import-safe tier-1 test subset (see tests/conftest.py
+# TIER1_MODULES).  Full verify: PYTHONPATH=src python -m pytest -x -q
+set -e
+cd "$(dirname "$0")/.."
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -q -m tier1 "$@"

@@ -1,0 +1,67 @@
+"""jax-version compatibility shims.
+
+The codebase targets current jax APIs; this module papers over the renames
+between jax 0.4.x and newer releases so the same source runs on both:
+
+* ``shard_map`` — ``jax.shard_map(..., check_vma=)`` vs
+  ``jax.experimental.shard_map.shard_map(..., check_rep=)``;
+* ``make_mesh`` / ``make_abstract_mesh`` — the ``axis_types=`` kwarg (and the
+  ``AxisType`` enum) only exist on newer jax; old ``AbstractMesh`` takes a
+  ``((name, size), ...)`` shape tuple;
+* ``tpu_compiler_params`` — ``pltpu.CompilerParams`` was spelled
+  ``pltpu.TPUCompilerParams`` before the rename.
+
+Keep every fallback import lazy so importing this module never touches jax
+device state (the dry-run contract of launch/mesh.py).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+try:  # newer jax
+    from jax.sharding import AxisType  # type: ignore[attr-defined]
+except ImportError:  # pragma: no cover - depends on installed jax
+    AxisType = None
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    """``jax.shard_map`` with the old-jax spelling as fallback."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_vma)
+
+
+def make_mesh(shape: tuple, axes: tuple):
+    """``jax.make_mesh`` with Auto axis types where supported."""
+    if AxisType is not None:
+        try:
+            return jax.make_mesh(shape, axes,
+                                 axis_types=(AxisType.Auto,) * len(axes))
+        except TypeError:  # pragma: no cover
+            pass
+    return jax.make_mesh(shape, axes)
+
+
+def make_abstract_mesh(shape: tuple, axes: tuple) -> Any:
+    """AbstractMesh across the signature change (old: ((name, size), ...))."""
+    from jax.sharding import AbstractMesh
+    if AxisType is not None:
+        try:
+            return AbstractMesh(shape, axes,
+                                axis_types=(AxisType.Auto,) * len(axes))
+        except TypeError:  # pragma: no cover
+            pass
+    return AbstractMesh(tuple(zip(axes, shape)))
+
+
+def tpu_compiler_params(**kwargs):
+    """pltpu.CompilerParams | pltpu.TPUCompilerParams, whichever exists."""
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None) or getattr(
+        pltpu, "TPUCompilerParams")
+    return cls(**kwargs)

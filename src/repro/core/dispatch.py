@@ -45,22 +45,35 @@ class CapacityPlan(NamedTuple):
 
 
 def make_capacity_plan(expert_ids: jax.Array, num_experts: int,
-                       capacity: int) -> CapacityPlan:
+                       capacity) -> CapacityPlan:
     """Assign buffer positions with slot-major priority (top-1 choices first),
-    matching GShard so lower-k choices survive overflow."""
+    matching GShard so lower-k choices survive overflow.
+
+    ``capacity`` may be a single int or a static per-expert sequence (the
+    placement subsystem shrinks the a2a experts' buffers independently of the
+    shadowed ones); ``plan.capacity`` is the buffer width = max over experts,
+    and dropped rows get position == width so scatter/gather skip them.
+    """
+    import numpy as np
     T, k = expert_ids.shape
+    if isinstance(capacity, (int, np.integer)):
+        caps, width = None, int(capacity)
+    else:
+        caps_np = np.asarray(capacity, np.int32)
+        assert caps_np.shape == (num_experts,), caps_np.shape
+        caps, width = jnp.asarray(caps_np), int(caps_np.max())
     # slot-major flatten: all slot-0 assignments precede slot-1, etc.
     flat = expert_ids.T.reshape(-1)  # (k*T,)
     onehot = jax.nn.one_hot(flat, num_experts, dtype=jnp.int32)  # (kT, E)
     # 0-indexed position of each row within its expert's arrival order
     pos_in_expert = jnp.cumsum(onehot, axis=0) - onehot
     pos = jnp.take_along_axis(pos_in_expert, flat[:, None], axis=1)[:, 0]
-    keep = pos < capacity
-    pos = jnp.where(keep, pos, capacity)  # out-of-range rows are dropped by scatter
+    keep = pos < (width if caps is None else caps[flat])
+    pos = jnp.where(keep, pos, width)  # out-of-range rows are dropped by scatter
     load = onehot.sum(axis=0)
     # back to token-major (T, k)
     unflatten = lambda a: a.reshape(k, T).T
-    return CapacityPlan(expert_ids, unflatten(pos), unflatten(keep), load, capacity)
+    return CapacityPlan(expert_ids, unflatten(pos), unflatten(keep), load, width)
 
 
 def dispatch_capacity(x: jax.Array, plan: CapacityPlan,

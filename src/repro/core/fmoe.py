@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.configs.base import MoEConfig
 from repro.core import dispatch as D
 from repro.core.balance import MoEMetrics, load_balance_loss, load_metrics, router_z_loss
@@ -41,6 +42,9 @@ class DistConfig(NamedTuple):
       constrain_tokens — pin the flat-token sharding for the shared/dense
         residual FFNs so XLA doesn't replicate the token array when leaving
         the shard_map region (fixes the SPMD "involuntary rematerialization").
+      placement — an ExpertPlacement (repro.placement.plan): params are in
+        its physical order, gate ids are remapped through its index table,
+        and shadowed hot experts run replicated outside the all-to-all.
     """
 
     mesh: Any
@@ -52,6 +56,7 @@ class DistConfig(NamedTuple):
     constrain_tokens: bool = False
     fsdp_axis: Optional[str] = None  # constrain bf16-cast weights sharded
     # so the per-layer FSDP gather moves bf16, not the f32 master (§Perf)
+    placement: Any = None  # Optional[repro.placement.plan.ExpertPlacement]
 
     @property
     def expert_axes(self) -> tuple:
@@ -173,11 +178,16 @@ def fmoe_init(rng: jax.Array, d_model: int, cfg: MoEConfig, *, act: str = "swigl
 
 
 def _moe_local(x: jax.Array, router: dict, experts: dict, cfg: MoEConfig,
-               act: str, expert_fn: Callable, rng=None):
+               act: str, expert_fn: Callable, rng=None, placement=None):
     T = x.shape[0]
     g = gate_forward(router, x, cfg, rng=rng)
+    expert_ids = g.expert_ids
+    if placement is not None and not placement.is_identity:
+        # experts arrive in the plan's physical order; route through the
+        # logical->physical index table (routing semantics unchanged)
+        expert_ids = jnp.asarray(placement.logical_to_physical)[expert_ids]
     if cfg.dispatch == "ragged":
-        plan = D.make_ragged_plan(g.expert_ids, cfg.num_experts)
+        plan = D.make_ragged_plan(expert_ids, cfg.num_experts)
         xs = D.dispatch_ragged(x, plan)  # (T*k, d) expert-sorted
         # ragged path uses the grouped-GEMM kernel directly (variable groups)
         from repro.kernels import ops
@@ -191,11 +201,13 @@ def _moe_local(x: jax.Array, router: dict, experts: dict, cfg: MoEConfig,
         load, drop = load_metrics(plan.group_sizes, None, T * cfg.top_k)
     else:
         C = D.expert_capacity(T, cfg.num_experts, cfg.top_k, cfg.capacity_factor)
-        plan = D.make_capacity_plan(g.expert_ids, cfg.num_experts, C)
+        plan = D.make_capacity_plan(expert_ids, cfg.num_experts, C)
         buf = D.dispatch_capacity(x, plan, cfg.num_experts)  # scatter (Fig 4)
         out = expert_fn(experts, buf, act)  # batched per-expert GeMM
         y = D.combine_capacity(out, plan, g.combine_weights)  # gather
         load, drop = load_metrics(plan.load, plan.keep, T * cfg.top_k)
+    if placement is not None and not placement.is_identity:
+        load = load[jnp.asarray(placement.logical_to_physical)]  # logical order
     metrics = MoEMetrics(load_balance_loss(g.probs, g.expert_ids, cfg.num_experts),
                          router_z_loss(g.logits), load, drop)
     return y, metrics
@@ -206,7 +218,7 @@ def _moe_local(x: jax.Array, router: dict, experts: dict, cfg: MoEConfig,
 # ---------------------------------------------------------------------------
 
 
-def _moe_a2a(x, router, experts, extra, cfg: MoEConfig, act, expert_fn,
+def _moe_a2a(x, router, experts, extra, shadow, cfg: MoEConfig, act, expert_fn,
              dist: DistConfig):
     """Tokens sharded over all mesh axes; experts sharded over ``expert_axis``.
 
@@ -214,24 +226,45 @@ def _moe_a2a(x, router, experts, extra, cfg: MoEConfig, act, expert_fn,
     axis -> local experts compute on (E_local, mp*C, d) -> reverse all-to-all
     -> combine.  The Fig-2 "exchange sizes" step survives as the counts
     all-to-all feeding the load monitor.
+
+    With a ``dist.placement``, ``experts`` hold only the *owned* physical
+    slots and ``shadow`` the replicated hot experts: gate ids go through the
+    plan's index table, owned buffer rows take the (possibly shrunk) a2a,
+    and shadowed rows are computed locally from the broadcast ``shadow``
+    weights — skipped in the exchanged payload entirely.
     """
+    from repro.placement.shadow import merge_outputs, shadow_spec, split_buffer
+
     ax = dist.expert_axis
     mp = dist.expert_parallelism
     E = cfg.num_experts
-    E_local = E // mp
     t, d = x.shape
+    place = dist.placement
+    if place is not None and place.is_identity:
+        place = None
 
     g = gate_forward(router, x, cfg)
     C = D.expert_capacity(t, E, cfg.top_k, cfg.capacity_factor)
-    plan = D.make_capacity_plan(g.expert_ids, E, C)
-    buf = D.dispatch_capacity(x, plan, E)  # (E, C, d)
+    spec = shadow_spec(place, E, C)
+    E_ns = spec.num_owned  # physical slots [0, E_ns) take the a2a
+    E_local = E_ns // mp
+    Cm = spec.main_capacity
+    expert_ids = g.expert_ids
+    if place is not None:
+        expert_ids = jnp.asarray(place.logical_to_physical)[expert_ids]
+        plan = D.make_capacity_plan(expert_ids, E,
+                                    tuple(int(c) for c in spec.capacities))
+    else:
+        plan = D.make_capacity_plan(expert_ids, E, C)
+    buf = D.dispatch_capacity(x, plan, E)  # (E, width, d)
+    buf, buf_shadow = split_buffer(buf, spec)
 
-    # ---- global data exchange (Fig 2) ----
-    counts = plan.load.reshape(mp, E_local)
+    # ---- global data exchange (Fig 2), owned experts only ----
+    counts = plan.load[:E_ns].reshape(mp, E_local)
     incoming = jax.lax.all_to_all(counts, ax, 0, 0, tiled=True)  # (mp, E_local) per-src
-    buf = buf.reshape(mp, E_local, C, d)
+    buf = buf.reshape(mp, E_local, Cm, d)
     buf = jax.lax.all_to_all(buf, ax, 0, 0, tiled=True)  # (mp=src, E_local, C, d)
-    buf = buf.transpose(1, 0, 2, 3).reshape(E_local, mp * C, d)
+    buf = buf.transpose(1, 0, 2, 3).reshape(E_local, mp * Cm, d)
 
     if dist.tp_axis:
         # Expert-internal TP: expert hidden dims stay sharded over tp_axis
@@ -245,9 +278,13 @@ def _moe_a2a(x, router, experts, extra, cfg: MoEConfig, act, expert_fn,
     else:
         out = expert_fn(experts, buf, act)  # (E_local, mp*C, d)
 
-    out = out.reshape(E_local, mp, C, -1).transpose(1, 0, 2, 3)
+    out = out.reshape(E_local, mp, Cm, -1).transpose(1, 0, 2, 3)
     out = jax.lax.all_to_all(out, ax, 0, 0, tiled=True)  # back to (mp, E_local, C, d)
-    out = out.reshape(E, C, -1)
+    out = out.reshape(E_ns, Cm, -1)
+
+    # ---- shadowed hot experts: every rank, own tokens, zero a2a bytes ----
+    out_shadow = expert_fn(shadow, buf_shadow, act) if shadow else None
+    out = merge_outputs(out, out_shadow, spec)
     y = D.combine_capacity(out, plan, g.combine_weights)
 
     # shared-expert / dense-residual FFNs on the LOCAL token shard with
@@ -260,9 +297,18 @@ def _moe_a2a(x, router, experts, extra, cfg: MoEConfig, act, expert_fn,
     axes = tuple(dist.token_axes)
     other_axes = tuple(a for a in axes if a not in dist.expert_axes)
     recv_local = incoming.sum(0)  # (E_local,) tokens arriving at my experts
-    load_global = jax.lax.all_gather(recv_local, ax, tiled=True)  # (E,)
+    load_global = jax.lax.all_gather(recv_local, ax, tiled=True)  # (E_ns,)
     if other_axes:
         load_global = jax.lax.psum(load_global, other_axes)
+    if spec.num_shadow:
+        # shadowed experts never cross the wire; their global load is the
+        # psum of local assignment counts over every token-holding axis
+        shadow_load = jax.lax.psum(plan.load[E_ns:], axes)
+        load_global = jnp.concatenate([load_global,
+                                       shadow_load.astype(load_global.dtype)])
+    if place is not None:
+        # back to logical expert order for the monitor
+        load_global = load_global[jnp.asarray(place.logical_to_physical)]
     load, _ = load_metrics(load_global, None,
                            jnp.maximum(load_global.sum(), 1))
     _, drop = load_metrics(plan.load, plan.keep, t * cfg.top_k)
@@ -275,20 +321,30 @@ def _moe_a2a(x, router, experts, extra, cfg: MoEConfig, act, expert_fn,
     return y, metrics
 
 
-def _moe_psum(x, router, experts, extra, cfg: MoEConfig, act, expert_fn,
-              dist: DistConfig):
+def _moe_psum(x, router, experts, extra, shadow, cfg: MoEConfig, act,
+              expert_fn, dist: DistConfig):
     """Tokens NOT sharded over the expert axis (decode): every rank gates all
     its tokens, computes only its local experts, partial outputs psum over the
-    expert axis.  No all-to-all; communication = one psum of (t, d)."""
+    expert axis.  No all-to-all; communication = one psum of (t, d).
+
+    A ``dist.placement`` permutation is honored (params are physical, gate
+    ids remapped); shadowing is pointless here — there is no a2a to skip —
+    so plans with shadows are rejected in fmoe_apply.
+    """
+    del shadow  # psum mode never shadows (validated in fmoe_apply)
     ax = dist.expert_axis
     mp = dist.expert_parallelism
     E = cfg.num_experts
     E_local = E // mp
     t = x.shape[0]
+    place = dist.placement
 
     g = gate_forward(router, x, cfg)
+    expert_ids = g.expert_ids
+    if place is not None and not place.is_identity:
+        expert_ids = jnp.asarray(place.logical_to_physical)[expert_ids]
     C = D.expert_capacity(t, E, cfg.top_k, cfg.capacity_factor)
-    plan = D.make_capacity_plan(g.expert_ids, E, C)
+    plan = D.make_capacity_plan(expert_ids, E, C)
     buf = D.dispatch_capacity(x, plan, E)  # (E, C, d)
     rank = 0  # row-major rank within the (possibly tuple) expert axis group
     for a in dist.expert_axes:
@@ -305,6 +361,8 @@ def _moe_psum(x, router, experts, extra, cfg: MoEConfig, act, expert_fn,
 
     axes = tuple(dist.token_axes)
     load, drop = load_metrics(plan.load, plan.keep, t * cfg.top_k)
+    if place is not None and not place.is_identity:
+        load = load[jnp.asarray(place.logical_to_physical)]  # logical order
     pm = (lambda v: jax.lax.pmean(v, axes)) if axes else (lambda v: v)
     metrics = MoEMetrics(pm(load_balance_loss(g.probs, g.expert_ids, E)),
                          pm(router_z_loss(g.logits)), pm(load), pm(drop))
@@ -318,12 +376,16 @@ def _moe_psum(x, router, experts, extra, cfg: MoEConfig, act, expert_fn,
 
 def fmoe_apply(params: dict, x: jax.Array, cfg: MoEConfig, *, act: str = "swiglu",
                dist: Optional[DistConfig] = None, impl: str = "einsum",
-               rng: Optional[jax.Array] = None):
+               rng: Optional[jax.Array] = None, placement=None):
     """Apply the MoE FFN to ``x`` of shape (..., d_model).
 
     Returns ``(y, MoEMetrics)``.  ``impl`` selects the expert_fn ("einsum" |
     "pallas"); ``dist=None`` runs the single-worker §4 path, otherwise the
     §3.2 distributed path (mode picked by ``dist``).
+
+    ``placement`` (or ``dist.placement``) is an ExpertPlacement: ``params``
+    must already be in its physical order (repro.placement.migrate); routing
+    stays in logical expert space via the plan's index table.
     """
     expert_fn = EXPERT_FNS[impl]
     shape = x.shape
@@ -332,10 +394,34 @@ def fmoe_apply(params: dict, x: jax.Array, cfg: MoEConfig, *, act: str = "swiglu
 
     residual_keys = [k for k in ("shared", "dense") if k in params]
     if dist is None:
-        y, metrics = _moe_local(xf, router, experts, cfg, act, expert_fn, rng)
+        y, metrics = _moe_local(xf, router, experts, cfg, act, expert_fn, rng,
+                                placement=placement)
         for k in residual_keys:
             y = y + dense_ffn(params[k], xf, act)
     else:
+        place = dist.placement if dist.placement is not None else placement
+        if place is not None:
+            if place.num_experts != cfg.num_experts:
+                raise ValueError(
+                    f"placement has {place.num_experts} experts, "
+                    f"config has {cfg.num_experts}")
+            if place.num_ranks != dist.expert_parallelism:
+                raise ValueError(
+                    f"placement built for {place.num_ranks} ranks, mesh "
+                    f"expert parallelism is {dist.expert_parallelism}")
+            if place.num_shadow:
+                if dist.tp_axis:
+                    raise NotImplementedError(
+                        "expert shadowing + expert-internal TP")
+                if dist.mode != "a2a":
+                    raise NotImplementedError(
+                        "expert shadowing requires the a2a mode")
+                if (place.num_owned % dist.expert_parallelism
+                        or place.num_owned == 0):
+                    raise ValueError(
+                        f"owned experts {place.num_owned} must be a positive "
+                        f"multiple of {dist.expert_parallelism}")
+            dist = dist._replace(placement=place)
         local = _moe_a2a if dist.mode == "a2a" else _moe_psum
         tok_spec = P(dist.token_axes if dist.token_axes else None, None)
 
@@ -359,6 +445,15 @@ def fmoe_apply(params: dict, x: jax.Array, cfg: MoEConfig, *, act: str = "swiglu
                 v, NamedSharding(dist.mesh, fspec[k]))
                 for k, v in experts.items()}
 
+        # shadowed hot experts: slice off the replicated tail (the broadcast
+        # happens at the shard_map boundary via the P(None) in_spec)
+        shadow = {}
+        if dist.placement is not None and dist.placement.num_shadow:
+            E_ns = dist.placement.num_owned
+            shadow = {k: v[E_ns:] for k, v in experts.items()}
+            experts = {k: v[:E_ns] for k, v in experts.items()}
+        sspec = {k: P(None, None, None) for k in shadow}
+
         if dist.constrain_tokens:
             # shared/dense residual FFNs run INSIDE shard_map on local tokens
             # with replicated weights (§Perf fix — see _moe_a2a)
@@ -370,13 +465,13 @@ def fmoe_apply(params: dict, x: jax.Array, cfg: MoEConfig, *, act: str = "swiglu
                  for k, v in extra.items()}
         fn = functools.partial(local, cfg=cfg, act=act, expert_fn=expert_fn, dist=dist)
         mspec = MoEMetrics(P(), P(), P(None), P())
-        y, metrics = jax.shard_map(
+        y, metrics = compat.shard_map(
             fn, mesh=dist.mesh,
             in_specs=(tok_spec, jax.tree.map(lambda _: P(None, None), router),
-                      espec, xspec),
+                      espec, xspec, sspec),
             out_specs=(tok_spec, mspec),
             check_vma=False,
-        )(xf, router, experts, extra)
+        )(xf, router, experts, extra, shadow)
         # paper-faithful baseline: residuals outside shard_map (auto-sharded)
         for k in residual_keys:
             y = y + dense_ffn(params[k], xf, act)

@@ -63,18 +63,24 @@ def expert_placement(num_experts: int, num_workers: int,
                      load: Optional[np.ndarray] = None) -> list:
     """Greedy load-aware expert->worker placement (beyond-paper): given a
     measured per-expert load, balance the sum of loads per worker instead of
-    FastMoE's contiguous blocks.  Returns worker id per expert."""
+    FastMoE's contiguous blocks.  Returns worker id per expert.
+
+    When ``num_experts % num_workers != 0`` the remainder is spread one extra
+    expert per worker (caps differ by at most 1), so every expert is placed.
+    """
     if load is None:
         return [e * num_workers // num_experts for e in range(num_experts)]
     order = np.argsort(-np.asarray(load, np.float64))
     totals = np.zeros(num_workers)
     counts = np.zeros(num_workers, np.int64)
-    cap = num_experts // num_workers
+    base, rem = divmod(num_experts, num_workers)
+    caps = np.full(num_workers, base, np.int64)
+    caps[:rem] += 1
     place = np.zeros(num_experts, np.int64)
     for e in order:
-        # lightest worker with remaining capacity (keeps E/W experts each)
-        for w in np.argsort(totals):
-            if counts[w] < cap:
+        # lightest worker with remaining capacity (caps within +-1 of E/W)
+        for w in np.argsort(totals, kind="stable"):
+            if counts[w] < caps[w]:
                 place[e] = w
                 totals[w] += load[e]
                 counts[w] += 1

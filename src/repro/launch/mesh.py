@@ -5,24 +5,24 @@ as (data=16, model=16); multi-pod adds a leading "pod" axis (2 pods = 512).
 Defined as functions (never module-level constants) so importing this module
 never touches jax device state — the dry-run must set
 ``--xla_force_host_platform_device_count`` *before* first jax init.
+
+Mesh construction goes through ``repro.compat`` so the ``axis_types`` kwarg
+(absent on jax 0.4.x) degrades to a plain ``Mesh``.
 """
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
+from repro import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def make_local_mesh(data: int = 1, model: int = 1):
     """Small mesh over however many (fake) devices a test process has."""
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return compat.make_mesh((data, model), ("data", "model"))
 
 
 def data_axes(mesh) -> tuple:

@@ -201,7 +201,9 @@ def spec_for(path: str, shape: tuple, mesh, *, stacked: bool,
 
 
 def _flat_paths(tree, prefix=""):
-    if isinstance(tree, dict):
+    if isinstance(tree, P):  # old-jax PartitionSpec subclasses tuple: a leaf
+        yield prefix[:-1], tree
+    elif isinstance(tree, dict):
         for k, v in tree.items():
             yield from _flat_paths(v, f"{prefix}{k}/")
     elif hasattr(tree, "_fields"):

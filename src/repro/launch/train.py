@@ -33,7 +33,8 @@ def moe_dist(cfg: ModelConfig, mesh, num_tokens: int, *,
     including the expert axis; psum otherwise (decode-time small batches);
     None when the config has no MoE or the mesh has no expert axis.
     ``opts`` toggles the §Perf beyond-paper optimizations (expert_tp,
-    constrain_tokens).
+    constrain_tokens) and may carry an ExpertPlacement under ``placement``
+    (attached only on the a2a path — shadowing needs an a2a to skip).
     """
     opts = opts or {}
     if cfg.moe is None or "model" not in mesh.axis_names:
@@ -61,7 +62,8 @@ def moe_dist(cfg: ModelConfig, mesh, num_tokens: int, *,
     for a in mesh.axis_names:
         total *= mesh.shape[a]
     if num_tokens % total == 0:
-        return DistConfig(mesh, all_axes(mesh), **extra)
+        return DistConfig(mesh, all_axes(mesh), placement=opts.get("placement"),
+                          **extra)
     d_axes = data_axes(mesh)
     dsize = 1
     for a in d_axes:
@@ -116,12 +118,19 @@ def make_train_step(cfg: ModelConfig, opt: AdamW, *, dist=None,
 
 def jit_train_step(cfg: ModelConfig, opt: AdamW, mesh, global_batch: int,
                    seq_len: int, *, num_microbatches: int = 1,
-                   opts: Optional[dict] = None):
-    """Fully sharding-annotated jitted train step for ``mesh``."""
+                   opts: Optional[dict] = None, placement=None):
+    """Fully sharding-annotated jitted train step for ``mesh``.
+
+    ``placement`` re-jits the step under a migrated expert layout (the
+    replan hook swaps it while param/opt shardings stay identical).
+    """
     from repro.launch.sharding import option_overrides
+    opts = dict(opts or {})
+    if placement is not None:
+        opts["placement"] = placement
     rng = jax.random.PRNGKey(0)
-    rcfg = cfg if (opts or {}).get("head_aware") else None
-    with option_overrides(opts or {}, mesh):
+    rcfg = cfg if opts.get("head_aware") else None
+    with option_overrides(opts, mesh):
         params_shape = jax.eval_shape(lambda: lm.init_params(rng, cfg))
         pshard = tree_shardings(params_shape, mesh, cfg=rcfg)
         oshard_shape = jax.eval_shape(opt.init, params_shape)
@@ -144,6 +153,91 @@ def jit_train_step(cfg: ModelConfig, opt: AdamW, mesh, global_batch: int,
 
 
 # ---------------------------------------------------------------------------
+# Periodic replan-and-migrate hook (placement subsystem, paper §6 follow-on)
+# ---------------------------------------------------------------------------
+
+
+class ReplanHook:
+    """Closes the load-balance loop: LoadMonitor -> PlacementController ->
+    migrate params/opt state -> re-jit the train step under the new layout.
+
+    Call :meth:`observe` every step with the step metrics; when the
+    controller decides a better placement pays for its migration, the hook
+    permutes the live param/optimizer trees (checkpoint-compatible — see
+    repro.placement.migrate.to_logical) and returns a freshly jitted step.
+    """
+
+    def __init__(self, cfg: ModelConfig, opt: AdamW, mesh, global_batch: int,
+                 seq_len: int, *, every: int = 200,
+                 num_microbatches: int = 1, opts: Optional[dict] = None):
+        from repro.core.dispatch import expert_capacity
+        from repro.core.monitor import LoadMonitor
+        from repro.placement import PlacementController, identity_placement
+
+        self.cfg, self.opt, self.mesh = cfg, opt, mesh
+        self.global_batch, self.seq_len = global_batch, seq_len
+        self.num_microbatches, self.opts = num_microbatches, opts
+        moe = cfg.moe
+        n_dev = 1
+        for a in mesh.axis_names:
+            n_dev *= mesh.shape[a]
+        # a plan only executes if moe_dist threads it into the a2a path for
+        # this (config, mesh, shape, opts) combo; otherwise migrating would
+        # permute params under a step that never remaps gate ids.  Probe with
+        # the SAME opts observe() will re-jit with, and size the controller
+        # to the probe's actual expert parallelism (expert_pod may widen it).
+        probe = moe_dist(cfg, mesh, global_batch * seq_len,
+                         opts={**dict(opts or {}),
+                               "placement": identity_placement(
+                                   moe.num_experts, 1)})
+        self.enabled = (probe is not None and probe.placement is not None
+                        and probe.mode == "a2a")
+        ranks = probe.expert_parallelism if self.enabled else 1
+        # per-gate token count: the flat shard _moe_a2a sees per microbatch
+        t_local = max(1, global_batch * seq_len // n_dev // num_microbatches)
+        cap = expert_capacity(t_local, moe.num_experts, moe.top_k,
+                              moe.capacity_factor)
+        self.monitor = LoadMonitor(moe.num_experts)
+        self.controller = PlacementController(
+            self.monitor, ranks, d_model=cfg.d_model,
+            d_hidden=moe.d_expert_hidden, capacity=cap,
+            capacity_factor=moe.capacity_factor,
+            every=every if self.enabled else 0)
+        # fetch load to host only on sampled steps: a per-step device_get
+        # would serialize host and device for a decision made every `every`
+        self.sync_every = max(1, every // 16)
+
+    @property
+    def placement(self):
+        return self.controller.current
+
+    def observe(self, step: int, metrics: dict, params, opt_state):
+        """Returns (params, opt_state, new_step_fn | None)."""
+        from repro.core.balance import MoEMetrics
+        from repro.placement import migrate
+
+        if ("load" in metrics and self.controller.every
+                and step % self.sync_every == 0):
+            # device_get lands here (and only here) when metrics are device
+            # arrays: the monitor EMA samples every sync_every-th step
+            m = MoEMetrics(0.0, 0.0,
+                           jax.device_get(metrics["load"]),
+                           jax.device_get(metrics.get("drop_frac", 0.0)))
+            self.monitor.update(m)
+        old = self.controller.current
+        new = self.controller.maybe_replan(step)
+        if new is None:
+            return params, opt_state, None
+        step_fn, pshard, oshard = jit_train_step(
+            self.cfg, self.opt, self.mesh, self.global_batch, self.seq_len,
+            num_microbatches=self.num_microbatches, opts=self.opts,
+            placement=new)
+        params = jax.device_put(migrate(params, old, new), pshard)
+        opt_state = jax.device_put(migrate(opt_state, old, new), oshard)
+        return params, opt_state, step_fn
+
+
+# ---------------------------------------------------------------------------
 # CLI
 # ---------------------------------------------------------------------------
 
@@ -159,16 +253,42 @@ def main() -> None:
                     help="train the reduced CPU-scale variant")
     ap.add_argument("--log_every", type=int, default=10)
     ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--mesh", default="",
+                    help="DATAxMODEL mesh, e.g. 1x4 (requires that many "
+                         "devices; on CPU set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
+    ap.add_argument("--replan_every", type=int, default=0,
+                    help="steps between expert-placement replans "
+                         "(0 = off; needs --mesh and an MoE arch)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced(cfg, num_layers=4, d_model=256)
     opt = AdamW(lr=args.lr)
-    params = lm.init_params(jax.random.PRNGKey(0), cfg)
-    opt_state = opt.init(params)
-    step_fn = jax.jit(make_train_step(cfg, opt,
-                                      num_microbatches=args.microbatches))
+
+    hook = None
+    if args.mesh:
+        d, m = (int(v) for v in args.mesh.split("x"))
+        mesh = make_local_mesh(d, m)
+        step_fn, pshard, oshard = jit_train_step(
+            cfg, opt, mesh, args.batch, args.seq,
+            num_microbatches=args.microbatches)
+        params = jax.device_put(lm.init_params(jax.random.PRNGKey(0), cfg),
+                                pshard)
+        opt_state = jax.device_put(opt.init(params), oshard)
+        if args.replan_every and cfg.moe is not None and m > 1:
+            hook = ReplanHook(cfg, opt, mesh, args.batch, args.seq,
+                              every=args.replan_every,
+                              num_microbatches=args.microbatches)
+            if not hook.enabled:  # no a2a path here: skip the per-step sync
+                print("replan disabled: placement needs the a2a expert path")
+                hook = None
+    else:
+        params = lm.init_params(jax.random.PRNGKey(0), cfg)
+        opt_state = opt.init(params)
+        step_fn = jax.jit(make_train_step(cfg, opt,
+                                          num_microbatches=args.microbatches))
 
     data = SyntheticLM(cfg.vocab_size, args.seq)
     t0 = time.time()
@@ -178,6 +298,15 @@ def main() -> None:
         batch = {k: jnp.asarray(v) for k, v in batch.items()}
         params, opt_state, metrics = step_fn(params, opt_state, batch,
                                              jnp.int32(step))
+        if hook is not None:
+            params, opt_state, new_fn = hook.observe(step, metrics, params,
+                                                     opt_state)
+            if new_fn is not None:
+                step_fn = new_fn
+                p = hook.placement
+                print(f"step {step:5d} replan: shadow={p.num_shadow} "
+                      f"cap_scale={p.capacity_scale:.2f} "
+                      f"imbalance={hook.monitor.imbalance:.2f}")
         if step % args.log_every == 0:
             print(f"step {step:5d} loss {float(metrics['loss']):.4f} "
                   f"gnorm {float(metrics['grad_norm']):.3f} "

@@ -1,0 +1,20 @@
+"""Dynamic expert placement & shadowing (closing FastMoE §6's open loop).
+
+plan.py    — ExpertPlacement + roofline cost model + PlacementController
+migrate.py — permute live params / optimizer state between layouts
+shadow.py  — replicated hot-expert execution, skipped in the all-to-all
+"""
+from repro.placement.migrate import (from_logical, migrate,
+                                     router_index_table, to_logical)
+from repro.placement.plan import (ExpertPlacement, PlacementController,
+                                  identity_placement, placement_cost,
+                                  plan_placement)
+from repro.placement.shadow import (ShadowSpec, merge_outputs, shadow_spec,
+                                    split_buffer)
+
+__all__ = [
+    "ExpertPlacement", "PlacementController", "ShadowSpec", "from_logical",
+    "identity_placement", "merge_outputs", "migrate", "placement_cost",
+    "plan_placement", "router_index_table", "shadow_spec", "split_buffer",
+    "to_logical",
+]

@@ -1,0 +1,81 @@
+"""Apply an ExpertPlacement to live params / optimizer state.
+
+A migration is a pure permutation of the expert dimension: physical slot
+``p`` holds logical expert ``plan.physical_to_logical[p]``.  The router is
+*not* rewritten — the plan's ``logical_to_physical`` index table remaps the
+gate's expert ids at dispatch time (core/fmoe.py), so routing semantics (and
+checkpoints, which store logical order via :func:`to_logical`) are unchanged.
+
+Works on a single MoE layer's ``params["experts"]`` dict, on full LM trees
+(stacked ``(L, E, ...)`` expert leaves are permuted on dim 1), and on AdamW
+state (whose mu/nu mirror the param tree).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.placement.plan import ExpertPlacement
+
+
+def _expert_axis(path: tuple, shape: tuple, num_experts: int) -> int | None:
+    """Axis of the expert dim for a leaf under an ``experts`` subtree.
+
+    Per-layer expert params are ``(E, ...)``; LM trees stack layers in front
+    (``(L, E, ...)``, see launch/sharding.py), so prefer axis 1 when both
+    leading dims equal E (L == E ambiguity).
+    """
+    if not any("experts" in str(k) for k in path):
+        return None
+    if len(shape) >= 4 and shape[1] == num_experts:  # stacked (L, E, d, h)
+        return 1
+    if shape and shape[0] == num_experts:  # per-layer (E, d, h)
+        return 0
+    if len(shape) >= 2 and shape[1] == num_experts:
+        return 1
+    return None
+
+
+def _permute_tree(tree: Any, idx: np.ndarray, num_experts: int) -> Any:
+    take = jnp.asarray(idx, jnp.int32)
+
+    def leaf(path, x):
+        ax = _expert_axis(path, x.shape, num_experts)
+        if ax is None:
+            return x
+        return jnp.take(x, take, axis=ax)
+
+    return jax.tree_util.tree_map_with_path(leaf, tree)
+
+
+def migrate(tree: Any, old: ExpertPlacement, new: ExpertPlacement) -> Any:
+    """Re-layout a tree from ``old``'s physical order into ``new``'s.
+
+    ``tree`` may be a layer's params, a full LM param tree, or optimizer
+    state — any pytree whose expert leaves live under an ``experts`` key.
+    new_phys[p] = old_phys[old.l2p[new.p2l[p]]].
+    """
+    if old.num_experts != new.num_experts:
+        raise ValueError((old.num_experts, new.num_experts))
+    idx = old.logical_to_physical[np.asarray(new.physical_to_logical,
+                                             np.int32)]
+    return _permute_tree(tree, idx, new.num_experts)
+
+
+def to_logical(tree: Any, plan: ExpertPlacement) -> Any:
+    """Physical -> logical order (the checkpoint-compatible layout)."""
+    return _permute_tree(tree, plan.logical_to_physical, plan.num_experts)
+
+
+def from_logical(tree: Any, plan: ExpertPlacement) -> Any:
+    """Logical -> physical order (what the executing layer consumes)."""
+    return _permute_tree(tree, np.asarray(plan.physical_to_logical, np.int32),
+                         plan.num_experts)
+
+
+def router_index_table(plan: ExpertPlacement) -> np.ndarray:
+    """The logical->physical table the gate output is mapped through."""
+    return plan.logical_to_physical

@@ -1,0 +1,267 @@
+"""Expert placement plans — turning measured load into an executable layout.
+
+FastMoE §6 leaves the load-balance *actuator* as future work ("the work of
+load-balance monitor ... is in progress"); this module closes the loop the
+way the StableMoE lineage does (imbalanced all2all / expert allreduce /
+model migration): from a :class:`repro.core.monitor.LoadMonitor` load vector,
+compute an :class:`ExpertPlacement` that
+
+* permutes logical experts into a *physical* order so each rank owns a
+  load-balanced contiguous block (the greedy placer from core/monitor.py);
+* marks the hottest experts as **shadowed**: replicated on every rank,
+  computed locally from broadcast weights, and skipped in the all-to-all
+  payload (repro/placement/shadow.py);
+* optionally shrinks the a2a capacity buffer to fit the residual (non-shadow)
+  load peak.
+
+The shadow set is chosen by a roofline cost model (launch/roofline.py
+constants): all-to-all bytes saved per step vs. the per-step cost of keeping
+the replicas in sync (grad all-reduce of shadow weights + amortized weight
+broadcast + extra HBM weight reads).
+
+Routing semantics are unchanged: the router still scores *logical* experts;
+``logical_to_physical`` is the index table applied after top-k (see
+core/fmoe.py), and migrate.py moves params/optimizer state between layouts.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import numpy as np
+
+from repro.core.monitor import expert_placement as greedy_placement
+from repro.launch.roofline import HBM_BW, ICI_BW, PEAK_FLOPS
+
+
+def _round8(n: float) -> int:
+    return max(8, int(-(-int(n) // 8) * 8))
+
+
+class ExpertPlacement(NamedTuple):
+    """A physical expert layout for ``num_ranks`` expert-parallel ranks.
+
+    Physical slots ``[0, E - num_shadow)`` are owned experts, laid out as
+    contiguous per-rank blocks of ``(E - num_shadow) // num_ranks``; slots
+    ``[E - num_shadow, E)`` are shadowed (replicated on every rank, hottest
+    first).  ``num_shadow`` is always a multiple of ``num_ranks`` so the
+    owned block stays divisible for the all-to-all reshape.
+    """
+
+    num_experts: int
+    num_ranks: int
+    physical_to_logical: tuple  # len E — logical expert in each physical slot
+    num_shadow: int = 0
+    capacity_scale: float = 1.0  # a2a buffer capacity multiplier (<= 1)
+
+    @property
+    def num_owned(self) -> int:
+        return self.num_experts - self.num_shadow
+
+    @property
+    def logical_to_physical(self) -> np.ndarray:
+        l2p = np.empty(self.num_experts, np.int32)
+        l2p[np.asarray(self.physical_to_logical, np.int32)] = np.arange(
+            self.num_experts, dtype=np.int32)
+        return l2p
+
+    @property
+    def expert_to_rank(self) -> np.ndarray:
+        """Owning rank per *logical* expert; -1 for shadowed (all ranks)."""
+        per_rank = self.num_owned // self.num_ranks
+        rank_of_phys = np.full(self.num_experts, -1, np.int32)
+        rank_of_phys[:self.num_owned] = (
+            np.arange(self.num_owned, dtype=np.int32) // per_rank)
+        return rank_of_phys[self.logical_to_physical]
+
+    @property
+    def replication(self) -> np.ndarray:
+        """Replication degree per logical expert (1 owned, num_ranks shadow)."""
+        rep = np.where(self.expert_to_rank < 0, self.num_ranks, 1)
+        return rep.astype(np.int32)
+
+    @property
+    def is_identity(self) -> bool:
+        return (self.num_shadow == 0 and self.capacity_scale == 1.0
+                and list(self.physical_to_logical)
+                == list(range(self.num_experts)))
+
+    def main_capacity(self, capacity: int) -> int:
+        """a2a buffer capacity after the planner's shrink (multiple of 8)."""
+        if self.capacity_scale >= 1.0:
+            return capacity
+        return min(capacity, _round8(capacity * self.capacity_scale))
+
+
+def identity_placement(num_experts: int, num_ranks: int) -> ExpertPlacement:
+    """The seed layout: logical == physical, contiguous blocks, no shadows."""
+    return ExpertPlacement(num_experts, num_ranks,
+                           tuple(range(num_experts)))
+
+
+# ---------------------------------------------------------------------------
+# Cost model (roofline constants; seconds per train step)
+# ---------------------------------------------------------------------------
+
+
+class PlacementCost(NamedTuple):
+    a2a_s: float  # all-to-all payload time
+    sync_s: float  # shadow-weight grad all-reduce + amortized broadcast
+    hbm_s: float  # extra HBM reads for replicated shadow weights
+    drop_frac: float  # modeled dropped-token fraction (quality proxy)
+
+    @property
+    def total_s(self) -> float:
+        return self.a2a_s + self.sync_s + self.hbm_s
+
+
+def placement_cost(place: ExpertPlacement, load: np.ndarray, *,
+                   d_model: int, d_hidden: int, capacity: int,
+                   capacity_factor: float = 1.0, bytes_per_elem: int = 4,
+                   train: bool = True, replan_every: int = 200) -> PlacementCost:
+    """Modeled per-step cost of executing under ``place`` with ``load``.
+
+    a2a term: dispatch + return payload of the *owned* buffer, forward and
+    (in training) backward.  sync term: shadow experts become replicated
+    parameters, so their grads all-reduce every step and their weights
+    broadcast once per replan interval.  hbm term: every rank streams the
+    shadow weights in addition to its own shard.
+    """
+    load = np.asarray(load, np.float64)
+    load = load / max(load.sum(), 1e-12)
+    E, S = place.num_experts, place.num_shadow
+    c_main = place.main_capacity(capacity)
+    dirs = 4.0 if train else 2.0  # dispatch+return, x2 for backward
+    a2a_bytes = place.num_owned * c_main * d_model * bytes_per_elem
+    a2a_s = dirs * a2a_bytes / ICI_BW
+
+    w_elems = 3 * d_model * d_hidden  # swiglu-shaped expert: 3 projections
+    sync_s = 0.0
+    hbm_s = 0.0
+    if S:
+        shadow_w_bytes = S * w_elems * bytes_per_elem
+        if train:  # replicated weights => grad all-reduce (2 hops of a ring)
+            sync_s += 2.0 * shadow_w_bytes / ICI_BW
+        sync_s += shadow_w_bytes / ICI_BW / max(replan_every, 1)
+        hbm_s += shadow_w_bytes / HBM_BW
+    # quality proxy: tokens beyond an expert's capacity are dropped.  Owned
+    # experts see the (possibly shrunk) a2a capacity; shadowed experts keep
+    # the full per-rank buffer.
+    owned = place.expert_to_rank >= 0
+    caps = np.where(owned, c_main, capacity).astype(np.float64)
+    # capacity = cf * t*k / E, so per-rank arrivals to expert e are
+    # load_e * t*k = load_e * E * capacity / cf (cf=1 -> conservative)
+    per_rank_arrivals = load * capacity * E / max(capacity_factor, 1e-9)
+    over = np.maximum(per_rank_arrivals - caps, 0.0).sum()
+    drop = float(over / max(per_rank_arrivals.sum(), 1e-12))
+    # unused PEAK_FLOPS charge: shadow compute per rank replaces the owner's
+    # mp-fanned buffer rows one-for-one (E*C slots per rank either way), so
+    # the FLOP term cancels; keep the constant imported for future models.
+    _ = PEAK_FLOPS
+    return PlacementCost(a2a_s, sync_s, hbm_s, drop)
+
+
+# ---------------------------------------------------------------------------
+# Planner
+# ---------------------------------------------------------------------------
+
+
+def plan_placement(load: np.ndarray, num_ranks: int, *, d_model: int,
+                   d_hidden: int, capacity: int, capacity_factor: float = 1.0,
+                   bytes_per_elem: int = 4, train: bool = True,
+                   replan_every: int = 200, max_shadow_frac: float = 0.5,
+                   shrink_capacity: bool = True) -> ExpertPlacement:
+    """Choose shadow set + permutation minimizing the modeled step cost.
+
+    Scans shadow counts S in multiples of ``num_ranks`` (so the owned block
+    stays divisible), shadowing the hottest experts first.  For each S the
+    a2a capacity may shrink to the residual load peak (no worse drop rate
+    than the baseline buffer).  Falls back to a pure load-balancing
+    permutation (S=0) when shadowing doesn't pay.
+    """
+    load = np.asarray(load, np.float64)
+    E = load.size
+    load = load / max(load.sum(), 1e-12)
+    if E % num_ranks:
+        raise ValueError(f"num_experts {E} not divisible by ranks {num_ranks}")
+    hot_first = np.argsort(-load, kind="stable")
+
+    def build(S: int) -> ExpertPlacement:
+        shadow = hot_first[:S]
+        owned = np.sort(hot_first[S:])
+        scale = 1.0
+        if shrink_capacity and S:
+            # baseline C is capacity_factor x the fair share 1/E, so an
+            # expert at load fraction f needs f*E*C slots for the same
+            # headroom; size the a2a buffer to the residual peak
+            f_max = float(load[owned].max()) if owned.size else 0.0
+            scale = min(1.0, max(f_max * E, 8.0 / max(capacity, 8)))
+        # balanced contiguous blocks: greedy-assign owned experts to ranks,
+        # then lay each rank's experts out contiguously (physical order)
+        ranks = np.asarray(greedy_placement(owned.size, num_ranks,
+                                            load[owned]), np.int64)
+        phys = [int(e) for r in range(num_ranks)
+                for e in owned[ranks == r]]
+        phys += [int(e) for e in shadow]
+        return ExpertPlacement(E, num_ranks, tuple(phys), int(S),
+                               float(scale))
+
+    kw = dict(d_model=d_model, d_hidden=d_hidden, capacity=capacity,
+              capacity_factor=capacity_factor, bytes_per_elem=bytes_per_elem,
+              train=train, replan_every=replan_every)
+    base = build(0)
+    # drops are a quality regression, not a time cost: never trade them
+    base_drop = placement_cost(base, load, **kw).drop_frac
+    best, best_cost = None, np.inf
+    max_s = int(max_shadow_frac * E) // num_ranks * num_ranks
+    for S in range(0, max_s + 1, num_ranks):
+        cand = base if S == 0 else build(S)
+        cost = placement_cost(cand, load, **kw)
+        if cost.drop_frac > base_drop + 1e-9:
+            continue
+        if cost.total_s < best_cost - 1e-12:
+            best, best_cost = cand, cost.total_s
+    return best if best is not None else base
+
+
+# ---------------------------------------------------------------------------
+# Replan controller (the train.py hook's brain)
+# ---------------------------------------------------------------------------
+
+
+class PlacementController:
+    """Periodic replan driver fed by a LoadMonitor.
+
+    Every ``every`` steps, recompute a plan from the monitor's load EMA and
+    return it iff the modeled step time improves on the current plan by at
+    least ``min_gain`` (relative).  The caller owns executing the migration
+    (see migrate.py) and swapping the jitted step function.
+    """
+
+    def __init__(self, monitor, num_ranks: int, *, d_model: int,
+                 d_hidden: int, capacity: int, capacity_factor: float = 1.0,
+                 every: int = 200, min_gain: float = 0.02, train: bool = True,
+                 shrink_capacity: bool = True):
+        self.monitor = monitor
+        self.num_ranks = num_ranks
+        self.every = every
+        self.min_gain = min_gain
+        self.kw = dict(d_model=d_model, d_hidden=d_hidden, capacity=capacity,
+                       capacity_factor=capacity_factor, train=train,
+                       replan_every=every, shrink_capacity=shrink_capacity)
+        self.current = identity_placement(monitor.num_experts, num_ranks)
+        self.replans = 0
+
+    def maybe_replan(self, step: int) -> Optional[ExpertPlacement]:
+        """New plan to migrate to, or None to keep the current layout."""
+        if self.every <= 0 or step == 0 or step % self.every:
+            return None
+        load = self.monitor.load_ema
+        ckw = {k: v for k, v in self.kw.items() if k != "shrink_capacity"}
+        cand = plan_placement(load, self.num_ranks, **self.kw)
+        now = placement_cost(self.current, load, **ckw).total_s
+        new = placement_cost(cand, load, **ckw).total_s
+        if new < now * (1.0 - self.min_gain) and cand != self.current:
+            self.current = cand
+            self.replans += 1
+            return cand
+        return None

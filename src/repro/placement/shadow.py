@@ -1,0 +1,85 @@
+"""Shadowed ("hot") expert execution — the data-plane half of placement.
+
+A shadowed expert is replicated on every expert-parallel rank: its weights
+ride into the shard_map region replicated (the broadcast), each rank computes
+it on the rank's *own* tokens, and its buffer rows are skipped in the
+all-to-all payload.  Per-rank FLOPs are unchanged (the owner no longer
+computes the mp-fanned rows for that expert; every rank computes its C rows
+instead), so shadowing is a pure communication win paid for by weight-sync
+(see plan.placement_cost).
+
+Physical layout contract (plan.ExpertPlacement): owned experts occupy
+physical slots ``[0, num_owned)`` in contiguous per-rank blocks; shadowed
+experts occupy ``[num_owned, E)``.  The a2a buffer covers only the owned
+slots, at a capacity the planner may shrink to the residual load peak.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.placement.plan import ExpertPlacement
+
+
+class ShadowSpec(NamedTuple):
+    """Static split geometry for one (placement, per-rank capacity) pair."""
+
+    num_experts: int
+    num_owned: int
+    main_capacity: int  # a2a buffer rows per owned expert (<= shadow_capacity)
+    shadow_capacity: int  # local buffer rows per shadowed expert
+
+    @property
+    def num_shadow(self) -> int:
+        return self.num_experts - self.num_owned
+
+    @property
+    def width(self) -> int:
+        """Dispatch buffer width (max per-expert capacity in use)."""
+        if self.num_shadow == 0:
+            return self.main_capacity
+        return max(self.main_capacity, self.shadow_capacity)
+
+    @property
+    def capacities(self) -> np.ndarray:
+        """Per-expert capacity vector in physical order (static)."""
+        caps = np.full(self.num_experts, self.main_capacity, np.int32)
+        caps[self.num_owned:] = self.shadow_capacity
+        return caps
+
+    def a2a_elems(self, d_model: int) -> int:
+        """Per-rank elements exchanged in ONE a2a direction (for reporting)."""
+        return self.num_owned * self.main_capacity * d_model
+
+
+def shadow_spec(placement: Optional[ExpertPlacement], num_experts: int,
+                capacity: int) -> ShadowSpec:
+    """Geometry under ``placement`` (identity geometry when None)."""
+    if placement is None:
+        return ShadowSpec(num_experts, num_experts, capacity, capacity)
+    if placement.num_experts != num_experts:
+        raise ValueError((placement.num_experts, num_experts))
+    return ShadowSpec(num_experts, placement.num_owned,
+                      placement.main_capacity(capacity), capacity)
+
+
+def split_buffer(buf: jnp.ndarray, spec: ShadowSpec):
+    """(E, width, d) dispatch buffer -> (owned a2a part, local shadow part)."""
+    main = buf[:spec.num_owned, :spec.main_capacity]
+    shadow = buf[spec.num_owned:, :spec.shadow_capacity]
+    return main, shadow
+
+
+def merge_outputs(out_main: jnp.ndarray, out_shadow: Optional[jnp.ndarray],
+                  spec: ShadowSpec) -> jnp.ndarray:
+    """Reassemble expert outputs into the (E, width, dout) combine buffer."""
+    d_out = out_main.shape[-1]
+    if spec.num_shadow == 0 and spec.main_capacity == spec.width:
+        return out_main
+    out = jnp.zeros((spec.num_experts, spec.width, d_out), out_main.dtype)
+    out = out.at[:spec.num_owned, :spec.main_capacity].set(out_main)
+    if out_shadow is not None and spec.num_shadow:
+        out = out.at[spec.num_owned:, :spec.shadow_capacity].set(out_shadow)
+    return out

@@ -4,6 +4,24 @@ spawn subprocesses with their own flags (tests/test_distributed.py)."""
 import jax
 import pytest
 
+# Import-safe, single-device, fast modules — the tier-1 subset scripts/ci.sh
+# runs on every change (the full suite adds multi-process + model smokes).
+TIER1_MODULES = {
+    "test_dispatch", "test_fmoe", "test_gate", "test_gate_variants",
+    "test_placement", "test_sharding_rules", "test_substrate",
+}
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "tier1: fast import-safe subset run by scripts/ci.sh")
+
+
+def pytest_collection_modifyitems(config, items):
+    for item in items:
+        if item.module.__name__ in TIER1_MODULES:
+            item.add_marker(pytest.mark.tier1)
+
 
 @pytest.fixture(scope="session", autouse=True)
 def _x64_off():

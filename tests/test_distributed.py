@@ -206,6 +206,7 @@ def test_hierarchical_a2a_equals_flat():
     """Beyond-paper 2-hop all-to-all must move the same data as 1-hop."""
     print(_run("""
         import jax, jax.numpy as jnp, numpy as np
+        from repro.compat import shard_map
         from repro.core.comm import hierarchical_all_to_all
         mesh = jax.make_mesh((2, 4), ("pod", "data"))
         P = jax.sharding.PartitionSpec
@@ -218,10 +219,10 @@ def test_hierarchical_a2a_equals_flat():
             return y.reshape(8, -1)
         # global (64, 16): local (8, 16) per device = one chunk per peer
         x = jnp.arange(64 * 16, dtype=jnp.float32).reshape(64, 16)
-        f1 = jax.shard_map(flat, mesh=mesh, in_specs=P(("pod", "data"), None),
-                           out_specs=P(("pod", "data"), None), check_vma=False)
-        f2 = jax.shard_map(hier, mesh=mesh, in_specs=P(("pod", "data"), None),
-                           out_specs=P(("pod", "data"), None), check_vma=False)
+        f1 = shard_map(flat, mesh=mesh, in_specs=P(("pod", "data"), None),
+                       out_specs=P(("pod", "data"), None), check_vma=False)
+        f2 = shard_map(hier, mesh=mesh, in_specs=P(("pod", "data"), None),
+                       out_specs=P(("pod", "data"), None), check_vma=False)
         with mesh:
             y1, y2 = f1(x), f2(x)
         np.testing.assert_allclose(np.asarray(y1), np.asarray(y2))

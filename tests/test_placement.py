@@ -1,0 +1,248 @@
+"""Placement subsystem unit tests: greedy placer, planner/cost model,
+migrate round-trips, and the local (single-worker) index-table path."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import MoEConfig
+from repro.core import fmoe
+from repro.core.monitor import LoadMonitor, expert_placement
+from repro.placement import (ExpertPlacement, PlacementController,
+                             from_logical, identity_placement, migrate,
+                             placement_cost, plan_placement,
+                             router_index_table, shadow_spec, to_logical)
+
+
+def _zipf(E, a=1.2):
+    load = 1.0 / (np.arange(E) + 1) ** a
+    return load / load.sum()
+
+
+# ---------------------------------------------------------------------------
+# Greedy placer (core/monitor.py)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("E,W", [(8, 4), (10, 4), (7, 3), (5, 8), (16, 16)])
+def test_greedy_placer_places_every_expert(E, W):
+    place = expert_placement(E, W, np.random.RandomState(0).rand(E))
+    assert len(place) == E
+    counts = np.bincount(place, minlength=W)
+    # remainder spread: worker expert counts differ by at most 1
+    assert counts.max() - counts.min() <= 1
+    assert counts.sum() == E
+
+
+def test_greedy_placer_balances_load_sums():
+    E, W = 12, 4
+    load = _zipf(E)
+    place = np.asarray(expert_placement(E, W, load))
+    sums = np.asarray([load[place == w].sum() for w in range(W)])
+    naive = np.asarray([load[w * 3:(w + 1) * 3].sum() for w in range(W)])
+    assert sums.max() < naive.max() - 1e-9  # beats contiguous blocks
+    # within 10% of the count-constrained optimum (hottest + 2 lightest)
+    lower = load[0] + load[-2:].sum()
+    assert sums.max() <= lower * 1.1
+
+
+def test_greedy_placer_remainder_not_dumped_on_worker0():
+    # seed bug: E % W experts all silently defaulted to worker 0
+    E, W = 9, 4
+    place = np.asarray(expert_placement(E, W, np.ones(E)))
+    assert np.bincount(place, minlength=W).max() == 3
+
+
+# ---------------------------------------------------------------------------
+# Plans + cost model
+# ---------------------------------------------------------------------------
+
+
+def test_identity_placement_is_identity():
+    p = identity_placement(8, 4)
+    assert p.is_identity
+    assert list(p.logical_to_physical) == list(range(8))
+    assert list(p.expert_to_rank) == [0, 0, 1, 1, 2, 2, 3, 3]
+    assert p.replication.tolist() == [1] * 8
+
+
+def test_plan_is_valid_permutation_and_shadow_geometry():
+    E, W = 16, 4
+    plan = plan_placement(_zipf(E), W, d_model=256, d_hidden=512,
+                          capacity=4096)
+    assert sorted(plan.physical_to_logical) == list(range(E))
+    assert plan.num_shadow % W == 0
+    assert 0 < plan.num_owned <= E and plan.num_owned % W == 0
+    assert 0.0 < plan.capacity_scale <= 1.0
+    # the shadowed experts are the hottest ones
+    if plan.num_shadow:
+        shadowed = set(plan.physical_to_logical[plan.num_owned:])
+        assert shadowed == set(range(plan.num_shadow))
+        assert (plan.replication == np.where(
+            plan.expert_to_rank < 0, W, 1)).all()
+
+
+def test_planner_shadows_when_comm_dominates():
+    # huge token buffers vs tiny experts: shadowing must pay
+    plan = plan_placement(_zipf(16), 4, d_model=256, d_hidden=512,
+                          capacity=4096)
+    assert plan.num_shadow > 0
+    assert plan.capacity_scale < 1.0
+
+
+def test_planner_declines_when_weight_sync_dominates():
+    # big experts, small buffers: replication costs more than the a2a saves
+    plan = plan_placement(_zipf(16), 4, d_model=1024, d_hidden=8192,
+                          capacity=64)
+    assert plan.num_shadow == 0
+
+
+def test_cost_model_improves_and_never_raises_drops():
+    E, W = 16, 4
+    load = _zipf(E)
+    kw = dict(d_model=256, d_hidden=512, capacity=4096)
+    plan = plan_placement(load, W, **kw)
+    base = placement_cost(identity_placement(E, W), load, **kw)
+    new = placement_cost(plan, load, **kw)
+    assert new.total_s < base.total_s
+    assert new.drop_frac <= base.drop_frac + 1e-9
+
+
+def test_plan_rejects_indivisible_ranks():
+    with pytest.raises(ValueError):
+        plan_placement(_zipf(10), 4, d_model=8, d_hidden=8, capacity=8)
+
+
+def test_shadow_spec_geometry():
+    plan = ExpertPlacement(8, 4, tuple(range(8)), num_shadow=4,
+                           capacity_scale=0.5)
+    spec = shadow_spec(plan, 8, 64)
+    assert spec.num_owned == 4 and spec.num_shadow == 4
+    assert spec.main_capacity == 32 and spec.shadow_capacity == 64
+    assert spec.width == 64
+    assert spec.capacities.tolist() == [32] * 4 + [64] * 4
+    assert spec.a2a_elems(16) == 4 * 32 * 16
+
+
+# ---------------------------------------------------------------------------
+# Migration
+# ---------------------------------------------------------------------------
+
+
+CFG = MoEConfig(num_experts=8, top_k=2, d_expert_hidden=32, capacity_factor=8.0)
+
+
+@pytest.fixture(scope="module")
+def layer():
+    params = fmoe.fmoe_init(jax.random.PRNGKey(0), 16, CFG)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, 16))
+    return params, x
+
+
+def _some_plan(E=8, W=4, S=0):
+    load = _zipf(E)
+    hot = np.argsort(-load)
+    phys = tuple(int(e) for e in np.sort(hot[S:])) + tuple(
+        int(e) for e in hot[:S])
+    return ExpertPlacement(E, W, phys, num_shadow=S)
+
+
+def test_migrate_round_trip_bitwise(layer):
+    params, _ = layer
+    plan = _some_plan(S=4)
+    back = to_logical(from_logical(params, plan), plan)
+    for k, v in params["experts"].items():
+        np.testing.assert_array_equal(np.asarray(back["experts"][k]),
+                                      np.asarray(v))
+
+
+def test_migrate_between_plans(layer):
+    params, _ = layer
+    a, b = _some_plan(S=0), _some_plan(S=4)
+    via = migrate(from_logical(params, a), a, b)
+    direct = from_logical(params, b)
+    for k in params["experts"]:
+        np.testing.assert_array_equal(np.asarray(via["experts"][k]),
+                                      np.asarray(direct["experts"][k]))
+
+
+def test_migrate_stacked_lm_tree_and_opt_state():
+    from repro.optim import AdamW
+    E = 8
+    tree = {"layers": {"ffn": {"experts": {
+        "wi_gate": jnp.arange(3 * E * 2 * 4, dtype=jnp.float32).reshape(3, E, 2, 4)}},
+        "attn": {"w": jnp.ones((3, 4, 4))}}}
+    plan = _some_plan()
+    opt = AdamW()
+    state = opt.init(tree)
+    phys = from_logical(tree, plan)
+    sphys = from_logical(state, plan)
+    perm = np.asarray(plan.physical_to_logical)
+    got = np.asarray(phys["layers"]["ffn"]["experts"]["wi_gate"])
+    want = np.asarray(tree["layers"]["ffn"]["experts"]["wi_gate"])[:, perm]
+    np.testing.assert_array_equal(got, want)
+    # non-expert leaves untouched; optimizer mirrors the param permutation
+    np.testing.assert_array_equal(np.asarray(phys["layers"]["attn"]["w"]),
+                                  np.asarray(tree["layers"]["attn"]["w"]))
+    np.testing.assert_array_equal(
+        np.asarray(sphys.mu["layers"]["ffn"]["experts"]["wi_gate"]),
+        np.asarray(state.mu["layers"]["ffn"]["experts"]["wi_gate"])[:, perm])
+
+
+def test_local_path_with_index_table_matches_bitwise(layer):
+    """Migrated params + remapped router == original outputs, bitwise."""
+    params, x = layer
+    plan = _some_plan(S=4)
+    y0, m0 = fmoe.fmoe_apply(params, x, CFG)
+    y1, m1 = fmoe.fmoe_apply(from_logical(params, plan), x, CFG,
+                             placement=plan)
+    np.testing.assert_array_equal(np.asarray(y0), np.asarray(y1))
+    np.testing.assert_array_equal(np.asarray(m0.load), np.asarray(m1.load))
+    table = router_index_table(plan)
+    assert sorted(table.tolist()) == list(range(8))
+
+
+def test_local_ragged_path_with_placement(layer):
+    import dataclasses
+    params, x = layer
+    cfg = dataclasses.replace(CFG, dispatch="ragged")
+    plan = _some_plan(S=0)
+    y0, _ = fmoe.fmoe_apply(params, x, cfg)
+    y1, _ = fmoe.fmoe_apply(from_logical(params, plan), x, cfg,
+                            placement=plan)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Controller
+# ---------------------------------------------------------------------------
+
+
+def test_controller_replans_on_cadence_with_skew():
+    from repro.core.balance import MoEMetrics
+    mon = LoadMonitor(16, ema=0.5)
+    ctl = PlacementController(mon, 4, d_model=256, d_hidden=512,
+                              capacity=4096, every=4)
+    skew = _zipf(16)
+    fired = []
+    for s in range(12):
+        mon.update(MoEMetrics(0.0, 0.0, skew, 0.0))
+        out = ctl.maybe_replan(s)
+        if out is not None:
+            fired.append(s)
+    assert fired and fired[0] == 4
+    assert all(f % 4 == 0 for f in fired)
+    assert ctl.current.num_shadow > 0  # comm-dominated regime shadows
+
+
+def test_controller_idles_on_balanced_load():
+    # weight-sync-dominated regime: neither shadowing nor permuting can beat
+    # identity under uniform load, so the controller must never migrate
+    from repro.core.balance import MoEMetrics
+    mon = LoadMonitor(16, ema=0.5)
+    ctl = PlacementController(mon, 4, d_model=1024, d_hidden=8192,
+                              capacity=64, every=2)
+    for s in range(8):
+        mon.update(MoEMetrics(0.0, 0.0, np.full(16, 1 / 16.0), 0.0))
+        assert ctl.maybe_replan(s) is None
+    assert ctl.current.is_identity

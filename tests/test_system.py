@@ -77,8 +77,10 @@ def test_microbatch_accumulation_matches_full_batch():
     micro = jax.jit(make_train_step(cfg, opt, num_microbatches=2))
     p1, _, m1 = full(params, opt.init(params), batch, jnp.int32(0))
     p2, _, m2 = micro(params, opt.init(params), batch, jnp.int32(0))
-    # same data, same step: losses match; params close (grad averaging)
-    assert abs(float(m1["loss"]) - float(m2["loss"])) < 2e-3
+    # same data, same step: losses match; params close (grad averaging).
+    # Microbatching halves the per-gate token count, so expert capacity and
+    # drop sets legitimately differ — the tolerance covers routing effects.
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 2e-2
     errs = jax.tree.map(lambda a, b: float(jnp.abs(a - b).max()), p1, p2)
     assert max(jax.tree.leaves(errs)) < 5e-3
 
@@ -128,6 +130,8 @@ def test_dryrun_machinery_small_mesh():
             compiled = lowered.compile()
             assert compiled.memory_analysis() is not None
             cost = compiled.cost_analysis()
+            if isinstance(cost, list):  # some jax versions return [dict]
+                cost = cost[0]
             print(shape.mode, "ok flops=", cost.get("flops", 0))
     """
     env = dict(os.environ)

@@ -27,7 +27,8 @@ def run(quick: bool = False) -> list[dict]:
         t = timeit(f, x, w)
         gflops = 2 * nb * D_M * D_H / (t["us"] * 1e-6) / 1e9
         emit(f"fig3_gemm_b{nb}", t["us"], f"{gflops:.1f}GFLOP/s")
-        rows.append({"batch": nb, "us": t["us"], "gflops": gflops})
+        rows.append({"batch": nb, "us": t["us"], "gflops": gflops,
+                     "backend": jax.default_backend()})
     # the paper's point: large-batch GeMM must beat tiny-batch throughput
     assert rows[-1]["gflops"] > 3 * rows[0]["gflops"], rows
     return rows

@@ -100,12 +100,13 @@ def run(quick: bool = False) -> list[dict]:
     vals = out.stdout.strip().split("RESULT ")[1].split()
     us0, us1 = float(vals[0]), float(vals[1])
     elems0, elems1 = int(vals[2]), int(vals[3])
+    import jax  # backend tag gates cost-model calibration (placement/calibrate)
     row = {
         "us_off": us0, "us_on": us1,
         "a2a_elems_off": elems0, "a2a_elems_on": elems1,
         "drop_off": float(vals[4]), "drop_on": float(vals[5]),
         "num_shadow": int(vals[6]), "capacity_scale": float(vals[7]),
-        "imbalance": float(vals[8]),
+        "imbalance": float(vals[8]), "backend": jax.default_backend(),
     }
     emit("fig8_placement_off", us0,
          f"a2a_elems={elems0} drop={row['drop_off']:.3f} imb={row['imbalance']:.2f}")

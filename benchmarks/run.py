@@ -19,19 +19,30 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (fig3_gemm, fig5_single_device, fig6_scaling,
-                            fig7_end_to_end, fig8_imbalance, tab_capacity)
+                            fig7_end_to_end, fig8_imbalance, fig9_overlap,
+                            tab_capacity)
     suites = {
         "fig3": fig3_gemm.run,
         "fig5": fig5_single_device.run,
         "fig6": fig6_scaling.run,
         "fig7": fig7_end_to_end.run,
         "fig8": fig8_imbalance.run,
+        "fig9": fig9_overlap.run,
         "tab_capacity": tab_capacity.run,
     }
     picked = args.only.split(",") if args.only else list(suites)
 
     os.makedirs(args.out, exist_ok=True)
+    # merge into existing results so `--only fig9` doesn't drop fig8's rows
+    # (results.json also feeds repro.placement.calibrate)
     results = {}
+    path = os.path.join(args.out, "results.json")
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                results = json.load(f)
+        except (OSError, ValueError):
+            results = {}
     print("name,us_per_call,derived")
     for name in picked:
         t0 = time.time()

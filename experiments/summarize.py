@@ -1,4 +1,5 @@
-"""Generate the EXPERIMENTS.md tables from experiments/dryrun/*.json.
+"""Generate the EXPERIMENTS.md tables from experiments/dryrun/*.json and the
+measured MoE benches from benchmarks/results/results.json (fig8/fig9).
 
   PYTHONPATH=src python experiments/summarize.py
 """
@@ -7,6 +8,8 @@ import json
 import os
 
 DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)), "dryrun")
+RESULTS = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                       "benchmarks", "results", "results.json")
 
 SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
 ARCHS = ["granite-3-2b", "whisper-tiny", "arctic-480b", "qwen2-72b",
@@ -76,6 +79,31 @@ def opt_delta_table():
                   f"{rb['dominant']}->{ro['dominant']} |")
 
 
+def moe_bench_table():
+    """Measured MoE benches: fig8 (placement off/on) + fig9 (overlap)."""
+    if not os.path.exists(RESULTS):
+        print("(no benchmarks/results/results.json — run "
+              "`PYTHONPATH=src python -m benchmarks.run --only fig8,fig9`)")
+        return
+    res = json.load(open(RESULTS))
+    print("| bench | setting | us | detail |")
+    print("|---|---|---|---|")
+    for r in res.get("fig8", []):
+        print(f"| fig8 | placement off | {r['us_off']:.0f} | "
+              f"a2a_elems={r['a2a_elems_off']} drop={r['drop_off']:.3f} "
+              f"imb={r['imbalance']:.2f} |")
+        print(f"| fig8 | placement on | {r['us_on']:.0f} | "
+              f"a2a_elems={r['a2a_elems_on']} shadow={r['num_shadow']} "
+              f"cap_scale={r['capacity_scale']:.2f} drop={r['drop_on']:.3f} |")
+    for r in res.get("fig9", []):
+        print(f"| fig9 | serial | {r['us_serial']:.0f} | "
+              f"all_to_all_ops={r['hlo_all_to_all_serial']} |")
+        print(f"| fig9 | pipelined x{r['n_chunks']} | {r['us_pipelined']:.0f} | "
+              f"collective_permutes={r['hlo_collective_permute_pipelined']} "
+              f"chunk_elems={r['chunk_elems']} "
+              f"bit_exact={r['bit_exact']} |")
+
+
 if __name__ == "__main__":
     print("## Baseline roofline (single-pod 16x16)\n")
     roofline_table()
@@ -83,3 +111,5 @@ if __name__ == "__main__":
     dryrun_table()
     print("\n## Optimized (head_aware+constrain_tokens+serve_tp+cache_seq)\n")
     opt_delta_table()
+    print("\n## Measured MoE benches (fig8 placement, fig9 overlap)\n")
+    moe_bench_table()

@@ -59,6 +59,23 @@ def make_abstract_mesh(shape: tuple, axes: tuple) -> Any:
     return AbstractMesh(tuple(zip(axes, shape)))
 
 
+def axis_size(axis) -> int:
+    """Static size of a (possibly tuple) mapped mesh axis.
+
+    ``jax.lax.axis_size`` only exists on newer jax; 0.4.x exposes the bound
+    frame via ``jax.core.axis_frame`` (which returns the size itself there).
+    Must be called under a shard_map/pmap binding of ``axis``.
+    """
+    if hasattr(jax.lax, "axis_size"):
+        return int(jax.lax.axis_size(axis))
+    import jax.core as _core
+    n = 1
+    for a in (axis if isinstance(axis, tuple) else (axis,)):
+        frame = _core.axis_frame(a)
+        n *= int(getattr(frame, "size", frame))
+    return n
+
+
 def tpu_compiler_params(**kwargs):
     """pltpu.CompilerParams | pltpu.TPUCompilerParams, whichever exists."""
     from jax.experimental.pallas import tpu as pltpu

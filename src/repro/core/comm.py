@@ -5,6 +5,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+
 
 def exchange_counts(counts: jax.Array, axis: str) -> jax.Array:
     """Fig 2 step 1: exchange per-expert token counts over the expert axis.
@@ -12,13 +14,13 @@ def exchange_counts(counts: jax.Array, axis: str) -> jax.Array:
     counts: (E,) local assignment counts, E = mp * E_local.
     returns (mp, E_local): incoming token counts per source rank.
     """
-    mp = jax.lax.axis_size(axis)
+    mp = compat.axis_size(axis)
     return jax.lax.all_to_all(counts.reshape(mp, -1), axis, 0, 0, tiled=True)
 
 
 def exchange_tokens(buf: jax.Array, axis: str) -> jax.Array:
     """Fig 2 step 2: payload all-to-all.  buf (E, C, d) -> (E_local, mp*C, d)."""
-    mp = jax.lax.axis_size(axis)
+    mp = compat.axis_size(axis)
     E, C, d = buf.shape
     buf = buf.reshape(mp, E // mp, C, d)
     buf = jax.lax.all_to_all(buf, axis, 0, 0, tiled=True)
@@ -27,7 +29,7 @@ def exchange_tokens(buf: jax.Array, axis: str) -> jax.Array:
 
 def return_tokens(out: jax.Array, axis: str) -> jax.Array:
     """Inverse of :func:`exchange_tokens`: (E_local, mp*C, d) -> (E, C, d)."""
-    mp = jax.lax.axis_size(axis)
+    mp = compat.axis_size(axis)
     E_local, n, d = out.shape
     C = n // mp
     out = out.reshape(E_local, mp, C, d).transpose(1, 0, 2, 3)

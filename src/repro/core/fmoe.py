@@ -24,6 +24,7 @@ from jax.sharding import PartitionSpec as P
 from repro import compat
 from repro.configs.base import MoEConfig
 from repro.core import dispatch as D
+from repro.core import pipeline
 from repro.core.balance import MoEMetrics, load_balance_loss, load_metrics, router_z_loss
 from repro.core.gate import gate_forward, gate_init
 
@@ -45,6 +46,12 @@ class DistConfig(NamedTuple):
       placement — an ExpertPlacement (repro.placement.plan): params are in
         its physical order, gate ids are remapped through its index table,
         and shadowed hot experts run replicated outside the all-to-all.
+      overlap_chunks — §5.2 smart schedule: split the a2a payload into this
+        many capacity micro-shards and pipeline exchange with expert compute
+        (repro.core.pipeline).  0/1 = serial; values that don't divide the
+        capacity degrade to the nearest feasible depth.  Bit-exact vs serial.
+      wire_dtype — cast a2a payloads to this dtype across the wire only
+        ("bf16" halves exchange bytes; accumulation/combine stay f32).
     """
 
     mesh: Any
@@ -57,6 +64,8 @@ class DistConfig(NamedTuple):
     fsdp_axis: Optional[str] = None  # constrain bf16-cast weights sharded
     # so the per-layer FSDP gather moves bf16, not the f32 master (§Perf)
     placement: Any = None  # Optional[repro.placement.plan.ExpertPlacement]
+    overlap_chunks: int = 0  # §5.2 pipelined exchange (0/1 = serial)
+    wire_dtype: Optional[str] = None  # a2a payload dtype ("bf16" | None)
 
     @property
     def expert_axes(self) -> tuple:
@@ -74,6 +83,15 @@ class DistConfig(NamedTuple):
         for a in self.expert_axes:
             n *= self.mesh.shape[a]
         return n
+
+    @property
+    def wire_jnp_dtype(self):
+        """jnp dtype for a2a payloads, or None for the activation dtype."""
+        if self.wire_dtype is None:
+            return None
+        if self.wire_dtype in ("bf16", "bfloat16"):
+            return jnp.bfloat16
+        return jnp.dtype(self.wire_dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -142,9 +160,28 @@ def expert_ffn_pallas(params: dict, xs: jax.Array, act: str) -> jax.Array:
     return ops.grouped_matmul(h, params["wo"], sizes).reshape(E, n, -1)
 
 
+def expert_ffn_fused(params: dict, xs: jax.Array, act: str) -> jax.Array:
+    """expert_fn backed by the fused GEMM1+act+GEMM2 Pallas kernel.
+
+    Unlike the two-pass path, the (M, H) hidden activation never
+    materializes in HBM (see repro.kernels.fused_ffn); backward falls back
+    to the two-pass grouped GEMMs via the kernel's custom_vjp.
+    """
+    from repro.kernels import ops  # lazy: keeps core importable without kernels
+
+    E, n, d = xs.shape
+    flat = xs.reshape(E * n, d)
+    sizes = jnp.full((E,), n, jnp.int32)
+    ws = ((params["wi_gate"], params["wi_up"]) if act == "swiglu"
+          else (params["wi"],))
+    return ops.fused_grouped_ffn(flat, ws, params["wo"], sizes,
+                                 act).reshape(E, n, -1)
+
+
 EXPERT_FNS: dict[str, Callable] = {
     "einsum": expert_ffn,
     "pallas": expert_ffn_pallas,
+    "fused": expert_ffn_fused,
 }
 
 
@@ -227,6 +264,12 @@ def _moe_a2a(x, router, experts, extra, shadow, cfg: MoEConfig, act, expert_fn,
     -> combine.  The Fig-2 "exchange sizes" step survives as the counts
     all-to-all feeding the load monitor.
 
+    With ``dist.overlap_chunks > 1`` the payload exchange runs as the §5.2
+    smart schedule instead: capacity micro-shards whose ppermute-decomposed
+    sends/returns pipeline with the expert compute (repro.core.pipeline) —
+    bit-exact vs the serial schedule.  ``dist.wire_dtype`` casts payloads
+    across the wire on either path.
+
     With a ``dist.placement``, ``experts`` hold only the *owned* physical
     slots and ``shadow`` the replicated hot experts: gate ids go through the
     plan's index table, owned buffer rows take the (possibly shrunk) a2a,
@@ -262,28 +305,33 @@ def _moe_a2a(x, router, experts, extra, shadow, cfg: MoEConfig, act, expert_fn,
     # ---- global data exchange (Fig 2), owned experts only ----
     counts = plan.load[:E_ns].reshape(mp, E_local)
     incoming = jax.lax.all_to_all(counts, ax, 0, 0, tiled=True)  # (mp, E_local) per-src
-    buf = buf.reshape(mp, E_local, Cm, d)
-    buf = jax.lax.all_to_all(buf, ax, 0, 0, tiled=True)  # (mp=src, E_local, C, d)
-    buf = buf.transpose(1, 0, 2, 3).reshape(E_local, mp * Cm, d)
+    wire = dist.wire_jnp_dtype
 
-    if dist.tp_axis:
-        # Expert-internal TP: expert hidden dims stay sharded over tp_axis
-        # (no per-layer FSDP weight all-gather / grad reduce-scatter).
-        # Different tp ranks hold different tokens, so gather tokens first
-        # and reduce-scatter the partial outputs back to own shard.
-        buf = jax.lax.all_gather(buf, dist.tp_axis, axis=1, tiled=True)
-        out = expert_fn(experts, buf, act)  # partial over hidden shards
-        out = jax.lax.psum_scatter(out, dist.tp_axis, scatter_dimension=1,
-                                   tiled=True)
-    else:
-        out = expert_fn(experts, buf, act)  # (E_local, mp*C, d)
+    def compute(b):
+        # b: (E_local, rows, d) row-independent expert compute
+        if dist.tp_axis:
+            # Expert-internal TP: expert hidden dims stay sharded over
+            # tp_axis (no per-layer FSDP weight all-gather / grad
+            # reduce-scatter).  Different tp ranks hold different tokens, so
+            # gather tokens first and reduce-scatter the partial outputs
+            # back to own shard.
+            b = jax.lax.all_gather(b, dist.tp_axis, axis=1, tiled=True)
+            o = expert_fn(experts, b, act)  # partial over hidden shards
+            return jax.lax.psum_scatter(o, dist.tp_axis, scatter_dimension=1,
+                                        tiled=True)
+        return expert_fn(experts, b, act)
 
-    out = out.reshape(E_local, mp, Cm, -1).transpose(1, 0, 2, 3)
-    out = jax.lax.all_to_all(out, ax, 0, 0, tiled=True)  # back to (mp, E_local, C, d)
+    # §5.2 smart schedule: pipeline the exchange with expert compute in
+    # capacity micro-shards; shadowed experts fill the first wire bubble.
+    # n_chunks == 1 runs the same helper as one serial exchange each way.
+    n_chunks = pipeline.resolve_chunks(dist.overlap_chunks or 1, Cm)
+    fill_fn = (lambda: expert_fn(shadow, buf_shadow, act)) if shadow else None
+    out, out_shadow = pipeline.pipelined_expert_exchange(
+        buf.reshape(mp, E_local, Cm, d), ax, mp, n_chunks, compute,
+        fill_fn=fill_fn, wire_dtype=wire, decompose=n_chunks > 1)
     out = out.reshape(E_ns, Cm, -1)
 
     # ---- shadowed hot experts: every rank, own tokens, zero a2a bytes ----
-    out_shadow = expert_fn(shadow, buf_shadow, act) if shadow else None
     out = merge_outputs(out, out_shadow, spec)
     y = D.combine_capacity(out, plan, g.combine_weights)
 

@@ -1,0 +1,156 @@
+"""Smart-schedule overlap — the paper's §5.2 pipelined global data exchange.
+
+FastMoE's headline distributed speedup comes from partitioning the all-to-all
+into groups so that sending, receiving and expert computation overlap.  The
+XLA analogue: split the ``(mp, E_local, C, d)`` exchange buffer into
+``n_chunks`` micro-shards along the capacity dim and emit a software-pipelined
+schedule whose *dependency structure* permits overlap —
+
+    S0 | S1  C0  R0 | S2  C1  R1 | ...  C_{n-1}  R_{n-1}
+
+where S_i / R_i are chunk i's forward / return exchanges and C_i its expert
+compute.  Chunk i+1's send is issued *before* chunk i's compute, so no
+collective ever waits on the compute preceding it in program order, and XLA's
+async collective scheduler can keep the ICI links and the MXU busy at the
+same time.  Each exchange is further decomposed into ``mp - 1``
+``ppermute``s (+ a local copy): ``collective-permute`` is the op XLA turns
+into asynchronous ``-start``/``-done`` pairs, whereas a monolithic
+``all-to-all`` is scheduled as one blocking step.
+
+The schedule is *bit-exact* vs. the serial path: chunking the capacity dim
+never regroups any expert's row reduction, and the decomposed exchange moves
+identical bytes to identical slots.
+
+Shadowed hot experts (repro/placement/shadow.py) slot in as overlap filler:
+their local, exchange-free compute is issued right after the first send, i.e.
+inside the bubble the serial schedule would spend blocked on the wire.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def ppermute_all_to_all(x: jnp.ndarray, axis, mp: int, *,
+                        wire_dtype=None) -> jnp.ndarray:
+    """``lax.all_to_all(x, axis, 0, 0, tiled=True)`` as mp-1 collective-permutes.
+
+    x: (mp * n, ...) per-rank, dim 0 major-ordered by destination rank.
+    ``axis`` may be a tuple of mesh axes (row-major linearization, matching
+    ``lax.all_to_all``); ``mp`` is its static total size.  ``wire_dtype``
+    casts the payload across the wire only (output dtype preserved).
+
+    Shift s moves rank r's slice for rank (r+s)%mp; the receiver q writes it
+    at slot (q-s)%mp — exactly where all_to_all concatenates the data coming
+    from rank (q-s)%mp.  Each shift is an independent collective-permute, so
+    XLA may issue all of them (and overlap them with unrelated compute)
+    instead of scheduling one blocking fused all-to-all.
+    """
+    orig = x.dtype
+    if wire_dtype is not None:
+        x = x.astype(wire_dtype)
+    if mp == 1:
+        return x.astype(orig)
+    n = x.shape[0] // mp
+    idx = lax.axis_index(axis)
+    own = lax.dynamic_slice_in_dim(x, idx * n, n, 0)
+    out = lax.dynamic_update_slice_in_dim(jnp.zeros_like(x), own, idx * n, 0)
+    for s in range(1, mp):
+        send = lax.dynamic_slice_in_dim(x, ((idx + s) % mp) * n, n, 0)
+        recv = lax.ppermute(send, axis,
+                            [(r, (r + s) % mp) for r in range(mp)])
+        out = lax.dynamic_update_slice_in_dim(out, recv,
+                                              ((idx - s) % mp) * n, 0)
+    return out.astype(orig)
+
+
+def chunked_all_to_all(x: jnp.ndarray, axis, mp: int, n_chunks: int, *,
+                       wire_dtype=None, decompose: bool = True) -> jnp.ndarray:
+    """Tiled dim-0 all-to-all split into ``n_chunks`` independent exchanges.
+
+    x: (mp, ...) per-rank (one slice per destination).  The chunk dim is
+    x.shape[1], which must divide by ``n_chunks``.  Pure data movement —
+    bit-exact vs. the monolithic collective for any chunking.
+    """
+    a2a = functools.partial(
+        ppermute_all_to_all if decompose else _plain_all_to_all,
+        axis=axis, mp=mp, wire_dtype=wire_dtype)
+    if n_chunks <= 1:
+        return a2a(x)
+    return jnp.concatenate([a2a(c) for c in jnp.split(x, n_chunks, axis=1)],
+                           axis=1)
+
+
+def _plain_all_to_all(x, *, axis, mp, wire_dtype=None):
+    del mp
+    orig = x.dtype
+    if wire_dtype is not None:
+        x = x.astype(wire_dtype)
+    return lax.all_to_all(x, axis, 0, 0, tiled=True).astype(orig)
+
+
+def resolve_chunks(requested: int, capacity: int) -> int:
+    """Largest divisor of ``capacity`` that is <= ``requested`` (>= 1).
+
+    The micro-shard split must tile the static capacity exactly; rather than
+    failing on awkward (capacity, n_chunks) pairs, degrade to the nearest
+    feasible pipeline depth (1 = serial).
+    """
+    n = max(1, min(int(requested), int(capacity)))
+    while capacity % n:
+        n -= 1
+    return n
+
+
+def pipelined_expert_exchange(
+        buf: jnp.ndarray, axis, mp: int, n_chunks: int,
+        compute_fn: Callable[[jnp.ndarray], jnp.ndarray], *,
+        fill_fn: Optional[Callable[[], jnp.ndarray]] = None,
+        wire_dtype=None, decompose: bool = True):
+    """Dispatch a2a -> expert compute -> return a2a, software-pipelined.
+
+    buf: (mp, E_local, C, d) dispatch buffer (dim 0 = destination rank).
+    compute_fn: (E_local, rows, d) -> (E_local, rows, d_out) row-independent
+    expert computation (the caller wraps any tp_axis gather/scatter).
+    fill_fn: optional exchange-free local work (shadowed experts) issued in
+    the first chunk's wire bubble; its result is returned alongside.
+
+    Returns (out: (mp, E_local, C, d_out), fill_out | None).
+
+    The schedule is the paper's Fig-6 smart schedule: chunk i+1's forward
+    exchange is issued before chunk i's compute, and chunk i's return
+    exchange right after it, so at steady state one send, one compute and
+    one receive are always in flight together.
+    """
+    mp_, E_local, C, d = buf.shape
+    assert mp_ == mp and C % n_chunks == 0, (buf.shape, mp, n_chunks)
+    a2a = functools.partial(
+        ppermute_all_to_all if decompose else _plain_all_to_all,
+        axis=axis, mp=mp, wire_dtype=wire_dtype)
+
+    if n_chunks <= 1:
+        recv = a2a(buf)
+        fill_out = fill_fn() if fill_fn is not None else None
+        y = compute_fn(recv.transpose(1, 0, 2, 3).reshape(E_local, mp * C, d))
+        y = y.reshape(E_local, mp, C, -1).transpose(1, 0, 2, 3)
+        return a2a(y), fill_out
+
+    Cc = C // n_chunks
+    chunks = jnp.split(buf, n_chunks, axis=2)
+    recv: list = [None] * n_chunks
+    outs: list = [None] * n_chunks
+    fill_out = None
+    recv[0] = a2a(chunks[0])  # S0: warm the pipeline
+    for i in range(n_chunks):
+        if i + 1 < n_chunks:
+            recv[i + 1] = a2a(chunks[i + 1])  # S_{i+1} before C_i
+        if i == 0 and fill_fn is not None:
+            fill_out = fill_fn()  # shadow compute fills the S0 bubble
+        x = recv[i].transpose(1, 0, 2, 3).reshape(E_local, mp * Cc, d)
+        y = compute_fn(x)  # C_i
+        y = y.reshape(E_local, mp, Cc, -1).transpose(1, 0, 2, 3)
+        outs[i] = a2a(y)  # R_i
+    return jnp.concatenate(outs, axis=2), fill_out

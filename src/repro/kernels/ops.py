@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.dispatch import pad_to_tiles
+from repro.kernels import fused_ffn as ff
 from repro.kernels import grouped_gemm as gg
 from repro.kernels import token_shuffle as ts
 
@@ -67,6 +68,65 @@ def _gm_bwd(impl, bm, res, dy):
 
 
 grouped_matmul.defvjp(_gm_fwd, _gm_bwd)
+
+
+# ---------------------------------------------------------------------------
+# fused grouped FFN (GEMM1 + activation + GEMM2 in one kernel)
+# ---------------------------------------------------------------------------
+
+
+def ffn_two_pass(x: jax.Array, ws: tuple, wo: jax.Array,
+                 group_sizes: jax.Array, act: str = "swiglu",
+                 impl: str = "pallas", bm: int = gg.DEFAULT_BM) -> jax.Array:
+    """Reference expert FFN as separate grouped GEMMs (materializes (M, H)).
+
+    ws: (wi,) or (wi_gate, wi_up).  This is both the numerical oracle for the
+    fused kernel and its backward fallback — the guard keeps forward/backward
+    from ever computing different functions.
+    """
+    ff.check_gating(ws, act)
+    if len(ws) == 2:
+        h = jax.nn.silu(grouped_matmul(x, ws[0], group_sizes, impl, bm))
+        h = h * grouped_matmul(x, ws[1], group_sizes, impl, bm)
+    else:
+        h = ff._activate(grouped_matmul(x, ws[0], group_sizes, impl, bm),
+                         None, act)
+    return grouped_matmul(h, wo, group_sizes, impl, bm)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
+def fused_grouped_ffn(x: jax.Array, ws: tuple, wo: jax.Array,
+                      group_sizes: jax.Array, act: str = "swiglu",
+                      bm: int = ff.DEFAULT_BM,
+                      bh: int = ff.DEFAULT_BH) -> jax.Array:
+    """y[i] = act(x[i] @ wi[g(i)]) @ wo[g(i)] with the hidden tile in VMEM.
+
+    Forward runs the fused Pallas kernel (no (M, H) HBM round-trip);
+    backward falls back to :func:`ffn_two_pass`, recomputing the hidden
+    activation through the grouped-GEMM custom_vjp.
+    """
+    E = wo.shape[0]
+    tiled = pad_to_tiles(x, group_sizes, bm, E)
+    y_p = ff.fused_ffn_tiled(tiled.x, ws, wo, tiled.tile_group, act=act,
+                             bm=bm, bh=bh, interpret=_interpret())
+    return y_p[tiled.dest]
+
+
+def _ffn_fwd(x, ws, wo, group_sizes, act, bm, bh):
+    return fused_grouped_ffn(x, ws, wo, group_sizes, act, bm, bh), (
+        x, ws, wo, group_sizes)
+
+
+def _ffn_bwd(act, bm, bh, res, dy):
+    x, ws, wo, group_sizes = res
+    _, vjp_fn = jax.vjp(
+        lambda x_, ws_, wo_: ffn_two_pass(x_, ws_, wo_, group_sizes, act,
+                                          "pallas", bm), x, ws, wo)
+    dx, dws, dwo = vjp_fn(dy)
+    return dx, dws, dwo, None
+
+
+fused_grouped_ffn.defvjp(_ffn_fwd, _ffn_bwd)
 
 
 # ---------------------------------------------------------------------------

@@ -57,6 +57,8 @@ def moe_dist(cfg: ModelConfig, mesh, num_tokens: int, *,
         constrain_tokens=bool(opts.get("constrain_tokens")),
         fsdp_axis="data" if (opts.get("constrain_tokens")
                              and "data" in mesh.axis_names) else None,
+        overlap_chunks=int(opts.get("overlap_chunks") or 0),
+        wire_dtype=opts.get("wire_dtype") or None,
     )
     total = 1
     for a in mesh.axis_names:
@@ -68,6 +70,7 @@ def moe_dist(cfg: ModelConfig, mesh, num_tokens: int, *,
     dsize = 1
     for a in d_axes:
         dsize *= mesh.shape[a]
+    # psum fallbacks: no a2a, so overlap_chunks / wire_dtype don't apply
     if num_tokens % dsize == 0:
         return DistConfig(mesh, d_axes, expert_axis=expert_axis, tp_axis=None,
                           constrain_tokens=extra["constrain_tokens"])
@@ -172,7 +175,8 @@ class ReplanHook:
                  num_microbatches: int = 1, opts: Optional[dict] = None):
         from repro.core.dispatch import expert_capacity
         from repro.core.monitor import LoadMonitor
-        from repro.placement import PlacementController, identity_placement
+        from repro.placement import (PlacementController, identity_placement,
+                                     load_calibration)
 
         self.cfg, self.opt, self.mesh = cfg, opt, mesh
         self.global_batch, self.seq_len = global_batch, seq_len
@@ -198,11 +202,17 @@ class ReplanHook:
         cap = expert_capacity(t_local, moe.num_experts, moe.top_k,
                               moe.capacity_factor)
         self.monitor = LoadMonitor(moe.num_experts)
+        # price plans with bandwidths measured on THIS machine when the
+        # benchmark suite has left results behind (v5e roofline otherwise),
+        # and with the bytes the wire actually moves under wire_dtype
+        constants = load_calibration()
+        wire_bytes = 2 if (opts or {}).get("wire_dtype") == "bf16" else 4
         self.controller = PlacementController(
             self.monitor, ranks, d_model=cfg.d_model,
             d_hidden=moe.d_expert_hidden, capacity=cap,
             capacity_factor=moe.capacity_factor,
-            every=every if self.enabled else 0)
+            every=every if self.enabled else 0, bytes_per_elem=wire_bytes,
+            constants=constants)
         # fetch load to host only on sampled steps: a per-step device_get
         # would serialize host and device for a decision made every `every`
         self.sync_every = max(1, every // 16)
@@ -260,6 +270,12 @@ def main() -> None:
     ap.add_argument("--replan_every", type=int, default=0,
                     help="steps between expert-placement replans "
                          "(0 = off; needs --mesh and an MoE arch)")
+    ap.add_argument("--overlap_chunks", type=int, default=0,
+                    help="§5.2 smart schedule: pipeline the expert all-to-all "
+                         "with compute in this many capacity micro-shards "
+                         "(0/1 = serial; needs --mesh and an MoE arch)")
+    ap.add_argument("--wire_dtype", default="", choices=["", "bf16"],
+                    help="cast a2a payloads across the wire (halves bytes)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -267,20 +283,22 @@ def main() -> None:
         cfg = reduced(cfg, num_layers=4, d_model=256)
     opt = AdamW(lr=args.lr)
 
+    opts = {"overlap_chunks": args.overlap_chunks,
+            "wire_dtype": args.wire_dtype or None}
     hook = None
     if args.mesh:
         d, m = (int(v) for v in args.mesh.split("x"))
         mesh = make_local_mesh(d, m)
         step_fn, pshard, oshard = jit_train_step(
             cfg, opt, mesh, args.batch, args.seq,
-            num_microbatches=args.microbatches)
+            num_microbatches=args.microbatches, opts=opts)
         params = jax.device_put(lm.init_params(jax.random.PRNGKey(0), cfg),
                                 pshard)
         opt_state = jax.device_put(opt.init(params), oshard)
         if args.replan_every and cfg.moe is not None and m > 1:
             hook = ReplanHook(cfg, opt, mesh, args.batch, args.seq,
                               every=args.replan_every,
-                              num_microbatches=args.microbatches)
+                              num_microbatches=args.microbatches, opts=opts)
             if not hook.enabled:  # no a2a path here: skip the per-step sync
                 print("replan disabled: placement needs the a2a expert path")
                 hook = None

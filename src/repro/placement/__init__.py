@@ -1,9 +1,12 @@
 """Dynamic expert placement & shadowing (closing FastMoE §6's open loop).
 
-plan.py    — ExpertPlacement + roofline cost model + PlacementController
-migrate.py — permute live params / optimizer state between layouts
-shadow.py  — replicated hot-expert execution, skipped in the all-to-all
+plan.py      — ExpertPlacement + roofline cost model + PlacementController
+migrate.py   — permute live params / optimizer state between layouts
+shadow.py    — replicated hot-expert execution, skipped in the all-to-all
+calibrate.py — cost-model constants measured from benchmarks/results
 """
+from repro.placement.calibrate import (CostConstants, calibrate_constants,
+                                       load_calibration)
 from repro.placement.migrate import (from_logical, migrate,
                                      router_index_table, to_logical)
 from repro.placement.plan import (ExpertPlacement, PlacementController,
@@ -13,8 +16,9 @@ from repro.placement.shadow import (ShadowSpec, merge_outputs, shadow_spec,
                                     split_buffer)
 
 __all__ = [
-    "ExpertPlacement", "PlacementController", "ShadowSpec", "from_logical",
-    "identity_placement", "merge_outputs", "migrate", "placement_cost",
+    "CostConstants", "ExpertPlacement", "PlacementController", "ShadowSpec",
+    "calibrate_constants", "from_logical", "identity_placement",
+    "load_calibration", "merge_outputs", "migrate", "placement_cost",
     "plan_placement", "router_index_table", "shadow_spec", "split_buffer",
     "to_logical",
 ]

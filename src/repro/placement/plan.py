@@ -30,7 +30,7 @@ from typing import NamedTuple, Optional
 import numpy as np
 
 from repro.core.monitor import expert_placement as greedy_placement
-from repro.launch.roofline import HBM_BW, ICI_BW, PEAK_FLOPS
+from repro.placement.calibrate import CostConstants
 
 
 def _round8(n: float) -> int:
@@ -117,7 +117,8 @@ class PlacementCost(NamedTuple):
 def placement_cost(place: ExpertPlacement, load: np.ndarray, *,
                    d_model: int, d_hidden: int, capacity: int,
                    capacity_factor: float = 1.0, bytes_per_elem: int = 4,
-                   train: bool = True, replan_every: int = 200) -> PlacementCost:
+                   train: bool = True, replan_every: int = 200,
+                   constants: Optional[CostConstants] = None) -> PlacementCost:
     """Modeled per-step cost of executing under ``place`` with ``load``.
 
     a2a term: dispatch + return payload of the *owned* buffer, forward and
@@ -125,14 +126,19 @@ def placement_cost(place: ExpertPlacement, load: np.ndarray, *,
     parameters, so their grads all-reduce every step and their weights
     broadcast once per replan interval.  hbm term: every rank streams the
     shadow weights in addition to its own shard.
+
+    ``constants`` prices the terms; defaults to the static v5e roofline —
+    pass :func:`repro.placement.calibrate.load_calibration` output to use
+    bandwidths measured on this machine instead.
     """
+    c = constants if constants is not None else CostConstants()
     load = np.asarray(load, np.float64)
     load = load / max(load.sum(), 1e-12)
     E, S = place.num_experts, place.num_shadow
     c_main = place.main_capacity(capacity)
     dirs = 4.0 if train else 2.0  # dispatch+return, x2 for backward
     a2a_bytes = place.num_owned * c_main * d_model * bytes_per_elem
-    a2a_s = dirs * a2a_bytes / ICI_BW
+    a2a_s = dirs * a2a_bytes / c.ici_bw
 
     w_elems = 3 * d_model * d_hidden  # swiglu-shaped expert: 3 projections
     sync_s = 0.0
@@ -140,9 +146,9 @@ def placement_cost(place: ExpertPlacement, load: np.ndarray, *,
     if S:
         shadow_w_bytes = S * w_elems * bytes_per_elem
         if train:  # replicated weights => grad all-reduce (2 hops of a ring)
-            sync_s += 2.0 * shadow_w_bytes / ICI_BW
-        sync_s += shadow_w_bytes / ICI_BW / max(replan_every, 1)
-        hbm_s += shadow_w_bytes / HBM_BW
+            sync_s += 2.0 * shadow_w_bytes / c.ici_bw
+        sync_s += shadow_w_bytes / c.ici_bw / max(replan_every, 1)
+        hbm_s += shadow_w_bytes / c.hbm_bw
     # quality proxy: tokens beyond an expert's capacity are dropped.  Owned
     # experts see the (possibly shrunk) a2a capacity; shadowed experts keep
     # the full per-rank buffer.
@@ -153,10 +159,9 @@ def placement_cost(place: ExpertPlacement, load: np.ndarray, *,
     per_rank_arrivals = load * capacity * E / max(capacity_factor, 1e-9)
     over = np.maximum(per_rank_arrivals - caps, 0.0).sum()
     drop = float(over / max(per_rank_arrivals.sum(), 1e-12))
-    # unused PEAK_FLOPS charge: shadow compute per rank replaces the owner's
+    # no peak_flops charge: shadow compute per rank replaces the owner's
     # mp-fanned buffer rows one-for-one (E*C slots per rank either way), so
-    # the FLOP term cancels; keep the constant imported for future models.
-    _ = PEAK_FLOPS
+    # the FLOP term cancels; c.peak_flops is there for future cost models.
     return PlacementCost(a2a_s, sync_s, hbm_s, drop)
 
 
@@ -169,7 +174,8 @@ def plan_placement(load: np.ndarray, num_ranks: int, *, d_model: int,
                    d_hidden: int, capacity: int, capacity_factor: float = 1.0,
                    bytes_per_elem: int = 4, train: bool = True,
                    replan_every: int = 200, max_shadow_frac: float = 0.5,
-                   shrink_capacity: bool = True) -> ExpertPlacement:
+                   shrink_capacity: bool = True,
+                   constants: Optional[CostConstants] = None) -> ExpertPlacement:
     """Choose shadow set + permutation minimizing the modeled step cost.
 
     Scans shadow counts S in multiples of ``num_ranks`` (so the owned block
@@ -207,7 +213,7 @@ def plan_placement(load: np.ndarray, num_ranks: int, *, d_model: int,
 
     kw = dict(d_model=d_model, d_hidden=d_hidden, capacity=capacity,
               capacity_factor=capacity_factor, bytes_per_elem=bytes_per_elem,
-              train=train, replan_every=replan_every)
+              train=train, replan_every=replan_every, constants=constants)
     base = build(0)
     # drops are a quality regression, not a time cost: never trade them
     base_drop = placement_cost(base, load, **kw).drop_frac
@@ -240,14 +246,17 @@ class PlacementController:
     def __init__(self, monitor, num_ranks: int, *, d_model: int,
                  d_hidden: int, capacity: int, capacity_factor: float = 1.0,
                  every: int = 200, min_gain: float = 0.02, train: bool = True,
-                 shrink_capacity: bool = True):
+                 shrink_capacity: bool = True, bytes_per_elem: int = 4,
+                 constants: Optional[CostConstants] = None):
         self.monitor = monitor
         self.num_ranks = num_ranks
         self.every = every
         self.min_gain = min_gain
+        self.constants = constants if constants is not None else CostConstants()
         self.kw = dict(d_model=d_model, d_hidden=d_hidden, capacity=capacity,
                        capacity_factor=capacity_factor, train=train,
-                       replan_every=every, shrink_capacity=shrink_capacity)
+                       replan_every=every, shrink_capacity=shrink_capacity,
+                       bytes_per_elem=bytes_per_elem, constants=self.constants)
         self.current = identity_placement(monitor.num_experts, num_ranks)
         self.replans = 0
 

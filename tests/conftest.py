@@ -7,8 +7,9 @@ import pytest
 # Import-safe, single-device, fast modules — the tier-1 subset scripts/ci.sh
 # runs on every change (the full suite adds multi-process + model smokes).
 TIER1_MODULES = {
-    "test_dispatch", "test_fmoe", "test_gate", "test_gate_variants",
-    "test_placement", "test_sharding_rules", "test_substrate",
+    "test_calibrate", "test_dispatch", "test_fmoe", "test_fused_ffn",
+    "test_gate", "test_gate_variants", "test_placement",
+    "test_sharding_rules", "test_substrate",
 }
 
 

@@ -1,0 +1,94 @@
+"""Cost-model calibration from measured benchmark results (ROADMAP
+follow-on: constants from benchmarks/results/results.json, not v5e)."""
+import json
+import os
+
+import numpy as np
+
+from repro.launch.roofline import ICI_BW, PEAK_FLOPS
+from repro.placement import (CostConstants, calibrate_constants,
+                             identity_placement, load_calibration,
+                             placement_cost, plan_placement)
+from repro.placement.calibrate import default_results_path
+
+
+def test_informative_fig8_sets_wire_bandwidth():
+    res = {"fig8": [{"us_off": 1000.0, "us_on": 600.0,
+                     "a2a_elems_off": 262144, "a2a_elems_on": 98304,
+                     "backend": "tpu"}]}
+    c = calibrate_constants(res)
+    expect = 2.0 * (262144 - 98304) * 4 / 400e-6
+    np.testing.assert_allclose(c.ici_bw, expect, rtol=1e-9)
+    assert c.source == "measured:fig8"
+
+
+def test_non_informative_measurements_keep_roofline():
+    # us_on > us_off: shrinking the buffer didn't pay on this machine
+    res = {"fig8": [{"us_off": 600.0, "us_on": 1000.0,
+                     "a2a_elems_off": 262144, "a2a_elems_on": 98304,
+                     "backend": "tpu"}]}
+    c = calibrate_constants(res)
+    assert c.ici_bw == ICI_BW and c.source == "v5e-roofline"
+    # absurd deltas are clamped out too
+    res = {"fig8": [{"us_off": 1e12, "us_on": 0.0,
+                     "a2a_elems_off": 2, "a2a_elems_on": 1,
+                     "backend": "tpu"}]}
+    assert calibrate_constants(res).ici_bw == ICI_BW
+
+
+def test_cpu_fake_device_rows_never_calibrate():
+    """Fake-device 'collectives' are memcpys: a CPU-tagged (or untagged,
+    pre-tag) fig8 row with a right-sign delta must NOT set the wire
+    bandwidth — it would price real ICI traffic ~100x too expensive."""
+    row = {"us_off": 24357.5, "us_on": 21946.2,
+           "a2a_elems_off": 262144, "a2a_elems_on": 98304}
+    for tag in ({"backend": "cpu"}, {}):
+        c = calibrate_constants({"fig8": [dict(row, **tag)],
+                                 "fig3": [dict(gflops=50.0, **tag)]})
+        assert c == CostConstants(), tag
+
+
+def test_fig3_sets_peak_flops():
+    res = {"fig3": [{"gflops": 55.0, "backend": "gpu"},
+                    {"gflops": 112.5, "backend": "gpu"}]}
+    c = calibrate_constants(res)
+    assert c.peak_flops == 112.5e9 and "fig3" in c.source
+    assert c.ici_bw == ICI_BW  # untouched without fig8
+
+
+def test_load_calibration_handles_missing_and_real_file(tmp_path):
+    assert load_calibration(str(tmp_path / "nope.json")) == CostConstants()
+    bad = tmp_path / "bad.json"
+    bad.write_text("{not json")
+    assert load_calibration(str(bad)) == CostConstants()
+    good = tmp_path / "results.json"
+    good.write_text(json.dumps({"fig3": [{"gflops": 7.0, "backend": "tpu"}]}))
+    assert load_calibration(str(good)).peak_flops == 7e9
+    # whatever is on disk must parse without blowing up; rows measured on a
+    # CPU (fake-device) box must never calibrate — real-accelerator rows may
+    c = load_calibration(default_results_path())
+    assert c.ici_bw > 0 and c.peak_flops > 0
+    path = default_results_path()
+    if os.path.exists(path):
+        rows = [r for rs in json.load(open(path)).values() for r in rs]
+        if not any(r.get("backend") in ("tpu", "gpu") for r in rows):
+            assert c.source == "v5e-roofline"
+
+
+def test_constants_steer_the_planner():
+    """The constants must actually change planning decisions: with HBM
+    priced absurdly slow, streaming replicated shadow weights never pays."""
+    p = 1.0 / (np.arange(16) + 1) ** 1.2
+    load = p / p.sum()
+    kw = dict(d_model=64, d_hidden=128, capacity=256, capacity_factor=2.0)
+    assert plan_placement(load, 4, **kw).num_shadow > 0
+    slow_hbm = CostConstants(hbm_bw=1e3)
+    assert plan_placement(load, 4, constants=slow_hbm, **kw).num_shadow == 0
+    # and the cost report prices with them
+    place = identity_placement(16, 4)
+    base = placement_cost(place, load, **kw)
+    scaled = placement_cost(place, load,
+                            constants=CostConstants(ici_bw=ICI_BW / 10), **kw)
+    np.testing.assert_allclose(scaled.a2a_s, 10 * base.a2a_s, rtol=1e-9)
+    assert base.total_s < scaled.total_s
+    _ = PEAK_FLOPS  # referenced: flop term intentionally cancels in the model

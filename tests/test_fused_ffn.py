@@ -1,0 +1,147 @@
+"""Fused expert-FFN kernel vs the two-pass grouped-GEMM reference.
+
+Acceptance (ISSUE 2): forward and grad match within fp32 tolerance, and the
+fused program materializes no (M, H) hidden intermediate — the two GEMMs and
+the activation live in one pallas_call with the hidden tile in VMEM.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.configs.base import MoEConfig
+from repro.core import fmoe
+from repro.kernels import ops
+
+TOLS = {jnp.float32: dict(rtol=2e-5, atol=2e-5),
+        jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
+
+
+def _setup(E, K, H, N, gated, dtype=jnp.float32, seed=0, total=96):
+    rng = np.random.default_rng(seed)
+    gs = jnp.asarray(rng.multinomial(total, np.ones(E) / E), jnp.int32)
+    M = int(gs.sum())
+    x = jnp.asarray(rng.normal(size=(M, K)), dtype)
+    ws = tuple(jnp.asarray(rng.normal(size=(E, K, H)) * 0.1, dtype)
+               for _ in range(2 if gated else 1))
+    wo = jnp.asarray(rng.normal(size=(E, H, N)) * 0.1, dtype)
+    return x, ws, wo, gs
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("act,gated", [("swiglu", True), ("gelu", False),
+                                       ("rwkv", False)])
+def test_fused_matches_two_pass_forward(act, gated, dtype):
+    x, ws, wo, gs = _setup(4, 32, 48, 24, gated, dtype)
+    y = ops.fused_grouped_ffn(x, ws, wo, gs, act, 8, 16)
+    y_ref = ops.ffn_two_pass(x, ws, wo, gs, act, "pallas", 8)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32), **TOLS[dtype])
+
+
+@pytest.mark.parametrize("act,gated", [("swiglu", True), ("gelu", False)])
+def test_fused_grad_matches_two_pass(act, gated):
+    x, ws, wo, gs = _setup(3, 24, 32, 16, gated, seed=3, total=60)
+
+    def l_fused(x, ws, wo):
+        return (ops.fused_grouped_ffn(x, ws, wo, gs, act, 8, 16) ** 2).sum()
+
+    def l_ref(x, ws, wo):
+        return (ops.ffn_two_pass(x, ws, wo, gs, act, "pallas", 8) ** 2).sum()
+
+    gk = jax.grad(l_fused, argnums=(0, 1, 2))(x, ws, wo)
+    gr = jax.grad(l_ref, argnums=(0, 1, 2))(x, ws, wo)
+    for a, b in zip(jax.tree.leaves(gk), jax.tree.leaves(gr)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4,
+                                   atol=1e-4)
+
+
+def test_fused_tail_hidden_tile():
+    """bh not dividing H exercises the masked tail tile (on real TPU the
+    out-of-bounds tail reads are garbage; the kernel must zero them)."""
+    x, ws, wo, gs = _setup(4, 32, 56, 24, True, seed=5)  # 56 % 16 == 8
+    y = ops.fused_grouped_ffn(x, ws, wo, gs, "swiglu", 8, 16)
+    y_ref = ops.ffn_two_pass(x, ws, wo, gs, "swiglu", "pallas", 8)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=2e-5,
+                               atol=2e-5)
+
+
+def test_gating_weight_count_must_match_act():
+    """Gated ws with act != swiglu would make fwd (kernel ignores wi_up) and
+    bwd (two-pass computes silu*up) different functions; a single wi with
+    swiglu (the *default* act) would multiply by None mid-trace.  Both
+    directions must raise a clear ValueError."""
+    x, ws2, wo, gs = _setup(2, 16, 24, 8, True, total=32)
+    ws1 = ws2[:1]
+    for ws, act in ((ws2, "gelu"), (ws1, "swiglu")):
+        for fn in (lambda: ops.fused_grouped_ffn(x, ws, wo, gs, act, 8, 16),
+                   lambda: ops.ffn_two_pass(x, ws, wo, gs, act, "pallas", 8)):
+            with pytest.raises(ValueError, match="swiglu"):
+                fn()
+
+
+def test_fused_empty_groups():
+    gs = jnp.array([0, 10, 0, 6], jnp.int32)
+    x, ws, wo, _ = _setup(4, 32, 48, 24, True, total=16)
+    y = ops.fused_grouped_ffn(x, ws, wo, gs, "swiglu", 8, 16)
+    y_ref = ops.ffn_two_pass(x, ws, wo, gs, "swiglu", "pallas", 8)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=2e-5,
+                               atol=2e-5)
+
+
+def test_no_hidden_materialization():
+    """The fused jaxpr holds no (M_padded, H) intermediate: the hidden
+    activation exists only as VMEM tiles inside the single pallas_call.  The
+    two-pass jaxpr (oracle for the check itself) does materialize it."""
+    E, K, H, N, bm = 4, 32, 48, 24, 8
+    x, ws, wo, gs = _setup(E, K, H, N, True)
+
+    def shapes_of(fn):
+        jaxpr = jax.make_jaxpr(fn)(x, ws, wo)
+        shapes = set()
+        for eqn in jaxpr.jaxpr.eqns:
+            for v in eqn.outvars:
+                if hasattr(v.aval, "shape"):
+                    shapes.add(tuple(v.aval.shape))
+        return jaxpr, shapes
+
+    jaxpr_f, fused_shapes = shapes_of(
+        lambda x, ws, wo: ops.fused_grouped_ffn(x, ws, wo, gs, "swiglu", bm, 16))
+    _, ref_shapes = shapes_of(
+        lambda x, ws, wo: ops.ffn_two_pass(x, ws, wo, gs, "swiglu", "pallas", bm))
+    hidden = {s for s in ref_shapes if len(s) == 2 and s[1] == H}
+    assert hidden, "oracle: two-pass must materialize (M, H)"
+    assert not (fused_shapes & hidden), fused_shapes & hidden
+    assert str(jaxpr_f).count("pallas_call") == 1
+
+
+def test_expert_fn_fused_in_fmoe():
+    """impl="fused" through the full MoE layer == the einsum expert_fn."""
+    cfg = MoEConfig(num_experts=4, top_k=2, d_expert_hidden=48)
+    params = fmoe.fmoe_init(jax.random.PRNGKey(0), 32, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (16, 32))
+    for act in ("swiglu", "gelu"):
+        p = fmoe.fmoe_init(jax.random.PRNGKey(0), 32, cfg, act=act)
+        y0, _ = fmoe.fmoe_apply(p, x, cfg, act=act, impl="einsum")
+        y1, _ = fmoe.fmoe_apply(p, x, cfg, act=act, impl="fused")
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y0), rtol=2e-5,
+                                   atol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(E=st.sampled_from([2, 4]), bm=st.sampled_from([8, 16]),
+       bh=st.sampled_from([8, 16, 64]), seed=st.integers(0, 100))
+def test_fused_property(E, bm, bh, seed):
+    rng = np.random.default_rng(seed)
+    gs = jnp.asarray(rng.integers(0, 30, E), jnp.int32)
+    M = max(int(gs.sum()), 1)
+    gs = gs.at[0].add(M - int(gs.sum()))
+    x = jnp.asarray(rng.normal(size=(M, 16)), jnp.float32)
+    ws = (jnp.asarray(rng.normal(size=(E, 16, 24)) * 0.2, jnp.float32),
+          jnp.asarray(rng.normal(size=(E, 16, 24)) * 0.2, jnp.float32))
+    wo = jnp.asarray(rng.normal(size=(E, 24, 8)) * 0.2, jnp.float32)
+    y = ops.fused_grouped_ffn(x, ws, wo, gs, "swiglu", bm, bh)
+    y_ref = ops.ffn_two_pass(x, ws, wo, gs, "swiglu", "pallas", bm)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=1e-4,
+                               atol=1e-4)

@@ -1,0 +1,201 @@
+"""Smart-schedule overlap tests (repro/core/pipeline.py): the chunked,
+ppermute-decomposed exchange must be *bit-exact* vs the serial all-to-all,
+composed with shadow placement, expert-internal TP and the bf16 wire.
+
+Multi-device cases run in subprocesses with fake host devices (same contract
+as tests/test_distributed.py: the main process keeps its single CPU device).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+from repro.core.pipeline import resolve_chunks
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(script: str, devices: int = 8) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(script)],
+                         capture_output=True, text=True, env=env, timeout=560)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_resolve_chunks():
+    assert resolve_chunks(0, 64) == 1
+    assert resolve_chunks(1, 64) == 1
+    assert resolve_chunks(4, 64) == 4
+    assert resolve_chunks(3, 64) == 2  # nearest feasible divisor below
+    assert resolve_chunks(5, 64) == 4
+    assert resolve_chunks(100, 64) == 64  # capped at capacity
+    assert resolve_chunks(7, 7) == 7
+
+
+def test_moe_dist_threads_overlap_options():
+    """launch.train.moe_dist must carry overlap_chunks/wire_dtype into the
+    a2a DistConfig (and only there — psum fallbacks have no exchange)."""
+    import jax
+    from repro.configs import get_config, reduced
+    from repro.launch.train import moe_dist
+
+    cfg = reduced(get_config("fastmoe-gpt"))
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    dist = moe_dist(cfg, mesh, 64,
+                    opts={"overlap_chunks": 4, "wire_dtype": "bf16"})
+    assert dist.overlap_chunks == 4 and dist.wire_dtype == "bf16"
+    assert dist.mode == "a2a"
+    dist = moe_dist(cfg, mesh, 64, opts={})
+    assert dist.overlap_chunks == 0 and dist.wire_dtype is None
+
+
+_SETUP = """
+    import numpy as np, jax, jax.numpy as jnp
+    from repro.configs.base import MoEConfig
+    from repro.core import fmoe
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    cfg = MoEConfig(num_experts=8, top_k=2, d_expert_hidden=64,
+                    capacity_factor=8.0)
+    params = fmoe.fmoe_init(jax.random.PRNGKey(0), 32, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 16, 32))
+    def apply(dist, p=None):
+        with mesh:
+            return jax.jit(lambda p_, x_: fmoe.fmoe_apply(p_, x_, cfg,
+                                                          dist=dist))(p or params, x)
+    y0, m0 = apply(fmoe.DistConfig(mesh, ("data", "model")))
+"""
+
+
+def test_ppermute_a2a_equals_lax_all_to_all():
+    """The decomposed exchange is pure data movement: bitwise equal to
+    lax.all_to_all for single and tuple mesh axes, f32 and bf16."""
+    out = _run("""
+    import numpy as np, jax, jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro import compat
+    from repro.core.pipeline import chunked_all_to_all, ppermute_all_to_all
+
+    for shape, axes in [((4,), ("model",)), ((2, 2), ("pod", "model"))]:
+        mesh = jax.make_mesh(shape, axes)
+        ax = axes[0] if len(axes) == 1 else axes
+        mp = 4
+        x = jnp.arange(4 * 4 * 6 * 5, dtype=jnp.float32).reshape(4 * 4, 6, 5)
+        spec = P(ax, None, None)
+        ref = compat.shard_map(
+            lambda b: jax.lax.all_to_all(b, ax, 0, 0, tiled=True),
+            mesh=mesh, in_specs=spec, out_specs=spec, check_vma=False)
+        pp = compat.shard_map(
+            lambda b: ppermute_all_to_all(b, ax, mp),
+            mesh=mesh, in_specs=spec, out_specs=spec, check_vma=False)
+        ck = compat.shard_map(
+            lambda b: chunked_all_to_all(b, ax, mp, 3),
+            mesh=mesh, in_specs=spec, out_specs=spec, check_vma=False)
+        with mesh:
+            np.testing.assert_array_equal(np.asarray(ref(x)), np.asarray(pp(x)))
+            np.testing.assert_array_equal(np.asarray(ref(x)), np.asarray(ck(x)))
+        # wire cast round-trips through bf16 exactly for bf16 payloads
+        xb = x.astype(jnp.bfloat16)
+        ppb = compat.shard_map(
+            lambda b: ppermute_all_to_all(b, ax, mp, wire_dtype=jnp.bfloat16),
+            mesh=mesh, in_specs=spec, out_specs=spec, check_vma=False)
+        refb = compat.shard_map(
+            lambda b: jax.lax.all_to_all(b, ax, 0, 0, tiled=True),
+            mesh=mesh, in_specs=spec, out_specs=spec, check_vma=False)
+        with mesh:
+            np.testing.assert_array_equal(np.asarray(refb(xb)), np.asarray(ppb(xb)))
+    print("ppermute a2a ok")
+    """)
+    assert "ppermute a2a ok" in out
+
+
+def test_chunked_moe_bit_exact_vs_serial():
+    """Acceptance: the pipelined path (any chunking, incl. non-dividing
+    requests) returns bit-identical outputs, metrics and gradients."""
+    out = _run(_SETUP + """
+    def loss(p, dist):
+        y, m = fmoe.fmoe_apply(p, x, cfg, dist=dist)
+        return (y ** 2).mean() + 0.01 * m.aux_loss
+    with mesh:
+        g0 = jax.jit(lambda p: jax.grad(loss)(p, fmoe.DistConfig(mesh, ("data", "model"))))(params)
+    for nc in (2, 4, 3, 16):
+        dist = fmoe.DistConfig(mesh, ("data", "model"), overlap_chunks=nc)
+        y1, m1 = apply(dist)
+        assert (np.asarray(y0) == np.asarray(y1)).all(), nc
+        np.testing.assert_array_equal(np.asarray(m0.load), np.asarray(m1.load))
+    dist = fmoe.DistConfig(mesh, ("data", "model"), overlap_chunks=4)
+    with mesh:
+        g1 = jax.jit(lambda p: jax.grad(loss)(p, dist))(params)
+    for a, b in zip(jax.tree.leaves(g0), jax.tree.leaves(g1)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+    # the pipelined schedule lowers to async-schedulable collective-permutes
+    with mesh:
+        txt = jax.jit(lambda p, x_: fmoe.fmoe_apply(p, x_, cfg, dist=dist)[0]
+                      ).lower(params, x).compile().as_text()
+    assert "collective-permute" in txt
+    print("chunked bit-exact ok")
+    """)
+    assert "chunked bit-exact ok" in out
+
+
+def test_chunked_composes_with_shadow_and_tp():
+    """overlap_chunks must compose with placement/shadowing (shadow compute
+    as overlap filler) and with expert-internal TP."""
+    out = _run(_SETUP + """
+    from repro.placement import ExpertPlacement, from_logical
+    load = np.asarray(m0.load)
+    hot = np.argsort(-load)
+    S = 4
+    phys = tuple(int(e) for e in np.sort(hot[S:])) + tuple(int(e) for e in hot[:S])
+    plan = ExpertPlacement(8, 4, phys, num_shadow=S, capacity_scale=1.0)
+    pp = from_logical(params, plan)
+    for nc in (0, 4):
+        dist = fmoe.DistConfig(mesh, ("data", "model"), placement=plan,
+                               overlap_chunks=nc)
+        y1, m1 = apply(dist, pp)
+        assert float(jnp.abs(y1 - y0).max()) < 1e-5, nc
+        np.testing.assert_allclose(np.asarray(m1.load), load, atol=1e-6)
+    yt0, _ = apply(fmoe.DistConfig(mesh, ("data", "model"), tp_axis="data"))
+    yt1, _ = apply(fmoe.DistConfig(mesh, ("data", "model"), tp_axis="data",
+                                   overlap_chunks=4))
+    assert (np.asarray(yt0) == np.asarray(yt1)).all()
+    print("shadow+tp compose ok")
+    """)
+    assert "shadow+tp compose ok" in out
+
+
+def test_wire_dtype_bf16_round_trip_tolerance():
+    """Satellite: DistConfig.wire_dtype="bf16" halves payload bytes; the
+    round-trip must stay within bf16 quantization of the f32 path and be
+    bit-exact between serial and chunked schedules."""
+    out = _run(_SETUP + """
+    ys = {}
+    for nc in (0, 4):
+        dist = fmoe.DistConfig(mesh, ("data", "model"), overlap_chunks=nc,
+                               wire_dtype="bf16")
+        ys[nc], _ = apply(dist)
+        # bf16 has 8 mantissa bits: payload error ~2^-8 relative, amplified
+        # a little by the combine weights
+        err = float(jnp.abs(ys[nc] - y0).max())
+        assert err < 0.05, (nc, err)
+        assert err > 0  # the cast really happened
+    assert (np.asarray(ys[0]) == np.asarray(ys[4])).all()
+    # program structure: the payload exchange really runs at bf16.  (The
+    # compiled-HLO byte count is backend-dependent — XLA:CPU commutes the
+    # widening convert across the collective — so check the traced program,
+    # where the wire dtype is what _moe_a2a asked for.)
+    dist = fmoe.DistConfig(mesh, ("data", "model"), wire_dtype="bf16")
+    with mesh:
+        jaxpr = str(jax.make_jaxpr(
+            lambda p, x_: fmoe.fmoe_apply(p, x_, cfg, dist=dist)[0])(params, x))
+    assert "all_to_all" in jaxpr and "bf16" in jaxpr
+    dist32 = fmoe.DistConfig(mesh, ("data", "model"))
+    with mesh:
+        jaxpr32 = str(jax.make_jaxpr(
+            lambda p, x_: fmoe.fmoe_apply(p, x_, cfg, dist=dist32)[0])(params, x))
+    assert "bf16" not in jaxpr32
+    print("wire dtype ok")
+    """)
+    assert "wire dtype ok" in out

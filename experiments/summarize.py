@@ -80,10 +80,11 @@ def opt_delta_table():
 
 
 def moe_bench_table():
-    """Measured MoE benches: fig8 (placement off/on) + fig9 (overlap)."""
+    """Measured MoE benches: fig8 (placement), fig9 (overlap), fig10
+    (fwd+bwd train step, two-pass vs fused kernels)."""
     if not os.path.exists(RESULTS):
         print("(no benchmarks/results/results.json — run "
-              "`PYTHONPATH=src python -m benchmarks.run --only fig8,fig9`)")
+              "`PYTHONPATH=src python -m benchmarks.run --only fig8,fig9,fig10`)")
         return
     res = json.load(open(RESULTS))
     print("| bench | setting | us | detail |")
@@ -102,6 +103,10 @@ def moe_bench_table():
               f"collective_permutes={r['hlo_collective_permute_pipelined']} "
               f"chunk_elems={r['chunk_elems']} "
               f"bit_exact={r['bit_exact']} |")
+    for r in res.get("fig10", []):
+        print(f"| fig10 | {r['dispatch']}/{r['impl']} | {r['us']:.0f} | "
+              f"fwd+bwd tokens={r['tokens']} "
+              f"materializes_MH={r['materializes_mh']} |")
 
 
 if __name__ == "__main__":

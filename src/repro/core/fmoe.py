@@ -145,43 +145,87 @@ def expert_ffn(params: dict, xs: jax.Array, act: str) -> jax.Array:
     return jnp.einsum("enh,ehd->end", h, params["wo"])
 
 
+def _expert_ws(params: dict, act: str) -> tuple:
+    """(wi_gate, wi_up) for swiglu, (wi,) otherwise — the kernels' contract."""
+    return ((params["wi_gate"], params["wi_up"]) if act == "swiglu"
+            else (params["wi"],))
+
+
 def expert_ffn_pallas(params: dict, xs: jax.Array, act: str) -> jax.Array:
     """expert_fn backed by the Pallas grouped-GEMM kernel (equal-size groups)."""
+    from repro.kernels import grouped_gemm as gg
     from repro.kernels import ops  # lazy: keeps core importable without kernels
 
     E, n, d = xs.shape
     flat = xs.reshape(E * n, d)
     sizes = jnp.full((E,), n, jnp.int32)
+    aligned = n % gg.DEFAULT_BM == 0  # whole row tiles: skip pad/gather
     if act == "swiglu":
-        h = jax.nn.silu(ops.grouped_matmul(flat, params["wi_gate"], sizes))
-        h = h * ops.grouped_matmul(flat, params["wi_up"], sizes)
+        h = jax.nn.silu(ops.grouped_matmul(flat, params["wi_gate"], sizes,
+                                           "pallas", gg.DEFAULT_BM, aligned))
+        h = h * ops.grouped_matmul(flat, params["wi_up"], sizes,
+                                   "pallas", gg.DEFAULT_BM, aligned)
     else:
-        h = _act(ops.grouped_matmul(flat, params["wi"], sizes), act)
-    return ops.grouped_matmul(h, params["wo"], sizes).reshape(E, n, -1)
+        h = _act(ops.grouped_matmul(flat, params["wi"], sizes,
+                                    "pallas", gg.DEFAULT_BM, aligned), act)
+    return ops.grouped_matmul(h, params["wo"], sizes,
+                              "pallas", gg.DEFAULT_BM, aligned).reshape(E, n, -1)
 
 
 def expert_ffn_fused(params: dict, xs: jax.Array, act: str) -> jax.Array:
     """expert_fn backed by the fused GEMM1+act+GEMM2 Pallas kernel.
 
     Unlike the two-pass path, the (M, H) hidden activation never
-    materializes in HBM (see repro.kernels.fused_ffn); backward falls back
-    to the two-pass grouped GEMMs via the kernel's custom_vjp.
+    materializes in HBM — in the forward or the backward (fused dX / dW
+    kernels via the custom_vjp; see repro.kernels.fused_ffn_bwd).
     """
+    from repro.kernels import fused_ffn as ffk
     from repro.kernels import ops  # lazy: keeps core importable without kernels
 
     E, n, d = xs.shape
     flat = xs.reshape(E * n, d)
     sizes = jnp.full((E,), n, jnp.int32)
-    ws = ((params["wi_gate"], params["wi_up"]) if act == "swiglu"
-          else (params["wi"],))
-    return ops.fused_grouped_ffn(flat, ws, params["wo"], sizes,
-                                 act).reshape(E, n, -1)
+    aligned = n % ffk.DEFAULT_BM == 0  # whole row tiles: skip pad/gather
+    return ops.fused_grouped_ffn(flat, _expert_ws(params, act), params["wo"],
+                                 sizes, act, ffk.DEFAULT_BM, ffk.DEFAULT_BH,
+                                 aligned).reshape(E, n, -1)
 
 
 EXPERT_FNS: dict[str, Callable] = {
     "einsum": expert_ffn,
     "pallas": expert_ffn_pallas,
     "fused": expert_ffn_fused,
+}
+
+
+# Ragged (dropless) analogues: expert-sorted (T*k, d) rows with variable
+# group sizes.  "einsum"/"pallas" run the two-pass grouped GEMMs;
+# "fused" runs the fused fwd+bwd kernels — same selection axis as
+# EXPERT_FNS so every dispatch mode exposes every impl.
+
+
+def ragged_ffn_two_pass(params: dict, xs: jax.Array, group_sizes: jax.Array,
+                        act: str, impl: str = "pallas") -> jax.Array:
+    from repro.kernels import ops
+
+    return ops.ffn_two_pass(xs, _expert_ws(params, act), params["wo"],
+                            group_sizes, act, impl)
+
+
+def ragged_ffn_fused(params: dict, xs: jax.Array, group_sizes: jax.Array,
+                     act: str) -> jax.Array:
+    from repro.kernels import ops
+
+    return ops.fused_grouped_ffn(xs, _expert_ws(params, act), params["wo"],
+                                 group_sizes, act)
+
+
+RAGGED_FNS: dict[str, Callable] = {
+    # "einsum" = the XLA grouped-GEMM primitive (ragged_dot), matching the
+    # batched-XLA-GEMMs contract of EXPERT_FNS["einsum"] on this path
+    "einsum": functools.partial(ragged_ffn_two_pass, impl="xla"),
+    "pallas": ragged_ffn_two_pass,
+    "fused": ragged_ffn_fused,
 }
 
 
@@ -215,7 +259,8 @@ def fmoe_init(rng: jax.Array, d_model: int, cfg: MoEConfig, *, act: str = "swigl
 
 
 def _moe_local(x: jax.Array, router: dict, experts: dict, cfg: MoEConfig,
-               act: str, expert_fn: Callable, rng=None, placement=None):
+               act: str, expert_fn: Callable, rng=None, placement=None,
+               impl: str = "einsum"):
     T = x.shape[0]
     g = gate_forward(router, x, cfg, rng=rng)
     expert_ids = g.expert_ids
@@ -226,14 +271,10 @@ def _moe_local(x: jax.Array, router: dict, experts: dict, cfg: MoEConfig,
     if cfg.dispatch == "ragged":
         plan = D.make_ragged_plan(expert_ids, cfg.num_experts)
         xs = D.dispatch_ragged(x, plan)  # (T*k, d) expert-sorted
-        # ragged path uses the grouped-GEMM kernel directly (variable groups)
-        from repro.kernels import ops
-        if act == "swiglu":
-            h = jax.nn.silu(ops.grouped_matmul(xs, experts["wi_gate"], plan.group_sizes))
-            h = h * ops.grouped_matmul(xs, experts["wi_up"], plan.group_sizes)
-        else:
-            h = _act(ops.grouped_matmul(xs, experts["wi"], plan.group_sizes), act)
-        ys = ops.grouped_matmul(h, experts["wo"], plan.group_sizes)
+        # impl is a first-class axis here too: the grouped kernels take
+        # variable group sizes directly, so "fused" runs the fused fwd+bwd
+        # on the dropless path (no capacity padding, no (M, H) in HBM)
+        ys = RAGGED_FNS[impl](experts, xs, plan.group_sizes, act)
         y = D.combine_ragged(ys, plan, g.combine_weights)
         load, drop = load_metrics(plan.group_sizes, None, T * cfg.top_k)
     else:
@@ -303,8 +344,14 @@ def _moe_a2a(x, router, experts, extra, shadow, cfg: MoEConfig, act, expert_fn,
     buf, buf_shadow = split_buffer(buf, spec)
 
     # ---- global data exchange (Fig 2), owned experts only ----
+    n_chunks = pipeline.resolve_chunks(dist.overlap_chunks or 1, Cm)
     counts = plan.load[:E_ns].reshape(mp, E_local)
-    incoming = jax.lax.all_to_all(counts, ax, 0, 0, tiled=True)  # (mp, E_local) per-src
+    if n_chunks > 1:
+        # §5.2 follow-on: decompose the counts exchange into ppermutes too,
+        # so the pipelined schedule's HLO has no blocking all-to-all at all
+        incoming = pipeline.ppermute_all_to_all(counts, ax, mp)
+    else:
+        incoming = jax.lax.all_to_all(counts, ax, 0, 0, tiled=True)  # (mp, E_local) per-src
     wire = dist.wire_jnp_dtype
 
     def compute(b):
@@ -324,7 +371,6 @@ def _moe_a2a(x, router, experts, extra, shadow, cfg: MoEConfig, act, expert_fn,
     # §5.2 smart schedule: pipeline the exchange with expert compute in
     # capacity micro-shards; shadowed experts fill the first wire bubble.
     # n_chunks == 1 runs the same helper as one serial exchange each way.
-    n_chunks = pipeline.resolve_chunks(dist.overlap_chunks or 1, Cm)
     fill_fn = (lambda: expert_fn(shadow, buf_shadow, act)) if shadow else None
     out, out_shadow = pipeline.pipelined_expert_exchange(
         buf.reshape(mp, E_local, Cm, d), ax, mp, n_chunks, compute,
@@ -427,9 +473,11 @@ def fmoe_apply(params: dict, x: jax.Array, cfg: MoEConfig, *, act: str = "swiglu
                rng: Optional[jax.Array] = None, placement=None):
     """Apply the MoE FFN to ``x`` of shape (..., d_model).
 
-    Returns ``(y, MoEMetrics)``.  ``impl`` selects the expert_fn ("einsum" |
-    "pallas"); ``dist=None`` runs the single-worker §4 path, otherwise the
-    §3.2 distributed path (mode picked by ``dist``).
+    Returns ``(y, MoEMetrics)``.  ``impl`` selects the expert kernels
+    ("einsum" | "pallas" | "fused") on every dispatch mode — capacity local,
+    ragged local and the distributed paths; ``dist=None`` runs the
+    single-worker §4 path, otherwise the §3.2 distributed path (mode picked
+    by ``dist``).
 
     ``placement`` (or ``dist.placement``) is an ExpertPlacement: ``params``
     must already be in its physical order (repro.placement.migrate); routing
@@ -443,7 +491,7 @@ def fmoe_apply(params: dict, x: jax.Array, cfg: MoEConfig, *, act: str = "swiglu
     residual_keys = [k for k in ("shared", "dense") if k in params]
     if dist is None:
         y, metrics = _moe_local(xf, router, experts, cfg, act, expert_fn, rng,
-                                placement=placement)
+                                placement=placement, impl=impl)
         for k in residual_keys:
             y = y + dense_ffn(params[k], xf, act)
     else:

@@ -24,9 +24,10 @@ VMEM working set: x (bm, K) + per-projection weight tiles (K*bh + bh*N) +
 f32 acc (bm, N).  Defaults (bm=128, bh=512) with d_model ≤ 2048 stay well
 inside the ~16 MiB/core budget.
 
-Backward falls back to the two-pass path (repro.kernels.ops wires the
-custom_vjp): the recompute costs one extra GEMM1 but keeps dW layouts in the
-rows-major form ``ragged_dot`` wants.
+Backward is fused too (repro.kernels.fused_ffn_bwd wires through the
+custom_vjp in repro.kernels.ops): dX and the grouped dW recompute the hidden
+tile in VMEM from the saved x, so a full train step never materializes
+(M, H) in HBM in either direction.
 """
 from __future__ import annotations
 

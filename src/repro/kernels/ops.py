@@ -3,6 +3,15 @@
 ``grouped_matmul`` is differentiable (custom_vjp): both the forward GEMM and
 dX reuse the Pallas kernel; dW transposes through ``jax.lax.ragged_dot`` (the
 XLA grouped-GEMM primitive) since its reduction layout is rows-major.
+``fused_grouped_ffn`` is fully kernel-served in both directions: the forward
+fuses GEMM1 + activation + GEMM2 and the backward runs the dX / grouped-dW
+kernels of ``repro.kernels.fused_ffn_bwd`` — the (M, H) hidden activation
+(and its gradient) never materializes in HBM in either pass.
+
+``aligned=True`` (equal contiguous groups, each a whole number of row
+tiles — the capacity path with C % bm == 0) skips the ``pad_to_tiles`` /
+``dest``-gather round-trip entirely: the tile→group map is a compile-time
+constant and the kernels run on the caller's rows in place.
 
 On non-TPU backends the kernels run in interpret mode (CPU validation path);
 ``impl="xla"`` routes everything through ``ragged_dot`` instead.
@@ -13,9 +22,11 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.dispatch import pad_to_tiles
 from repro.kernels import fused_ffn as ff
+from repro.kernels import fused_ffn_bwd as fb
 from repro.kernels import grouped_gemm as gg
 from repro.kernels import token_shuffle as ts
 
@@ -24,42 +35,64 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def _aligned_tile_group(M: int, E: int, bm: int) -> jax.Array:
+    """Static tile→group map for M rows in E equal contiguous groups.
+
+    Only valid when every group is a whole number of row tiles; then the
+    kernels can run on the rows as-is (no pad/scatter, no dest-gather).
+    """
+    assert M % E == 0 and (M // E) % bm == 0, (M, E, bm)
+    return jnp.asarray(np.repeat(np.arange(E, dtype=np.int32),
+                                 M // E // bm))
+
+
 # ---------------------------------------------------------------------------
 # grouped_matmul
 # ---------------------------------------------------------------------------
 
 
 def _gm_pallas(x: jax.Array, w: jax.Array, group_sizes: jax.Array,
-               bm: int) -> jax.Array:
-    """Pad groups to row tiles, run the kernel, un-pad."""
+               bm: int, aligned: bool) -> jax.Array:
+    """Pad groups to row tiles, run the kernel, un-pad.
+
+    ``aligned`` skips the round-trip: rows are already tile-aligned (equal
+    contiguous groups of M // E rows, each a multiple of ``bm``).
+    """
     E = w.shape[0]
+    if aligned:
+        return gg.grouped_gemm_tiled(x, w, _aligned_tile_group(x.shape[0], E, bm),
+                                     bm=bm, interpret=_interpret())
     tiled = pad_to_tiles(x, group_sizes, bm, E)
     y_p = gg.grouped_gemm_tiled(tiled.x, w, tiled.tile_group, bm=bm,
                                 interpret=_interpret())
     return y_p[tiled.dest]
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
 def grouped_matmul(x: jax.Array, w: jax.Array, group_sizes: jax.Array,
-                   impl: str = "pallas", bm: int = gg.DEFAULT_BM) -> jax.Array:
+                   impl: str = "pallas", bm: int = gg.DEFAULT_BM,
+                   aligned: bool = False) -> jax.Array:
     """y[i] = x[i] @ w[g(i)] for rows sorted by group.
 
     x (M, K); w (E, K, N); group_sizes (E,) ints summing to <= M (trailing
     rows beyond the sum get group E-1's weights; callers keep M == sum).
+    ``aligned`` asserts equal contiguous groups on whole row tiles and skips
+    the pad/gather round-trip (the equal-capacity fast path).
     """
     if impl == "xla":
         return jax.lax.ragged_dot(x, w, group_sizes.astype(jnp.int32))
-    return _gm_pallas(x, w, group_sizes, bm)
+    return _gm_pallas(x, w, group_sizes, bm, aligned)
 
 
-def _gm_fwd(x, w, group_sizes, impl, bm):
-    return grouped_matmul(x, w, group_sizes, impl, bm), (x, w, group_sizes)
+def _gm_fwd(x, w, group_sizes, impl, bm, aligned):
+    return grouped_matmul(x, w, group_sizes, impl, bm, aligned), (
+        x, w, group_sizes)
 
 
-def _gm_bwd(impl, bm, res, dy):
+def _gm_bwd(impl, bm, aligned, res, dy):
     x, w, group_sizes = res
     # dX: same grouped GEMM against w^T (kernel-served)
-    dx = grouped_matmul(dy, w.swapaxes(1, 2), group_sizes, impl, bm)
+    dx = grouped_matmul(dy, w.swapaxes(1, 2), group_sizes, impl, bm, aligned)
     # dW[e] = x_e^T @ dy_e: transpose of ragged_dot w.r.t. rhs
     _, vjp_fn = jax.vjp(
         lambda ww: jax.lax.ragged_dot(x, ww, group_sizes.astype(jnp.int32)), w)
@@ -77,53 +110,79 @@ grouped_matmul.defvjp(_gm_fwd, _gm_bwd)
 
 def ffn_two_pass(x: jax.Array, ws: tuple, wo: jax.Array,
                  group_sizes: jax.Array, act: str = "swiglu",
-                 impl: str = "pallas", bm: int = gg.DEFAULT_BM) -> jax.Array:
+                 impl: str = "pallas", bm: int = gg.DEFAULT_BM,
+                 aligned: bool = False) -> jax.Array:
     """Reference expert FFN as separate grouped GEMMs (materializes (M, H)).
 
-    ws: (wi,) or (wi_gate, wi_up).  This is both the numerical oracle for the
-    fused kernel and its backward fallback — the guard keeps forward/backward
-    from ever computing different functions.
+    ws: (wi,) or (wi_gate, wi_up).  This is the numerical oracle for the
+    fused kernel (forward AND backward, through the grouped-GEMM custom_vjp).
     """
     ff.check_gating(ws, act)
     if len(ws) == 2:
-        h = jax.nn.silu(grouped_matmul(x, ws[0], group_sizes, impl, bm))
-        h = h * grouped_matmul(x, ws[1], group_sizes, impl, bm)
+        h = jax.nn.silu(grouped_matmul(x, ws[0], group_sizes, impl, bm, aligned))
+        h = h * grouped_matmul(x, ws[1], group_sizes, impl, bm, aligned)
     else:
-        h = ff._activate(grouped_matmul(x, ws[0], group_sizes, impl, bm),
+        h = ff._activate(grouped_matmul(x, ws[0], group_sizes, impl, bm, aligned),
                          None, act)
-    return grouped_matmul(h, wo, group_sizes, impl, bm)
+    return grouped_matmul(h, wo, group_sizes, impl, bm, aligned)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
 def fused_grouped_ffn(x: jax.Array, ws: tuple, wo: jax.Array,
                       group_sizes: jax.Array, act: str = "swiglu",
-                      bm: int = ff.DEFAULT_BM,
-                      bh: int = ff.DEFAULT_BH) -> jax.Array:
+                      bm: int = ff.DEFAULT_BM, bh: int = ff.DEFAULT_BH,
+                      aligned: bool = False) -> jax.Array:
     """y[i] = act(x[i] @ wi[g(i)]) @ wo[g(i)] with the hidden tile in VMEM.
 
-    Forward runs the fused Pallas kernel (no (M, H) HBM round-trip);
-    backward falls back to :func:`ffn_two_pass`, recomputing the hidden
-    activation through the grouped-GEMM custom_vjp.
+    Forward runs the fused Pallas kernel and backward the fused dX / grouped
+    dW kernels (repro.kernels.fused_ffn_bwd): a full train step never
+    materializes the (M, H) hidden activation or its gradient in HBM.
+    ``aligned`` (equal contiguous groups on whole row tiles) skips the
+    pad/gather round-trip in both directions.
     """
-    E = wo.shape[0]
-    tiled = pad_to_tiles(x, group_sizes, bm, E)
+    if aligned:
+        tile_group = _aligned_tile_group(x.shape[0], wo.shape[0], bm)
+        return ff.fused_ffn_tiled(x, ws, wo, tile_group, act=act, bm=bm,
+                                  bh=bh, interpret=_interpret())
+    tiled = pad_to_tiles(x, group_sizes, bm, wo.shape[0])
     y_p = ff.fused_ffn_tiled(tiled.x, ws, wo, tiled.tile_group, act=act,
                              bm=bm, bh=bh, interpret=_interpret())
     return y_p[tiled.dest]
 
 
-def _ffn_fwd(x, ws, wo, group_sizes, act, bm, bh):
-    return fused_grouped_ffn(x, ws, wo, group_sizes, act, bm, bh), (
+def _ffn_fwd(x, ws, wo, group_sizes, act, bm, bh, aligned):
+    return fused_grouped_ffn(x, ws, wo, group_sizes, act, bm, bh, aligned), (
         x, ws, wo, group_sizes)
 
 
-def _ffn_bwd(act, bm, bh, res, dy):
+def _ffn_bwd(act, bm, bh, aligned, res, dy):
     x, ws, wo, group_sizes = res
-    _, vjp_fn = jax.vjp(
-        lambda x_, ws_, wo_: ffn_two_pass(x_, ws_, wo_, group_sizes, act,
-                                          "pallas", bm), x, ws, wo)
-    dx, dws, dwo = vjp_fn(dy)
-    return dx, dws, dwo, None
+    E = wo.shape[0]
+    if aligned:
+        x_p, dy_p = x, dy
+        tile_group = _aligned_tile_group(x.shape[0], E, bm)
+    else:
+        # same deterministic padded layout as the forward; dy scatters into
+        # it (padded rows zero, so they contribute nothing to dX or dW)
+        tiled = pad_to_tiles(x, group_sizes, bm, E)
+        x_p, tile_group = tiled.x, tiled.tile_group
+        dy_p = jnp.zeros((tiled.x.shape[0], dy.shape[1]),
+                         dy.dtype).at[tiled.dest].set(dy)
+    dx_p = fb.fused_ffn_bwd_dx_tiled(x_p, ws, wo, dy_p, tile_group, act=act,
+                                     bm=bm, bh=bh, interpret=_interpret())
+    dws, dwo = fb.fused_ffn_bwd_dw_tiled(x_p, ws, wo, dy_p, tile_group,
+                                         act=act, bm=bm, bh=bh,
+                                         interpret=_interpret())
+    if not aligned:
+        dx_p = dx_p[tiled.dest]
+        # groups with no rows own no tiles, so the dW kernel never visits
+        # (or zeroes) their blocks — mask the unspecified values out
+        nz = (group_sizes > 0)[:, None, None]
+        dws = tuple(jnp.where(nz, dw, 0.0) for dw in dws)
+        dwo = jnp.where(nz, dwo, 0.0)
+    return (dx_p.astype(x.dtype),
+            tuple(dw.astype(w.dtype) for dw, w in zip(dws, ws)),
+            dwo.astype(wo.dtype), None)
 
 
 fused_grouped_ffn.defvjp(_ffn_fwd, _ffn_bwd)

@@ -8,6 +8,7 @@ Usage (example, CPU-scale):
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import functools
 import time
 from typing import Optional
@@ -80,12 +81,18 @@ def moe_dist(cfg: ModelConfig, mesh, num_tokens: int, *,
 
 def make_train_step(cfg: ModelConfig, opt: AdamW, *, dist=None,
                     num_microbatches: int = 1, warmup: int = 100,
-                    total_steps: int = 10000):
-    """(params, opt_state, batch, step) -> (params, opt_state, metrics)."""
+                    total_steps: int = 10000, impl: str = "einsum"):
+    """(params, opt_state, batch, step) -> (params, opt_state, metrics).
+
+    ``impl`` picks the expert kernels (einsum | pallas | fused); "fused"
+    runs the one-kernel FFN forward AND the fused dX/dW backward, so the
+    step never materializes the (M, H) hidden activation in HBM.
+    """
 
     def grads_of(params, batch):
         return jax.value_and_grad(
-            lambda p: lm.loss_fn(p, cfg, batch, dist=dist), has_aux=True)(params)
+            lambda p: lm.loss_fn(p, cfg, batch, dist=dist, impl=impl),
+            has_aux=True)(params)
 
     def train_step(params, opt_state, batch, step):
         if num_microbatches == 1:
@@ -145,7 +152,8 @@ def jit_train_step(cfg: ModelConfig, opt: AdamW, mesh, global_batch: int,
         bspec["frames"] = jax.sharding.NamedSharding(mesh, batch_spec(global_batch, mesh, 2))
     dist = moe_dist(cfg, mesh, global_batch * seq_len, opts=opts)
     step_fn = make_train_step(cfg, opt, dist=dist,
-                              num_microbatches=num_microbatches)
+                              num_microbatches=num_microbatches,
+                              impl=opts.get("impl") or "einsum")
     rep = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
     return jax.jit(
         step_fn,
@@ -276,15 +284,32 @@ def main() -> None:
                          "(0/1 = serial; needs --mesh and an MoE arch)")
     ap.add_argument("--wire_dtype", default="", choices=["", "bf16"],
                     help="cast a2a payloads across the wire (halves bytes)")
+    ap.add_argument("--impl", default="einsum",
+                    choices=["einsum", "pallas", "fused"],
+                    help="expert kernels: einsum (batched XLA GEMMs), pallas "
+                         "(two-pass grouped GEMMs), fused (one-kernel FFN "
+                         "fwd+bwd — no (M, H) hidden in HBM)")
+    ap.add_argument("--dispatch", default="", choices=["", "capacity", "ragged"],
+                    help="override the MoE dispatch mode (ragged = dropless "
+                         "sorted tokens, single-worker path)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced(cfg, num_layers=4, d_model=256)
+    if args.dispatch == "ragged" and args.mesh:
+        # the distributed paths (_moe_a2a/_moe_psum) are capacity-only; a
+        # silent fallback would drop tokens the user believes are dropless
+        ap.error("--dispatch ragged is the single-worker (no --mesh) path; "
+                 "the distributed exchange needs capacity buffers")
+    if args.dispatch and cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, dispatch=args.dispatch))
     opt = AdamW(lr=args.lr)
 
     opts = {"overlap_chunks": args.overlap_chunks,
-            "wire_dtype": args.wire_dtype or None}
+            "wire_dtype": args.wire_dtype or None,
+            "impl": args.impl}
     hook = None
     if args.mesh:
         d, m = (int(v) for v in args.mesh.split("x"))
@@ -306,7 +331,8 @@ def main() -> None:
         params = lm.init_params(jax.random.PRNGKey(0), cfg)
         opt_state = opt.init(params)
         step_fn = jax.jit(make_train_step(cfg, opt,
-                                          num_microbatches=args.microbatches))
+                                          num_microbatches=args.microbatches,
+                                          impl=args.impl))
 
     data = SyntheticLM(cfg.vocab_size, args.seq)
     t0 = time.time()

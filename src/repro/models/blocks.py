@@ -80,9 +80,9 @@ def layer_init(rng: jax.Array, cfg: ModelConfig, *, cross: bool = False) -> dict
 
 
 def _apply_ffn(p: dict, cfg: ModelConfig, x: jax.Array,
-               dist: Optional[DistConfig]):
+               dist: Optional[DistConfig], impl: str = "einsum"):
     if cfg.moe is not None:
-        return fmoe_apply(p, x, cfg.moe, act=cfg.act, dist=dist)
+        return fmoe_apply(p, x, cfg.moe, act=cfg.act, dist=dist, impl=impl)
     return dense_ffn(p, x, cfg.act), None
 
 
@@ -145,7 +145,8 @@ def _constrain_attn_batch(x: jax.Array, dist: Optional[DistConfig]):
 def layer_apply_seq(p: dict, cfg: ModelConfig, x: jax.Array, *, window,
                     dist: Optional[DistConfig] = None,
                     enc_out: Optional[jax.Array] = None,
-                    mixer_state: Optional[Any] = None):
+                    mixer_state: Optional[Any] = None,
+                    impl: str = "einsum"):
     """x (B, S, d) -> (x, MoEMetrics|None).  mixer_state: SSM initial state
     (zeros created by the caller for ssm/hybrid families)."""
     xn = apply_norm(p["norm1"], x, cfg.norm)
@@ -163,7 +164,8 @@ def layer_apply_seq(p: dict, cfg: ModelConfig, x: jax.Array, *, window,
                              mixer_state)
         metrics = None
     else:
-        h, metrics = _apply_ffn(p.get("ffn"), cfg, apply_norm(p["norm2"], x, cfg.norm), dist)
+        h, metrics = _apply_ffn(p.get("ffn"), cfg, apply_norm(p["norm2"], x, cfg.norm), dist,
+                                impl)
     return x + h, metrics
 
 
@@ -174,7 +176,7 @@ def layer_apply_seq(p: dict, cfg: ModelConfig, x: jax.Array, *, window,
 
 def layer_apply_prefill(p: dict, cfg: ModelConfig, x: jax.Array, cache, *,
                         window, dist: Optional[DistConfig] = None,
-                        start: int = 0):
+                        start: int = 0, impl: str = "einsum"):
     """x (B, S, d), per-layer cache -> (x, filled_cache, MoEMetrics|None).
 
     One full-sequence pass writes every position's K/V (or recurrent state)
@@ -190,7 +192,7 @@ def layer_apply_prefill(p: dict, cfg: ModelConfig, x: jax.Array, cache, *,
         if cfg.moe is None:
             h, c2 = R.channel_mix(p["rwkv"], xn2, c1)
             return x + h, c2, None
-        h, metrics = _apply_ffn(p["ffn"], cfg, xn2, dist)
+        h, metrics = _apply_ffn(p["ffn"], cfg, xn2, dist, impl)
         return x + h, c1, metrics
 
     if cfg.family == "hybrid":
@@ -224,7 +226,7 @@ def layer_apply_prefill(p: dict, cfg: ModelConfig, x: jax.Array, cache, *,
         new_cache = A.fill_kv_cache(cache, k, v, start=start)
 
     h, metrics = _apply_ffn(p["ffn"], cfg, apply_norm(p["norm2"], x, cfg.norm),
-                            dist)
+                            dist, impl)
     return x + h, new_cache, metrics
 
 
@@ -234,7 +236,8 @@ def layer_apply_prefill(p: dict, cfg: ModelConfig, x: jax.Array, cache, *,
 
 
 def layer_apply_decode(p: dict, cfg: ModelConfig, x: jax.Array, cache, pos, *,
-                       window, dist: Optional[DistConfig] = None):
+                       window, dist: Optional[DistConfig] = None,
+                       impl: str = "einsum"):
     """x (B, 1, d), per-layer cache -> (x, new_cache, MoEMetrics|None)."""
     if cfg.family == "ssm":
         h, c1 = R.time_mix(p["rwkv"], apply_norm(p["norm1"], x, cfg.norm), cache, cfg)
@@ -242,7 +245,8 @@ def layer_apply_decode(p: dict, cfg: ModelConfig, x: jax.Array, cache, pos, *,
         if cfg.moe is None:
             h, c2 = R.channel_mix(p["rwkv"], apply_norm(p["norm2"], x, cfg.norm), c1)
             return x + h, c2, None
-        h, metrics = _apply_ffn(p["ffn"], cfg, apply_norm(p["norm2"], x, cfg.norm), dist)
+        h, metrics = _apply_ffn(p["ffn"], cfg, apply_norm(p["norm2"], x, cfg.norm), dist,
+                                impl)
         return x + h, c1, metrics
 
     attn_cache = cache["attn"] if isinstance(cache, dict) and "attn" in cache \
@@ -256,13 +260,15 @@ def layer_apply_decode(p: dict, cfg: ModelConfig, x: jax.Array, cache, pos, *,
         h = A.gqa_apply(p["cross_attn"], q, cfg.attention, window=FULL_WINDOW,
                         kv_x=cache["enc_out"], causal=False)
         x = x + h
-        h, metrics = _apply_ffn(p["ffn"], cfg, apply_norm(p["norm2"], x, cfg.norm), dist)
+        h, metrics = _apply_ffn(p["ffn"], cfg, apply_norm(p["norm2"], x, cfg.norm), dist,
+                                impl)
         return x + h, {"self": kv, "enc_out": cache["enc_out"]}, metrics
 
     h, new_cache = _mixer_decode(p, cfg, apply_norm(p["norm1"], x, cfg.norm),
                                  attn_cache, pos, window)
     x = x + h
-    h, metrics = _apply_ffn(p["ffn"], cfg, apply_norm(p["norm2"], x, cfg.norm), dist)
+    h, metrics = _apply_ffn(p["ffn"], cfg, apply_norm(p["norm2"], x, cfg.norm), dist,
+                            impl)
     return x + h, new_cache, metrics
 
 

@@ -103,7 +103,7 @@ def encode(params: dict, cfg: ModelConfig, frames: jax.Array) -> jax.Array:
 def forward(params: dict, cfg: ModelConfig, tokens: jax.Array, *,
             frames: Optional[jax.Array] = None,
             patches: Optional[jax.Array] = None,
-            dist: Optional[DistConfig] = None):
+            dist: Optional[DistConfig] = None, impl: str = "einsum"):
     """tokens (B, S) -> (logits (B, S', V), MoEMetrics).
 
     vlm: ``patches`` (B, P, d) are prepended; logits cover the full combined
@@ -128,7 +128,8 @@ def forward(params: dict, cfg: ModelConfig, tokens: jax.Array, *,
         p_l, window = xs
         x, m = B.layer_apply_seq(_cast_params(p_l, dtype), cfg, x,
                                  window=window, dist=dist,
-                                 enc_out=enc_out, mixer_state=state0)
+                                 enc_out=enc_out, mixer_state=state0,
+                                 impl=impl)
         metrics = metrics + m if m is not None else metrics
         return (x.astype(dtype), metrics), None
 
@@ -141,13 +142,15 @@ def forward(params: dict, cfg: ModelConfig, tokens: jax.Array, *,
 
 
 def loss_fn(params: dict, cfg: ModelConfig, batch: dict, *,
-            dist: Optional[DistConfig] = None):
+            dist: Optional[DistConfig] = None, impl: str = "einsum"):
     """Next-token cross-entropy + MoE aux losses.  batch: {"tokens", and
-    optionally "frames"/"patches"}."""
+    optionally "frames"/"patches"}.  ``impl`` picks the expert kernels
+    (einsum | pallas | fused — see repro.core.fmoe.EXPERT_FNS)."""
     tokens = batch["tokens"]
     logits, metrics = forward(params, cfg, tokens,
                               frames=batch.get("frames"),
-                              patches=batch.get("patches"), dist=dist)
+                              patches=batch.get("patches"), dist=dist,
+                              impl=impl)
     if cfg.frontend == "vision" and "patches" in batch:
         logits = logits[:, batch["patches"].shape[1]:]  # text positions only
     targets = tokens[:, 1:]
@@ -174,7 +177,7 @@ def loss_fn(params: dict, cfg: ModelConfig, batch: dict, *,
 def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array, cache: Any, *,
             frames: Optional[jax.Array] = None,
             patches: Optional[jax.Array] = None,
-            dist: Optional[DistConfig] = None):
+            dist: Optional[DistConfig] = None, impl: str = "einsum"):
     """tokens (B, S) + empty cache -> (logits (B, S', V), filled cache,
     metrics).  Decoding then continues at position S' with decode_step."""
     dtype = jnp.dtype(cfg.dtype)
@@ -196,7 +199,7 @@ def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array, cache: Any, *,
         p_l, window, cache_l = xs
         x, new_cache_l, m = B.layer_apply_prefill(
             _cast_params(p_l, dtype), cfg, x, cache_l, window=window,
-            dist=dist)
+            dist=dist, impl=impl)
         metrics = metrics + m if m is not None else metrics
         return (x.astype(dtype), metrics), new_cache_l
 
@@ -222,7 +225,7 @@ def init_cache(cfg: ModelConfig, batch: int, cache_len: int, *,
 
 def decode_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
                 pos: jax.Array, cache: Any, *,
-                dist: Optional[DistConfig] = None):
+                dist: Optional[DistConfig] = None, impl: str = "einsum"):
     """tokens (B, 1) at absolute position ``pos`` -> (logits (B, 1, V),
     new_cache, metrics)."""
     dtype = jnp.dtype(cfg.dtype)
@@ -237,7 +240,7 @@ def decode_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
         p_l, window, cache_l = xs
         x, new_cache_l, m = B.layer_apply_decode(
             _cast_params(p_l, dtype), cfg, x, cache_l, pos,
-            window=window, dist=dist)
+            window=window, dist=dist, impl=impl)
         metrics = metrics + m if m is not None else metrics
         return (x.astype(dtype), metrics), new_cache_l
 

@@ -8,8 +8,9 @@ import pytest
 # runs on every change (the full suite adds multi-process + model smokes).
 TIER1_MODULES = {
     "test_calibrate", "test_dispatch", "test_fmoe", "test_fused_ffn",
-    "test_gate", "test_gate_variants", "test_placement",
-    "test_sharding_rules", "test_substrate",
+    "test_fused_ffn_bwd", "test_gate", "test_gate_variants",
+    "test_hlo_regression", "test_placement", "test_sharding_rules",
+    "test_substrate",
 }
 
 

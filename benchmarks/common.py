@@ -1,14 +1,24 @@
 """Benchmark utilities: paper-style timing (warm-up + 16 reps, §5.1)."""
 from __future__ import annotations
 
+import os
 import time
 
 import jax
 import numpy as np
 
 
+def smoke_mode() -> bool:
+    """CI smoke runs (benchmarks/run.py --smoke) only care that every
+    registered fig script still executes end to end — timings are noise on
+    shared runners, so reps collapse to the minimum."""
+    return os.environ.get("REPRO_BENCH_SMOKE", "") == "1"
+
+
 def timeit(fn, *args, reps: int = 16, warmup: int = 3) -> dict:
     """Median wall time per call in microseconds (paper runs 16 reps)."""
+    if smoke_mode():
+        reps, warmup = 1, 1
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
     ts = []

@@ -14,9 +14,16 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: quick shapes + minimum timing reps "
+                         "(REPRO_BENCH_SMOKE=1); every registered fig script "
+                         "must run end to end or the process fails")
     ap.add_argument("--only", default="")
     ap.add_argument("--out", default="benchmarks/results")
     args = ap.parse_args()
+    if args.smoke:
+        args.quick = True
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
 
     from benchmarks import (fig3_gemm, fig5_single_device, fig6_scaling,
                             fig7_end_to_end, fig8_imbalance, fig9_overlap,

@@ -1,0 +1,65 @@
+"""Guard against silent tier-1 rot (ISSUE 4 satellite).
+
+``scripts/ci.sh`` runs ``pytest -m tier1``, which silently shrinks to
+nothing if a module listed in ``tests/conftest.py TIER1_MODULES`` is
+renamed, deleted, or stops collecting (an import error inside a test file
+only *deselects* it from a marker run).  This script fails fast when
+
+* a listed module has no ``tests/<module>.py`` file, or
+* a listed module collects zero tests.
+
+Usage: ``python scripts/check_tier1.py`` from the repo root (ci.sh does).
+"""
+from __future__ import annotations
+
+import os
+import re
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+TESTS = os.path.join(ROOT, "tests")
+
+
+def tier1_modules() -> set[str]:
+    sys.path.insert(0, TESTS)
+    try:
+        import conftest
+        return set(conftest.TIER1_MODULES)
+    finally:
+        sys.path.pop(0)
+
+
+def main() -> int:
+    modules = tier1_modules()
+    missing = sorted(m for m in modules
+                     if not os.path.exists(os.path.join(TESTS, f"{m}.py")))
+    if missing:
+        print(f"tier-1 modules without a test file: {missing}")
+        return 1
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(ROOT, "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    out = subprocess.run(
+        [sys.executable, "-m", "pytest", "--collect-only", "-q", "-m", "tier1"]
+        + [os.path.join("tests", f"{m}.py") for m in sorted(modules)],
+        capture_output=True, text=True, cwd=ROOT, env=env)
+    counts = {m: 0 for m in modules}
+    for line in out.stdout.splitlines():
+        m = re.match(r"tests[/\\](\w+)\.py::", line)
+        if m and m.group(1) in counts:
+            counts[m.group(1)] += 1
+    empty = sorted(m for m, c in counts.items() if c == 0)
+    if out.returncode not in (0, 5) or empty:
+        print(out.stdout[-2000:])
+        print(out.stderr[-2000:])
+        print(f"tier-1 modules collecting zero tests: {empty or 'n/a'} "
+              f"(pytest exit {out.returncode})")
+        return 1
+    total = sum(counts.values())
+    print(f"tier-1 ok: {len(modules)} modules, {total} tests collected")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

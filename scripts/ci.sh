@@ -1,6 +1,28 @@
 #!/usr/bin/env sh
-# Lightweight CI: the import-safe tier-1 test subset (see tests/conftest.py
-# TIER1_MODULES).  Full verify: PYTHONPATH=src python -m pytest -x -q
+# Lightweight CI entry point.
+#
+#   ./scripts/ci.sh            tier-1 subset (tests/conftest.py TIER1_MODULES),
+#                              after failing fast on tier-1 rot (a listed
+#                              module missing or collecting zero tests)
+#   ./scripts/ci.sh --dist     the multi-rank test subset (fake host devices
+#                              are set up by the tests themselves): expert
+#                              parallelism, placement, pipelined exchange and
+#                              the ragged (dropless) a2a
+#
+# Extra args pass through to pytest.  Full verify stays:
+#   PYTHONPATH=src python -m pytest -x -q
 set -e
 cd "$(dirname "$0")/.."
-PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -q -m tier1 "$@"
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+# (test_hlo_regression.py is tier-1, so the matrix job already covers its
+# multi-device subprocess cases — listing it here too would run the suite's
+# most expensive tests twice per PR)
+if [ "$1" = "--dist" ]; then
+    shift
+    exec python -m pytest -q tests/test_distributed.py tests/test_pipeline.py \
+        tests/test_placement_dist.py tests/test_ragged_a2a.py "$@"
+fi
+
+python scripts/check_tier1.py
+python -m pytest -q -m tier1 "$@"

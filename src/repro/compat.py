@@ -20,6 +20,12 @@ from typing import Any
 
 import jax
 
+# Oldest jax release the shims in this module target.  CI's version matrix
+# reads this pin (.github/workflows/ci.yml greps it) and runs the full
+# tier-1 subset against it next to the latest release, so the fallback
+# branches below are tested instead of trusted.
+MIN_JAX_VERSION = "0.4.37"
+
 try:  # newer jax
     from jax.sharding import AxisType  # type: ignore[attr-defined]
 except ImportError:  # pragma: no cover - depends on installed jax

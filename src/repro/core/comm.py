@@ -37,6 +37,41 @@ def return_tokens(out: jax.Array, axis: str) -> jax.Array:
     return out.reshape(E_local * mp, C, d)
 
 
+def exchange_ragged(send: jax.Array, counts: jax.Array, axis, mp: int, *,
+                    n_chunks: int = 1, wire_dtype=None, fill_fn=None):
+    """Ragged (dropless) global data exchange, forward direction.
+
+    send: (mp, bound, d) pad-to-max-per-peer shards; counts: (mp, E_local)
+    kept rows per (destination rank, its expert) — the explicit valid
+    lengths of the variable-size exchange.  Returns ``(recv, incoming,
+    fill_out)``: the received shards, the counts arriving from each source
+    rank (which size the receiver's compaction — core/dispatch
+    ragged_recv_compact), and the optional shadow-filler output.
+
+    With ``n_chunks > 1`` both the counts and payload exchanges are
+    ppermute-decomposed (no blocking all-to-all in the HLO at all).
+    """
+    from repro.core import pipeline
+
+    incoming = pipeline.counts_all_to_all(counts, axis, mp,
+                                          decompose=n_chunks > 1)
+    recv, fill_out = pipeline.ragged_pipelined_exchange(
+        send, axis, mp, n_chunks, fill_fn=fill_fn, wire_dtype=wire_dtype)
+    return recv, incoming, fill_out
+
+
+def return_ragged(out: jax.Array, axis, mp: int, *, n_chunks: int = 1,
+                  wire_dtype=None) -> jax.Array:
+    """Inverse of :func:`exchange_ragged`'s payload leg: (mp, bound, d_out)
+    expert outputs travel back to their source ranks, landing in the same
+    slots the sources sent from (the tiled a2a is its own inverse)."""
+    from repro.core import pipeline
+
+    return pipeline.chunked_all_to_all(out, axis, mp, n_chunks,
+                                       wire_dtype=wire_dtype,
+                                       decompose=n_chunks > 1)
+
+
 def hierarchical_all_to_all(buf: jax.Array, inner_axis: str,
                             outer_axis: str) -> jax.Array:
     """Beyond-paper: 2-hop all-to-all for multi-pod meshes.

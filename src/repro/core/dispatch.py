@@ -136,6 +136,97 @@ def combine_ragged(y_sorted: jax.Array, plan: RaggedPlan,
 
 
 # ---------------------------------------------------------------------------
+# Cross-rank ragged plans — the distributed dropless exchange (ISSUE 4)
+# ---------------------------------------------------------------------------
+#
+# The capacity a2a pads every expert buffer to C rows before the wire; the
+# ragged exchange instead moves the *locally sorted* rows in per-peer shards:
+# each rank's rows destined for peer p form one contiguous segment of its
+# expert-sorted array (experts are contiguous per rank), scattered into shard
+# p of a (mp, bound, d) send buffer.  ``bound`` is the static pad-to-max-
+# per-peer width that keeps the exchange jit-able; the *valid lengths* ride
+# separately as the (mp, E_local) counts all-to-all, so the receiver can
+# compact the padded shards back into a load-sized expert-sorted array for
+# the grouped kernels (RAGGED_FNS).  bound = T*k is provably dropless.
+
+
+class RaggedXPlan(NamedTuple):
+    """Send-side geometry of the ragged (dropless) all-to-all.
+
+    Indexes the rank's expert-sorted rows (make_ragged_plan order): physical
+    experts [0, num_owned) are exchanged, any shadowed tail is served
+    locally (repro/placement/shadow.py contract).
+    """
+
+    send_dest: jax.Array  # (T*k,) int32 — slot in the flat (mp*bound) send
+    # buffer; == mp*bound for rows not exchanged (shadowed / over-bound)
+    peer_counts: jax.Array  # (mp, E_local) int32 — rows that FIT the bound,
+    # per (destination rank, its local expert); the counts-a2a payload
+    keep: jax.Array  # (T*k,) bool — owned rows that fit the per-peer bound
+    num_owned_rows: jax.Array  # () int32 — rows routed to owned experts
+
+
+def make_ragged_xplan(group_sizes: jax.Array, num_rows: int, num_owned: int,
+                      num_peers: int, bound: int) -> RaggedXPlan:
+    """Lay this rank's ``num_rows`` sorted rows into per-peer shards of width
+    ``bound``.
+
+    group_sizes: (E,) of the local expert sort (physical order).  The first
+    ``num_owned`` experts live on the a2a (``num_owned // num_peers`` per
+    peer, contiguous per-rank blocks); the rest are shadowed.  Rows of one
+    peer keep their expert-sorted order inside the shard, so the receiver
+    can reconstruct expert segments from the exchanged counts alone.
+    """
+    e_pp = num_owned // num_peers
+    raw = group_sizes[:num_owned].reshape(num_peers, e_pp)
+    peer_tot = raw.sum(axis=1)
+    cum = jnp.cumsum(peer_tot)  # (mp,) inclusive
+    num_owned_rows = cum[-1]
+    i = jnp.arange(num_rows, dtype=jnp.int32)
+    owned = i < num_owned_rows
+    peer = jnp.clip(jnp.searchsorted(cum, i, side="right"),
+                    0, num_peers - 1).astype(jnp.int32)
+    within = i - (cum[peer] - peer_tot[peer])  # position inside the shard
+    keep = owned & (within < bound)
+    send_dest = jnp.where(keep, peer * bound + within,
+                          num_peers * bound).astype(jnp.int32)
+    # kept rows per (peer, expert): experts fill the shard in order, so the
+    # bound truncates the trailing experts of an over-full shard
+    off_in_peer = jnp.cumsum(raw, axis=1) - raw  # exclusive, per peer
+    peer_counts = jnp.clip(bound - off_in_peer, 0, raw).astype(jnp.int32)
+    return RaggedXPlan(send_dest, peer_counts, keep, num_owned_rows)
+
+
+def ragged_recv_compact(incoming: jax.Array, bound: int):
+    """Compaction map for the received (mp, bound, d) shards.
+
+    incoming: (mp, E_local) kept-row counts from each source rank (the
+    counts-a2a output).  Shard s holds ``incoming[s].sum()`` valid rows,
+    expert-sorted with segment lengths ``incoming[s]``.  Returns
+    ``(dest, group_sizes)``: ``dest`` (mp*bound,) maps each received slot to
+    its row in the expert-sorted compact array (== mp*bound for padding →
+    scatter-drop / gather-fill), and ``group_sizes`` (E_local,) are the
+    compact array's per-expert segment lengths, src-major within an expert —
+    i.e. global token order when ranks hold contiguous token blocks.
+    """
+    mp, e_local = incoming.shape
+    gs = incoming.sum(axis=0)  # (E_local,)
+    e_off = jnp.cumsum(gs) - gs  # exclusive expert offsets in compact array
+    prior = jnp.cumsum(incoming, axis=0) - incoming  # earlier-src rows per e
+    in_off = jnp.cumsum(incoming, axis=1) - incoming  # within-src expert offs
+    cum_src = jnp.cumsum(incoming, axis=1)  # (mp, E_local) inclusive
+    src_tot = incoming.sum(axis=1)  # (mp,)
+    idx = jnp.arange(mp * bound, dtype=jnp.int32)
+    s, j = idx // bound, idx % bound
+    # expert of slot (s, j): how many inclusive-cumsum boundaries j passed
+    e = jnp.clip((j[:, None] >= cum_src[s]).sum(axis=1),
+                 0, e_local - 1).astype(jnp.int32)
+    valid = j < src_tot[s]
+    dest = e_off[e] + prior[s, e] + (j - in_off[s, e])
+    return jnp.where(valid, dest, mp * bound).astype(jnp.int32), gs
+
+
+# ---------------------------------------------------------------------------
 # Tile padding for the Pallas grouped GEMM (groups aligned to row tiles)
 # ---------------------------------------------------------------------------
 

@@ -52,6 +52,12 @@ class DistConfig(NamedTuple):
         capacity degrade to the nearest feasible depth.  Bit-exact vs serial.
       wire_dtype — cast a2a payloads to this dtype across the wire only
         ("bf16" halves exchange bytes; accumulation/combine stay f32).
+      ragged_bound — rows per peer shard of the ragged (dropless) exchange
+        (cfg.dispatch == "ragged" under a2a mode): the static pad-to-max-
+        per-peer width that keeps the variable-size exchange jit-able.
+        0 = T_local*k, which provably never drops; a smaller bound shrinks
+        wire bytes toward actual load at the price of GShard-style drops
+        when one peer's shard overflows (tracked in metrics.drop_frac).
     """
 
     mesh: Any
@@ -66,6 +72,7 @@ class DistConfig(NamedTuple):
     placement: Any = None  # Optional[repro.placement.plan.ExpertPlacement]
     overlap_chunks: int = 0  # §5.2 pipelined exchange (0/1 = serial)
     wire_dtype: Optional[str] = None  # a2a payload dtype ("bf16" | None)
+    ragged_bound: int = 0  # dropless-exchange peer-shard rows (0 = T*k)
 
     @property
     def expert_axes(self) -> tuple:
@@ -297,7 +304,7 @@ def _moe_local(x: jax.Array, router: dict, experts: dict, cfg: MoEConfig,
 
 
 def _moe_a2a(x, router, experts, extra, shadow, cfg: MoEConfig, act, expert_fn,
-             dist: DistConfig):
+             dist: DistConfig, impl: str = "einsum"):
     """Tokens sharded over all mesh axes; experts sharded over ``expert_axis``.
 
     Per-rank: gate -> dispatch into (E, C, d) -> all-to-all over the expert
@@ -346,12 +353,10 @@ def _moe_a2a(x, router, experts, extra, shadow, cfg: MoEConfig, act, expert_fn,
     # ---- global data exchange (Fig 2), owned experts only ----
     n_chunks = pipeline.resolve_chunks(dist.overlap_chunks or 1, Cm)
     counts = plan.load[:E_ns].reshape(mp, E_local)
-    if n_chunks > 1:
-        # §5.2 follow-on: decompose the counts exchange into ppermutes too,
-        # so the pipelined schedule's HLO has no blocking all-to-all at all
-        incoming = pipeline.ppermute_all_to_all(counts, ax, mp)
-    else:
-        incoming = jax.lax.all_to_all(counts, ax, 0, 0, tiled=True)  # (mp, E_local) per-src
+    # §5.2 follow-on: with chunking the counts exchange decomposes into
+    # ppermutes too, so the pipelined HLO has no blocking all-to-all at all
+    incoming = pipeline.counts_all_to_all(counts, ax, mp,
+                                          decompose=n_chunks > 1)  # per-src
     wire = dist.wire_jnp_dtype
 
     def compute(b):
@@ -415,11 +420,127 @@ def _moe_a2a(x, router, experts, extra, shadow, cfg: MoEConfig, act, expert_fn,
     return y, metrics
 
 
+def _moe_a2a_ragged(x, router, experts, extra, shadow, cfg: MoEConfig, act,
+                    expert_fn, dist: DistConfig, impl: str = "einsum"):
+    """Dropless (ragged) expert parallelism — the load-sized exchange.
+
+    Where the capacity path pads every expert to C rows before the wire,
+    this path moves the rank's expert-*sorted* rows in per-peer shards:
+
+      1. counts all-to-all — each rank tells peer p how many rows it routed
+         to each of p's experts (the Fig-2 "exchange sizes" step, now load-
+         bearing instead of monitor-only);
+      2. payload exchange — sorted rows scattered into ``(mp, bound, d)``
+         pad-to-max-per-peer shards (``dist.ragged_bound``; default
+         T_local*k never drops), each shard a ppermute-decomposable
+         micro-shardable exchange (core/pipeline), wire-cast per
+         ``dist.wire_dtype``;
+      3. the receiver compacts the valid prefixes (lengths = received
+         counts) into one expert-sorted array and runs the grouped ragged
+         kernels (RAGGED_FNS[impl] — einsum/pallas/fused, incl. the fused
+         fwd+bwd kernel with its variable/empty group support);
+      4. the return exchange inverts the permutation (tiled a2a is its own
+         inverse) and ``combine_ragged`` applies the gate weights.
+
+    Shadowed hot experts (dist.placement) never cross the wire: their rows
+    are the sorted array's tail segment, computed locally from the broadcast
+    ``shadow`` weights inside the first chunk's wire bubble.
+    """
+    from repro.core import comm
+
+    del expert_fn  # the grouped ragged kernels (RAGGED_FNS[impl]) apply
+    ax = dist.expert_axis
+    mp = dist.expert_parallelism
+    E = cfg.num_experts
+    t, d = x.shape
+    place = dist.placement
+    if place is not None and place.is_identity:
+        place = None
+
+    g = gate_forward(router, x, cfg)
+    expert_ids = g.expert_ids
+    E_ns = E  # physical slots [0, E_ns) take the a2a; the rest are shadowed
+    if place is not None:
+        expert_ids = jnp.asarray(place.logical_to_physical)[expert_ids]
+        E_ns = place.num_owned
+    E_local = E_ns // mp
+    n = t * cfg.top_k
+    B = dist.ragged_bound or n
+
+    plan = D.make_ragged_plan(expert_ids, E)  # full physical-order sort
+    x_sorted = D.dispatch_ragged(x, plan)  # (n, d)
+    xplan = D.make_ragged_xplan(plan.group_sizes, n, E_ns, mp, B)
+    send = (jnp.zeros((mp * B, d), x.dtype)
+            .at[xplan.send_dest].set(x_sorted, mode="drop")
+            .reshape(mp, B, d))
+
+    # shadow filler: the sorted tail [num_owned_rows, n) shifted to offset 0
+    # (an exchange-free grouped-FFN call issued inside the first wire bubble)
+    fill_fn = None
+    shadow_dest = None
+    if shadow:
+        i = jnp.arange(n, dtype=jnp.int32)
+        shadow_dest = jnp.where(i >= xplan.num_owned_rows,
+                                i - xplan.num_owned_rows, n).astype(jnp.int32)
+        xs_sh = jnp.zeros((n, d), x.dtype).at[shadow_dest].set(x_sorted,
+                                                               mode="drop")
+        fill_fn = lambda: RAGGED_FNS[impl](shadow, xs_sh,
+                                           plan.group_sizes[E_ns:], act)
+
+    n_chunks = pipeline.resolve_chunks(dist.overlap_chunks or 1, B)
+    wire = dist.wire_jnp_dtype
+    recv, incoming, fill_out = comm.exchange_ragged(
+        send, xplan.peer_counts, ax, mp, n_chunks=n_chunks, wire_dtype=wire,
+        fill_fn=fill_fn)
+
+    # compact the valid shard prefixes into expert-sorted rows (src-major
+    # within an expert = global token order for contiguous token shards)
+    cplan, gs_local = D.ragged_recv_compact(incoming, B)
+    xs = (jnp.zeros((mp * B, d), x.dtype)
+          .at[cplan].set(recv.reshape(mp * B, d), mode="drop"))
+    ys = RAGGED_FNS[impl](experts, xs, gs_local, act)
+    out = ys.at[cplan].get(mode="fill", fill_value=0)  # back to shard slots
+
+    ret = comm.return_ragged(out.reshape(mp, B, -1), ax, mp,
+                             n_chunks=n_chunks, wire_dtype=wire)
+    y_sorted = (ret.reshape(mp * B, -1)
+                .at[xplan.send_dest].get(mode="fill", fill_value=0))
+    if shadow:
+        y_sorted = y_sorted + fill_out.at[shadow_dest].get(mode="fill",
+                                                           fill_value=0)
+    y = D.combine_ragged(y_sorted, plan, g.combine_weights)
+
+    for p in extra.values():  # see _moe_a2a (§Perf residual fix)
+        y = y + dense_ffn(p, x, act)
+
+    # ---- metrics: global assigned load + bound-overflow drops ----
+    axes = tuple(dist.token_axes)
+    load_global = jax.lax.psum(plan.group_sizes, axes)
+    if place is not None:
+        load_global = load_global[jnp.asarray(place.logical_to_physical)]
+    load, _ = load_metrics(load_global, None,
+                           jnp.maximum(load_global.sum(), 1))
+    dropped = (xplan.num_owned_rows - xplan.keep.sum()).astype(jnp.float32)
+    metrics = MoEMetrics(
+        jax.lax.pmean(load_balance_loss(g.probs, g.expert_ids, E), axes),
+        jax.lax.pmean(router_z_loss(g.logits), axes),
+        load,
+        jax.lax.pmean(dropped / n, axes),
+    )
+    return y, metrics
+
+
 def _moe_psum(x, router, experts, extra, shadow, cfg: MoEConfig, act,
-              expert_fn, dist: DistConfig):
+              expert_fn, dist: DistConfig, impl: str = "einsum"):
     """Tokens NOT sharded over the expert axis (decode): every rank gates all
     its tokens, computes only its local experts, partial outputs psum over the
     expert axis.  No all-to-all; communication = one psum of (t, d).
+
+    ``cfg.dispatch == "ragged"`` swaps the capacity buffers for the sorted
+    dropless layout: the rank's local experts own one contiguous segment of
+    the expert-sorted rows (shifted to offset 0, grouped kernels on variable
+    sizes), so the psum mode is dropless too — the dispatch × dist matrix
+    has no capacity-only corner left.
 
     A ``dist.placement`` permutation is honored (params are physical, gate
     ids remapped); shadowing is pointless here — there is no a2a to skip —
@@ -437,24 +558,44 @@ def _moe_psum(x, router, experts, extra, shadow, cfg: MoEConfig, act,
     expert_ids = g.expert_ids
     if place is not None and not place.is_identity:
         expert_ids = jnp.asarray(place.logical_to_physical)[expert_ids]
-    C = D.expert_capacity(t, E, cfg.top_k, cfg.capacity_factor)
-    plan = D.make_capacity_plan(expert_ids, E, C)
-    buf = D.dispatch_capacity(x, plan, E)  # (E, C, d)
     rank = 0  # row-major rank within the (possibly tuple) expert axis group
     for a in dist.expert_axes:
         rank = rank * dist.mesh.shape[a] + jax.lax.axis_index(a)
-    buf_local = jax.lax.dynamic_slice_in_dim(buf, rank * E_local, E_local, axis=0)
-    out_local = expert_fn(experts, buf_local, act)  # (E_local, C, d)
-    out = jax.lax.dynamic_update_slice_in_dim(
-        jnp.zeros((E, C, out_local.shape[-1]), out_local.dtype), out_local,
-        rank * E_local, axis=0)
-    y = D.combine_capacity(out, plan, g.combine_weights)
+    if cfg.dispatch == "ragged":
+        n = t * cfg.top_k
+        plan = D.make_ragged_plan(expert_ids, E)
+        x_sorted = D.dispatch_ragged(x, plan)  # (n, d)
+        offs = jnp.cumsum(plan.group_sizes) - plan.group_sizes  # exclusive
+        gs_local = jax.lax.dynamic_slice_in_dim(plan.group_sizes,
+                                                rank * E_local, E_local)
+        lo = offs[rank * E_local]
+        i = jnp.arange(n, dtype=jnp.int32)
+        mine = (i >= lo) & (i < lo + gs_local.sum())
+        dest = jnp.where(mine, i - lo, n).astype(jnp.int32)  # shift to 0
+        xs = jnp.zeros((n, x.shape[1]), x.dtype).at[dest].set(x_sorted,
+                                                              mode="drop")
+        ys = RAGGED_FNS[impl](experts, xs, gs_local, act)
+        y_sorted = ys.at[dest].get(mode="fill", fill_value=0)
+        y = D.combine_ragged(y_sorted, plan, g.combine_weights)
+        plan_load, plan_keep, denom = plan.group_sizes, None, n
+    else:
+        C = D.expert_capacity(t, E, cfg.top_k, cfg.capacity_factor)
+        plan = D.make_capacity_plan(expert_ids, E, C)
+        buf = D.dispatch_capacity(x, plan, E)  # (E, C, d)
+        buf_local = jax.lax.dynamic_slice_in_dim(buf, rank * E_local, E_local,
+                                                 axis=0)
+        out_local = expert_fn(experts, buf_local, act)  # (E_local, C, d)
+        out = jax.lax.dynamic_update_slice_in_dim(
+            jnp.zeros((E, C, out_local.shape[-1]), out_local.dtype), out_local,
+            rank * E_local, axis=0)
+        y = D.combine_capacity(out, plan, g.combine_weights)
+        plan_load, plan_keep, denom = plan.load, plan.keep, t * cfg.top_k
     y = jax.lax.psum(y, ax)
     for p in extra.values():  # see _moe_a2a
         y = y + dense_ffn(p, x, act)
 
     axes = tuple(dist.token_axes)
-    load, drop = load_metrics(plan.load, plan.keep, t * cfg.top_k)
+    load, drop = load_metrics(plan_load, plan_keep, denom)
     if place is not None and not place.is_identity:
         load = load[jnp.asarray(place.logical_to_physical)]  # logical order
     pm = (lambda v: jax.lax.pmean(v, axes)) if axes else (lambda v: v)
@@ -518,7 +659,16 @@ def fmoe_apply(params: dict, x: jax.Array, cfg: MoEConfig, *, act: str = "swiglu
                         f"owned experts {place.num_owned} must be a positive "
                         f"multiple of {dist.expert_parallelism}")
             dist = dist._replace(placement=place)
-        local = _moe_a2a if dist.mode == "a2a" else _moe_psum
+        ragged = cfg.dispatch == "ragged"
+        if ragged and dist.tp_axis:
+            # the grouped ragged kernels consume flat sorted rows; the
+            # capacity path's per-row tp gather/scatter doesn't apply
+            raise NotImplementedError(
+                "ragged dispatch + expert-internal TP (use capacity)")
+        if dist.mode == "a2a":
+            local = _moe_a2a_ragged if ragged else _moe_a2a
+        else:
+            local = _moe_psum
         tok_spec = P(dist.token_axes if dist.token_axes else None, None)
 
         def espec_for(path_w):
@@ -559,7 +709,8 @@ def fmoe_apply(params: dict, x: jax.Array, cfg: MoEConfig, *, act: str = "swiglu
             extra = {}
         xspec = {k: jax.tree.map(lambda _: P(None, None), v)
                  for k, v in extra.items()}
-        fn = functools.partial(local, cfg=cfg, act=act, expert_fn=expert_fn, dist=dist)
+        fn = functools.partial(local, cfg=cfg, act=act, expert_fn=expert_fn,
+                               dist=dist, impl=impl)
         mspec = MoEMetrics(P(), P(), P(None), P())
         y, metrics = compat.shard_map(
             fn, mesh=dist.mesh,

@@ -92,6 +92,18 @@ def _plain_all_to_all(x, *, axis, mp, wire_dtype=None):
     return lax.all_to_all(x, axis, 0, 0, tiled=True).astype(orig)
 
 
+def counts_all_to_all(counts: jnp.ndarray, axis, mp: int, *,
+                      decompose: bool) -> jnp.ndarray:
+    """The Fig-2 "exchange sizes" step: (mp, E_local) per-destination counts
+    -> (mp, E_local) per-source counts.  ``decompose`` swaps the blocking
+    all-to-all for mp-1 collective-permutes so the pipelined schedules'
+    HLO contains no blocking exchange at all (capacity and ragged paths
+    share this helper — their wire behavior must not drift apart)."""
+    if decompose:
+        return ppermute_all_to_all(counts, axis, mp)
+    return lax.all_to_all(counts, axis, 0, 0, tiled=True)
+
+
 def resolve_chunks(requested: int, capacity: int) -> int:
     """Largest divisor of ``capacity`` that is <= ``requested`` (>= 1).
 
@@ -103,6 +115,36 @@ def resolve_chunks(requested: int, capacity: int) -> int:
     while capacity % n:
         n -= 1
     return n
+
+
+def ragged_pipelined_exchange(send: jnp.ndarray, axis, mp: int, n_chunks: int,
+                              *, fill_fn: Optional[Callable[[], jnp.ndarray]] = None,
+                              wire_dtype=None):
+    """Forward half of the ragged (dropless) exchange, micro-sharded.
+
+    send: (mp, bound, d) pad-to-max-per-peer shards (core/dispatch
+    make_ragged_xplan layout).  With ``n_chunks > 1`` the bound dim splits
+    into ppermute-decomposed micro-shards — every exchange is an
+    async-schedulable collective-permute, none a blocking all-to-all — and
+    ``fill_fn`` (the shadowed experts' local, exchange-free compute) issues
+    in the first chunk's wire bubble, exactly like the capacity schedule's
+    shadow filler.  Unlike :func:`pipelined_expert_exchange` the expert
+    compute itself is NOT interleaved per chunk: the grouped kernels need
+    the compacted expert-sorted rows, which exist only after every shard
+    lands (ROADMAP follow-on).  Returns ``(recv, fill_out | None)``.
+    """
+    decompose = n_chunks > 1
+    a2a = functools.partial(
+        ppermute_all_to_all if decompose else _plain_all_to_all,
+        axis=axis, mp=mp, wire_dtype=wire_dtype)
+    if n_chunks <= 1:
+        recv = a2a(send)
+        return recv, (fill_fn() if fill_fn is not None else None)
+    chunks = jnp.split(send, n_chunks, axis=1)
+    recvs = [a2a(chunks[0])]
+    fill_out = fill_fn() if fill_fn is not None else None  # S0 bubble
+    recvs += [a2a(c) for c in chunks[1:]]
+    return jnp.concatenate(recvs, axis=1), fill_out
 
 
 def pipelined_expert_exchange(

@@ -13,6 +13,15 @@ tiles — the capacity path with C % bm == 0) skips the ``pad_to_tiles`` /
 ``dest``-gather round-trip entirely: the tile→group map is a compile-time
 constant and the kernels run on the caller's rows in place.
 
+Partial group sums (``sum(group_sizes) < M``) are a first-class input: the
+ragged all-to-all exchange (core/fmoe ``_moe_a2a_ragged``) feeds statically
+bounded buffers whose valid prefix is a *traced* row count.  Rows beyond
+the sum produce zeros on every impl (pinned explicitly — ``ragged_dot``'s
+behavior there is version-dependent and the Pallas kernels would otherwise
+run them with the last group's weights), and callers must zero-fill them:
+the dW kernels accumulate whole row tiles, so nonzero garbage adjacent to
+the last group's valid rows would leak into its weight gradient.
+
 On non-TPU backends the kernels run in interpret mode (CPU validation path);
 ``impl="xla"`` routes everything through ``ragged_dot`` instead.
 """
@@ -51,6 +60,18 @@ def _aligned_tile_group(M: int, E: int, bm: int) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 
+def _zero_invalid(y: jax.Array, group_sizes: jax.Array) -> jax.Array:
+    """Pin rows beyond ``sum(group_sizes)`` to zero.
+
+    The Pallas path computes them with the last group's weights and
+    ``ragged_dot``'s trailing-row contents are version-dependent; the
+    bounded ragged-exchange buffers (valid prefix + zero padding) need a
+    stable "trailing rows are zero" contract instead.
+    """
+    valid = jnp.arange(y.shape[0], dtype=jnp.int32) < group_sizes.sum()
+    return jnp.where(valid[:, None], y, 0)
+
+
 def _gm_pallas(x: jax.Array, w: jax.Array, group_sizes: jax.Array,
                bm: int, aligned: bool) -> jax.Array:
     """Pad groups to row tiles, run the kernel, un-pad.
@@ -65,7 +86,7 @@ def _gm_pallas(x: jax.Array, w: jax.Array, group_sizes: jax.Array,
     tiled = pad_to_tiles(x, group_sizes, bm, E)
     y_p = gg.grouped_gemm_tiled(tiled.x, w, tiled.tile_group, bm=bm,
                                 interpret=_interpret())
-    return y_p[tiled.dest]
+    return _zero_invalid(y_p[tiled.dest], group_sizes)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
@@ -74,13 +95,16 @@ def grouped_matmul(x: jax.Array, w: jax.Array, group_sizes: jax.Array,
                    aligned: bool = False) -> jax.Array:
     """y[i] = x[i] @ w[g(i)] for rows sorted by group.
 
-    x (M, K); w (E, K, N); group_sizes (E,) ints summing to <= M (trailing
-    rows beyond the sum get group E-1's weights; callers keep M == sum).
+    x (M, K); w (E, K, N); group_sizes (E,) ints summing to <= M.  Rows
+    beyond the sum yield zeros (and must be zero-filled for dW correctness
+    — see the module docstring); the ragged a2a path relies on this.
     ``aligned`` asserts equal contiguous groups on whole row tiles and skips
     the pad/gather round-trip (the equal-capacity fast path).
     """
     if impl == "xla":
-        return jax.lax.ragged_dot(x, w, group_sizes.astype(jnp.int32))
+        return _zero_invalid(
+            jax.lax.ragged_dot(x, w, group_sizes.astype(jnp.int32)),
+            group_sizes)
     return _gm_pallas(x, w, group_sizes, bm, aligned)
 
 
@@ -138,7 +162,9 @@ def fused_grouped_ffn(x: jax.Array, ws: tuple, wo: jax.Array,
     dW kernels (repro.kernels.fused_ffn_bwd): a full train step never
     materializes the (M, H) hidden activation or its gradient in HBM.
     ``aligned`` (equal contiguous groups on whole row tiles) skips the
-    pad/gather round-trip in both directions.
+    pad/gather round-trip in both directions.  Rows beyond
+    ``sum(group_sizes)`` yield zeros and must arrive zero-filled (module
+    docstring) — the ragged a2a's bounded buffers depend on it.
     """
     if aligned:
         tile_group = _aligned_tile_group(x.shape[0], wo.shape[0], bm)
@@ -147,7 +173,7 @@ def fused_grouped_ffn(x: jax.Array, ws: tuple, wo: jax.Array,
     tiled = pad_to_tiles(x, group_sizes, bm, wo.shape[0])
     y_p = ff.fused_ffn_tiled(tiled.x, ws, wo, tiled.tile_group, act=act,
                              bm=bm, bh=bh, interpret=_interpret())
-    return y_p[tiled.dest]
+    return _zero_invalid(y_p[tiled.dest], group_sizes)
 
 
 def _ffn_fwd(x, ws, wo, group_sizes, act, bm, bh, aligned):
@@ -174,7 +200,7 @@ def _ffn_bwd(act, bm, bh, aligned, res, dy):
                                          act=act, bm=bm, bh=bh,
                                          interpret=_interpret())
     if not aligned:
-        dx_p = dx_p[tiled.dest]
+        dx_p = _zero_invalid(dx_p[tiled.dest], group_sizes)
         # groups with no rows own no tiles, so the dW kernel never visits
         # (or zeroes) their blocks — mask the unspecified values out
         nz = (group_sizes > 0)[:, None, None]

@@ -60,6 +60,7 @@ def moe_dist(cfg: ModelConfig, mesh, num_tokens: int, *,
                              and "data" in mesh.axis_names) else None,
         overlap_chunks=int(opts.get("overlap_chunks") or 0),
         wire_dtype=opts.get("wire_dtype") or None,
+        ragged_bound=int(opts.get("ragged_bound") or 0),
     )
     total = 1
     for a in mesh.axis_names:
@@ -291,17 +292,17 @@ def main() -> None:
                          "fwd+bwd — no (M, H) hidden in HBM)")
     ap.add_argument("--dispatch", default="", choices=["", "capacity", "ragged"],
                     help="override the MoE dispatch mode (ragged = dropless "
-                         "sorted tokens, single-worker path)")
+                         "sorted tokens; with --mesh it runs the ragged "
+                         "load-sized all-to-all exchange)")
+    ap.add_argument("--ragged_bound", type=int, default=0,
+                    help="ragged exchange: rows per peer shard (static "
+                         "pad-to-max-per-peer width; 0 = local tokens * "
+                         "top_k, which never drops)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced(cfg, num_layers=4, d_model=256)
-    if args.dispatch == "ragged" and args.mesh:
-        # the distributed paths (_moe_a2a/_moe_psum) are capacity-only; a
-        # silent fallback would drop tokens the user believes are dropless
-        ap.error("--dispatch ragged is the single-worker (no --mesh) path; "
-                 "the distributed exchange needs capacity buffers")
     if args.dispatch and cfg.moe is not None:
         cfg = dataclasses.replace(
             cfg, moe=dataclasses.replace(cfg.moe, dispatch=args.dispatch))
@@ -309,6 +310,7 @@ def main() -> None:
 
     opts = {"overlap_chunks": args.overlap_chunks,
             "wire_dtype": args.wire_dtype or None,
+            "ragged_bound": args.ragged_bound,
             "impl": args.impl}
     hook = None
     if args.mesh:

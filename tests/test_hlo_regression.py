@@ -64,6 +64,60 @@ def test_fused_step_hlo_has_no_hidden_intermediate():
     assert any(r >= M for r in _hidden_rows(hlo2)), "oracle lost the hidden"
 
 
+def test_ragged_moe_hlo_no_blocking_a2a_no_hidden():
+    """The ragged (dropless) exchange inherits both HLO properties:
+
+    * overlap_chunks > 1 -> counts AND payload exchanges are ppermute-
+      decomposed, no blocking ``all-to-all`` survives XLA;
+    * impl="fused" -> the per-rank fwd+bwd step materializes no 2-D
+      (rows, H) tensor at the exchange-buffer row count (mp*bound) or
+      above — hidden tiles stay (bm, bh) with bm=128 < mp*bound here.
+      The two-pass program is the oracle that the check can see one.
+    """
+    script = """
+        import re
+        import jax
+        from repro.configs.base import MoEConfig
+        from repro.core import fmoe
+        mesh = jax.make_mesh((1, 4), ("data", "model"))
+        H = 40
+        cfg = MoEConfig(num_experts=8, top_k=2, d_expert_hidden=H,
+                        dispatch="ragged")
+        params = fmoe.fmoe_init(jax.random.PRNGKey(0), 16, cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (8, 16, 16))
+        MB = 4 * 32 * 2  # mp * t_local * top_k = exchange-buffer rows
+        serial = fmoe.DistConfig(mesh, ("data", "model"))
+        piped = fmoe.DistConfig(mesh, ("data", "model"), overlap_chunks=2)
+        def hlo(dist, impl, grad=False):
+            f = lambda p, x_: fmoe.fmoe_apply(p, x_, cfg, dist=dist,
+                                              impl=impl)[0]
+            if grad:
+                f = jax.grad(lambda p, x_: (fmoe.fmoe_apply(
+                    p, x_, cfg, dist=dist, impl=impl)[0] ** 2).sum())
+            with mesh:
+                return jax.jit(f).lower(params, x).compile().as_text()
+        t_piped = hlo(piped, "fused")
+        t_serial = hlo(serial, "fused")
+        assert "all-to-all" in t_serial, "oracle: serial ragged path must a2a"
+        assert "all-to-all" not in t_piped, "blocking all-to-all survived"
+        assert "collective-permute" in t_piped
+        rows = lambda t: [int(m.group(1))
+                          for m in re.finditer(r"\\[(\\d+),%d\\]" % H, t)]
+        big = [r for r in rows(hlo(serial, "fused", grad=True)) if r >= MB]
+        assert not big, f"(rows, H) intermediates in fused ragged HLO: {big}"
+        big2 = [r for r in rows(hlo(serial, "pallas", grad=True)) if r >= MB]
+        assert big2, "oracle lost the two-pass hidden"
+        print("RAGGED_HLO_OK")
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(script)],
+                         capture_output=True, text=True, env=env, timeout=560)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "RAGGED_HLO_OK" in out.stdout
+
+
 def test_pipelined_moe_hlo_has_no_blocking_all_to_all():
     script = """
         import jax

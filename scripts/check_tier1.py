@@ -1,4 +1,4 @@
-"""Guard against silent tier-1 rot (ISSUE 4 satellite).
+"""Guard against silent tier-1 rot (ISSUE 4 satellite, extended in ISSUE 5).
 
 ``scripts/ci.sh`` runs ``pytest -m tier1``, which silently shrinks to
 nothing if a module listed in ``tests/conftest.py TIER1_MODULES`` is
@@ -6,15 +6,18 @@ renamed, deleted, or stops collecting (an import error inside a test file
 only *deselects* it from a marker run).  This script fails fast when
 
 * a listed module has no ``tests/<module>.py`` file, or
-* a listed module collects zero tests.
+* a listed module collects zero tests, or
+* a listed module would *silently skip every test* — e.g. all of its tests
+  are hypothesis property tests and the matrix job's env lacks
+  ``hypothesis``, so the shim (tests/_hypothesis_compat.py) decorated each
+  one with an unconditional skip.  Such a module is green in CI while
+  verifying nothing.
 
 Usage: ``python scripts/check_tier1.py`` from the repo root (ci.sh does).
 """
 from __future__ import annotations
 
 import os
-import re
-import subprocess
 import sys
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -30,6 +33,24 @@ def tier1_modules() -> set[str]:
         sys.path.pop(0)
 
 
+class _Scan:
+    """Collection-time census: tests per module, and which of them already
+    carry an unconditional ``skip`` marker (the hypothesis-shim pattern)."""
+
+    def __init__(self, modules: set[str]):
+        self.counts = {m: 0 for m in modules}
+        self.skipped = {m: 0 for m in modules}
+
+    def pytest_collection_modifyitems(self, config, items):
+        for item in items:
+            mod = os.path.basename(str(item.fspath)).removesuffix(".py")
+            if mod not in self.counts:
+                continue
+            self.counts[mod] += 1
+            if any(mark.name == "skip" for mark in item.own_markers):
+                self.skipped[mod] += 1
+
+
 def main() -> int:
     modules = tier1_modules()
     missing = sorted(m for m in modules
@@ -37,27 +58,31 @@ def main() -> int:
     if missing:
         print(f"tier-1 modules without a test file: {missing}")
         return 1
-    env = dict(os.environ)
-    env["PYTHONPATH"] = (os.path.join(ROOT, "src")
-                         + os.pathsep + env.get("PYTHONPATH", ""))
-    out = subprocess.run(
-        [sys.executable, "-m", "pytest", "--collect-only", "-q", "-m", "tier1"]
+    sys.path.insert(0, os.path.join(ROOT, "src"))
+    os.chdir(ROOT)
+    import pytest
+    scan = _Scan(modules)
+    code = pytest.main(
+        ["--collect-only", "-q", "-p", "no:cacheprovider", "-m", "tier1"]
         + [os.path.join("tests", f"{m}.py") for m in sorted(modules)],
-        capture_output=True, text=True, cwd=ROOT, env=env)
-    counts = {m: 0 for m in modules}
-    for line in out.stdout.splitlines():
-        m = re.match(r"tests[/\\](\w+)\.py::", line)
-        if m and m.group(1) in counts:
-            counts[m.group(1)] += 1
-    empty = sorted(m for m, c in counts.items() if c == 0)
-    if out.returncode not in (0, 5) or empty:
-        print(out.stdout[-2000:])
-        print(out.stderr[-2000:])
-        print(f"tier-1 modules collecting zero tests: {empty or 'n/a'} "
-              f"(pytest exit {out.returncode})")
+        plugins=[scan])
+    empty = sorted(m for m, c in scan.counts.items() if c == 0)
+    all_skip = sorted(m for m, c in scan.counts.items()
+                      if c and scan.skipped[m] == c)
+    if code not in (0, 5) or empty or all_skip:
+        if empty:
+            print(f"tier-1 modules collecting zero tests: {empty} "
+                  f"(pytest exit {code})")
+        if all_skip:
+            print(f"tier-1 modules where EVERY test is marked skip "
+                  f"(silently green, verifying nothing): {all_skip}")
+        if code not in (0, 5):
+            print(f"pytest collection failed (exit {code})")
         return 1
-    total = sum(counts.values())
-    print(f"tier-1 ok: {len(modules)} modules, {total} tests collected")
+    total = sum(scan.counts.values())
+    skipped = sum(scan.skipped.values())
+    print(f"tier-1 ok: {len(modules)} modules, {total} tests collected"
+          + (f" ({skipped} pre-marked skip)" if skipped else ""))
     return 0
 
 

@@ -6,8 +6,10 @@
 #                              module missing or collecting zero tests)
 #   ./scripts/ci.sh --dist     the multi-rank test subset (fake host devices
 #                              are set up by the tests themselves): expert
-#                              parallelism, placement, pipelined exchange and
-#                              the ragged (dropless) a2a
+#                              parallelism, per-layer placement + decode
+#                              shadowing, pipelined exchange, the ragged
+#                              (dropless) a2a, and the shadowed serve step
+#                              (tests/dist_utils.py is the shared harness)
 #
 # Extra args pass through to pytest.  Full verify stays:
 #   PYTHONPATH=src python -m pytest -x -q
@@ -21,7 +23,8 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 if [ "$1" = "--dist" ]; then
     shift
     exec python -m pytest -q tests/test_distributed.py tests/test_pipeline.py \
-        tests/test_placement_dist.py tests/test_ragged_a2a.py "$@"
+        tests/test_placement_dist.py tests/test_ragged_a2a.py \
+        tests/test_serve.py::test_serve_step_shadowed_decode_bit_exact "$@"
 fi
 
 python scripts/check_tier1.py

@@ -32,7 +32,15 @@ def _flatten(tree: Any, prefix: str = "") -> dict:
     return out
 
 
-def save(path: str, tree: Any, *, step: int | None = None) -> None:
+def save(path: str, tree: Any, *, step: int | None = None,
+         placement=None) -> None:
+    """``placement`` (ExpertPlacement or PerLayerPlacement): the live tree's
+    physical expert layout.  It is undone before writing (per-layer plans
+    un-permute each layer's slice), so checkpoints are always in logical
+    expert order — layout-free, restorable under any future placement."""
+    if placement is not None:
+        from repro.placement.migrate import to_logical
+        tree = to_logical(tree, placement)
     os.makedirs(path, exist_ok=True)
     flat = _flatten(tree)
     manifest = {"step": step, "params": {}}
@@ -49,8 +57,13 @@ def save(path: str, tree: Any, *, step: int | None = None) -> None:
         json.dump(manifest, f, indent=1)
 
 
-def restore(path: str, like: Any) -> Any:
-    """Restore into the structure of ``like`` (shapes/dtypes validated)."""
+def restore(path: str, like: Any, *, placement=None) -> Any:
+    """Restore into the structure of ``like`` (shapes/dtypes validated).
+
+    ``placement`` re-applies a physical expert layout to the logical-order
+    checkpoint (the inverse of :func:`save`'s ``placement``) — restoring
+    under a *different* plan than the one saved under is fine, which is the
+    point: checkpoints don't know layouts."""
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
     flat_like = _flatten(like)
@@ -66,7 +79,11 @@ def restore(path: str, like: Any) -> Any:
         if tuple(arr.shape) != tuple(want.shape):
             raise ValueError(f"{key}: shape {arr.shape} != {tuple(want.shape)}")
         loaded[key] = arr.astype(want.dtype)
-    return _unflatten_like(like, loaded, "")
+    tree = _unflatten_like(like, loaded, "")
+    if placement is not None:
+        from repro.placement.migrate import from_logical
+        tree = from_logical(tree, placement)
+    return tree
 
 
 def _unflatten_like(like: Any, flat: dict, prefix: str) -> Any:

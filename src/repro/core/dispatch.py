@@ -101,6 +101,27 @@ def combine_capacity(out_buf: jax.Array, plan: CapacityPlan,
     return jnp.einsum("tk,tkd->td", w, gathered)
 
 
+def combine_capacity_slots(out_buf: jax.Array, plan: CapacityPlan,
+                           combine_weights: jax.Array) -> jax.Array:
+    """Per-slot weighted expert outputs (T, k, dout) — no k-reduction.
+
+    The psum (decode) path reduces these across ranks *before* summing the k
+    slots in fixed order, which makes the result bitwise-invariant to which
+    rank serves which slot: a per-rank k-sum (combine_capacity's einsum) may
+    FMA-fuse a token's co-located slot pair into one rounding, so permuting
+    or shadowing experts would shift results by an ulp.  Here every slot
+    contribution is rounded exactly once (the product), on whichever rank
+    computes it, and the cross-slot sum happens identically everywhere.
+    """
+    T, k = plan.expert_ids.shape
+    eid = plan.expert_ids.reshape(-1)
+    pos = plan.positions.reshape(-1)
+    gathered = out_buf.at[eid, pos].get(mode="fill", fill_value=0)
+    gathered = gathered.reshape(T, k, -1)
+    w = (combine_weights * plan.keep).astype(gathered.dtype)
+    return w[:, :, None] * gathered
+
+
 # ---------------------------------------------------------------------------
 # Ragged (sorted) dispatch — FastMoE-faithful, no drops
 # ---------------------------------------------------------------------------
@@ -133,6 +154,17 @@ def combine_ragged(y_sorted: jax.Array, plan: RaggedPlan,
     y_flat = jnp.zeros_like(y_sorted).at[plan.sort_idx].set(y_sorted)
     y = y_flat.reshape(T, k, -1)
     return jnp.einsum("tk,tkd->td", combine_weights.astype(y.dtype), y)
+
+
+def combine_ragged_slots(y_sorted: jax.Array, plan: RaggedPlan,
+                         combine_weights: jax.Array) -> jax.Array:
+    """Ragged analogue of :func:`combine_capacity_slots`: un-sorted per-slot
+    weighted outputs (T, k, dout), k-reduction left to the caller (the psum
+    decode path sums slots after the cross-rank reduction, in fixed order)."""
+    T, k = combine_weights.shape
+    y_flat = jnp.zeros_like(y_sorted).at[plan.sort_idx].set(y_sorted)
+    y = y_flat.reshape(T, k, -1)
+    return combine_weights[:, :, None].astype(y.dtype) * y
 
 
 # ---------------------------------------------------------------------------

@@ -45,7 +45,11 @@ class DistConfig(NamedTuple):
         the shard_map region (fixes the SPMD "involuntary rematerialization").
       placement — an ExpertPlacement (repro.placement.plan): params are in
         its physical order, gate ids are remapped through its index table,
-        and shadowed hot experts run replicated outside the all-to-all.
+        and shadowed hot experts run replicated outside the all-to-all (a2a
+        modes) or outside the psum reduction (decode mode).  At the model
+        level this may be a PerLayerPlacement — models/lm.py splits it into
+        the shared geometry (which rides here) plus per-layer gate-id
+        tables threaded through the layer scan (fmoe_apply's ``l2p``).
       overlap_chunks — §5.2 smart schedule: split the a2a payload into this
         many capacity micro-shards and pipeline exchange with expert compute
         (repro.core.pipeline).  0/1 = serial; values that don't divide the
@@ -265,16 +269,31 @@ def fmoe_init(rng: jax.Array, d_model: int, cfg: MoEConfig, *, act: str = "swigl
 # ---------------------------------------------------------------------------
 
 
+def _route_table(place, l2p):
+    """The in-graph logical->physical gate-id table for one layer.
+
+    ``l2p`` is the per-layer table threaded through the models' layer scan
+    (a traced (E,) int32 array — see models/lm.py); when absent, the shared
+    plan's static table applies.  None = identity routing.
+    """
+    if l2p is not None:
+        return jnp.asarray(l2p, jnp.int32)
+    if place is not None and not place.is_identity:
+        return jnp.asarray(place.logical_to_physical)
+    return None
+
+
 def _moe_local(x: jax.Array, router: dict, experts: dict, cfg: MoEConfig,
                act: str, expert_fn: Callable, rng=None, placement=None,
-               impl: str = "einsum"):
+               impl: str = "einsum", l2p=None):
     T = x.shape[0]
     g = gate_forward(router, x, cfg, rng=rng)
     expert_ids = g.expert_ids
-    if placement is not None and not placement.is_identity:
+    table = _route_table(placement, l2p)
+    if table is not None:
         # experts arrive in the plan's physical order; route through the
         # logical->physical index table (routing semantics unchanged)
-        expert_ids = jnp.asarray(placement.logical_to_physical)[expert_ids]
+        expert_ids = table[expert_ids]
     if cfg.dispatch == "ragged":
         plan = D.make_ragged_plan(expert_ids, cfg.num_experts)
         xs = D.dispatch_ragged(x, plan)  # (T*k, d) expert-sorted
@@ -291,8 +310,8 @@ def _moe_local(x: jax.Array, router: dict, experts: dict, cfg: MoEConfig,
         out = expert_fn(experts, buf, act)  # batched per-expert GeMM
         y = D.combine_capacity(out, plan, g.combine_weights)  # gather
         load, drop = load_metrics(plan.load, plan.keep, T * cfg.top_k)
-    if placement is not None and not placement.is_identity:
-        load = load[jnp.asarray(placement.logical_to_physical)]  # logical order
+    if table is not None:
+        load = load[table]  # logical order
     metrics = MoEMetrics(load_balance_loss(g.probs, g.expert_ids, cfg.num_experts),
                          router_z_loss(g.logits), load, drop)
     return y, metrics
@@ -303,8 +322,8 @@ def _moe_local(x: jax.Array, router: dict, experts: dict, cfg: MoEConfig,
 # ---------------------------------------------------------------------------
 
 
-def _moe_a2a(x, router, experts, extra, shadow, cfg: MoEConfig, act, expert_fn,
-             dist: DistConfig, impl: str = "einsum"):
+def _moe_a2a(x, router, experts, extra, shadow, l2p, cfg: MoEConfig, act,
+             expert_fn, dist: DistConfig, impl: str = "einsum"):
     """Tokens sharded over all mesh axes; experts sharded over ``expert_axis``.
 
     Per-rank: gate -> dispatch into (E, C, d) -> all-to-all over the expert
@@ -331,8 +350,9 @@ def _moe_a2a(x, router, experts, extra, shadow, cfg: MoEConfig, act, expert_fn,
     E = cfg.num_experts
     t, d = x.shape
     place = dist.placement
-    if place is not None and place.is_identity:
+    if place is not None and place.is_identity and l2p is None:
         place = None
+    table = _route_table(place, l2p)
 
     g = gate_forward(router, x, cfg)
     C = D.expert_capacity(t, E, cfg.top_k, cfg.capacity_factor)
@@ -341,8 +361,9 @@ def _moe_a2a(x, router, experts, extra, shadow, cfg: MoEConfig, act, expert_fn,
     E_local = E_ns // mp
     Cm = spec.main_capacity
     expert_ids = g.expert_ids
+    if table is not None:
+        expert_ids = table[expert_ids]
     if place is not None:
-        expert_ids = jnp.asarray(place.logical_to_physical)[expert_ids]
         plan = D.make_capacity_plan(expert_ids, E,
                                     tuple(int(c) for c in spec.capacities))
     else:
@@ -405,9 +426,9 @@ def _moe_a2a(x, router, experts, extra, shadow, cfg: MoEConfig, act, expert_fn,
         shadow_load = jax.lax.psum(plan.load[E_ns:], axes)
         load_global = jnp.concatenate([load_global,
                                        shadow_load.astype(load_global.dtype)])
-    if place is not None:
+    if table is not None:
         # back to logical expert order for the monitor
-        load_global = load_global[jnp.asarray(place.logical_to_physical)]
+        load_global = load_global[table]
     load, _ = load_metrics(load_global, None,
                            jnp.maximum(load_global.sum(), 1))
     _, drop = load_metrics(plan.load, plan.keep, t * cfg.top_k)
@@ -420,8 +441,8 @@ def _moe_a2a(x, router, experts, extra, shadow, cfg: MoEConfig, act, expert_fn,
     return y, metrics
 
 
-def _moe_a2a_ragged(x, router, experts, extra, shadow, cfg: MoEConfig, act,
-                    expert_fn, dist: DistConfig, impl: str = "einsum"):
+def _moe_a2a_ragged(x, router, experts, extra, shadow, l2p, cfg: MoEConfig,
+                    act, expert_fn, dist: DistConfig, impl: str = "einsum"):
     """Dropless (ragged) expert parallelism — the load-sized exchange.
 
     Where the capacity path pads every expert to C rows before the wire,
@@ -454,14 +475,16 @@ def _moe_a2a_ragged(x, router, experts, extra, shadow, cfg: MoEConfig, act,
     E = cfg.num_experts
     t, d = x.shape
     place = dist.placement
-    if place is not None and place.is_identity:
+    if place is not None and place.is_identity and l2p is None:
         place = None
+    table = _route_table(place, l2p)
 
     g = gate_forward(router, x, cfg)
     expert_ids = g.expert_ids
     E_ns = E  # physical slots [0, E_ns) take the a2a; the rest are shadowed
+    if table is not None:
+        expert_ids = table[expert_ids]
     if place is not None:
-        expert_ids = jnp.asarray(place.logical_to_physical)[expert_ids]
         E_ns = place.num_owned
     E_local = E_ns // mp
     n = t * cfg.top_k
@@ -516,8 +539,8 @@ def _moe_a2a_ragged(x, router, experts, extra, shadow, cfg: MoEConfig, act,
     # ---- metrics: global assigned load + bound-overflow drops ----
     axes = tuple(dist.token_axes)
     load_global = jax.lax.psum(plan.group_sizes, axes)
-    if place is not None:
-        load_global = load_global[jnp.asarray(place.logical_to_physical)]
+    if table is not None:
+        load_global = load_global[table]
     load, _ = load_metrics(load_global, None,
                            jnp.maximum(load_global.sum(), 1))
     dropped = (xplan.num_owned_rows - xplan.keep.sum()).astype(jnp.float32)
@@ -530,7 +553,7 @@ def _moe_a2a_ragged(x, router, experts, extra, shadow, cfg: MoEConfig, act,
     return y, metrics
 
 
-def _moe_psum(x, router, experts, extra, shadow, cfg: MoEConfig, act,
+def _moe_psum(x, router, experts, extra, shadow, l2p, cfg: MoEConfig, act,
               expert_fn, dist: DistConfig, impl: str = "einsum"):
     """Tokens NOT sharded over the expert axis (decode): every rank gates all
     its tokens, computes only its local experts, partial outputs psum over the
@@ -542,26 +565,59 @@ def _moe_psum(x, router, experts, extra, shadow, cfg: MoEConfig, act,
     sizes), so the psum mode is dropless too — the dispatch × dist matrix
     has no capacity-only corner left.
 
-    A ``dist.placement`` permutation is honored (params are physical, gate
-    ids remapped); shadowing is pointless here — there is no a2a to skip —
-    so plans with shadows are rejected in fmoe_apply.
+    A ``dist.placement`` is honored in full (the ROADMAP's "placement-aware
+    psum (decode) shadowing"): gate ids go through the plan's table, owned
+    experts are permuted into load-balanced per-rank blocks, and shadowed
+    hot experts are *skipped in the psum reduction* — every model-axis rank
+    computes them on its own (identical) tokens from the replicated
+    ``shadow`` weights, and their contribution is added locally after the
+    psum.  There is no wire saving here (the psum payload is (t, d) either
+    way); the win is the decode critical path: without shadowing the rank
+    owning a hot expert serializes the whole reduction, with it the hot
+    compute is replicated and the residual owned load greedy-balanced.
+    Bitwise-identical to the unshadowed reduction under the same layout:
+    whenever a placement is engaged, per-slot contributions reduce across
+    ranks *before* the fixed-order k-sum (dispatch.combine_capacity_slots),
+    so no rounding ever observes which rank served a slot — toggling
+    ``num_shadow`` or permuting experts cannot move the output by even an
+    ulp.  The plain (no-placement) path keeps the cheaper combined (t, d)
+    psum — slot-wise reduction costs top_k x the payload, which the tiny
+    decode reduction absorbs but the training psum *fallback* (large t)
+    should not pay for nothing — so placed vs plain differs by combine
+    rounding order (ulp), never semantics.  One further exception: ragged
+    dispatch under the "einsum" impl, whose XLA ragged_dot lowering is
+    group-structure-sensitive (ulp-level); the tile-aligned pallas/fused
+    kernels accumulate group-relative and stay bitwise.
+
+    The planner's ``capacity_scale`` shrink prices a2a bytes; there is no
+    wire here, so a shrunk owned buffer would only add drop risk — the
+    capacity branch always restores the full per-expert capacity.
     """
-    del shadow  # psum mode never shadows (validated in fmoe_apply)
+    from repro.placement.shadow import (merge_outputs, shadow_only,
+                                        shadow_spec, split_buffer)
+
     ax = dist.expert_axis
     mp = dist.expert_parallelism
     E = cfg.num_experts
-    E_local = E // mp
     t = x.shape[0]
     place = dist.placement
+    if place is not None and place.is_identity and l2p is None:
+        place = None
+    table = _route_table(place, l2p)
 
     g = gate_forward(router, x, cfg)
     expert_ids = g.expert_ids
-    if place is not None and not place.is_identity:
-        expert_ids = jnp.asarray(place.logical_to_physical)[expert_ids]
+    if table is not None:
+        expert_ids = table[expert_ids]
+    # layout-invariant slot-wise reduction only when a placement is engaged;
+    # the plain path keeps the k-fold-cheaper combined psum (see docstring)
+    slotwise = table is not None or bool(shadow)
     rank = 0  # row-major rank within the (possibly tuple) expert axis group
     for a in dist.expert_axes:
         rank = rank * dist.mesh.shape[a] + jax.lax.axis_index(a)
     if cfg.dispatch == "ragged":
+        E_ns = place.num_owned if place is not None else E
+        E_local = E_ns // mp
         n = t * cfg.top_k
         plan = D.make_ragged_plan(expert_ids, E)
         x_sorted = D.dispatch_ragged(x, plan)  # (n, d)
@@ -576,28 +632,76 @@ def _moe_psum(x, router, experts, extra, shadow, cfg: MoEConfig, act,
                                                               mode="drop")
         ys = RAGGED_FNS[impl](experts, xs, gs_local, act)
         y_sorted = ys.at[dest].get(mode="fill", fill_value=0)
-        y = D.combine_ragged(y_sorted, plan, g.combine_weights)
+        if slotwise:
+            # per-slot contributions psum BEFORE the fixed-order k-sum:
+            # bitwise-invariant to the expert layout (see
+            # dispatch.combine_capacity_slots)
+            c = jax.lax.psum(
+                D.combine_ragged_slots(y_sorted, plan, g.combine_weights), ax)
+            if shadow:
+                # shadow rows = the sorted tail [num_owned_rows, n), shifted
+                # to offset 0 — computed on every rank, excluded from the psum
+                lo_sh = offs[E_ns] if E_ns < E else jnp.int32(n)
+                dest_sh = jnp.where(i >= lo_sh, i - lo_sh, n).astype(jnp.int32)
+                xs_sh = jnp.zeros((n, x.shape[1]), x.dtype).at[dest_sh].set(
+                    x_sorted, mode="drop")
+                ys_sh = RAGGED_FNS[impl](shadow, xs_sh,
+                                         plan.group_sizes[E_ns:], act)
+                y_sh = ys_sh.at[dest_sh].get(mode="fill", fill_value=0)
+                c = c + D.combine_ragged_slots(y_sh, plan, g.combine_weights)
+            y = c.sum(axis=1)
+        else:  # plain path: the cheap combined (t, d) psum
+            y = jax.lax.psum(
+                D.combine_ragged(y_sorted, plan, g.combine_weights), ax)
         plan_load, plan_keep, denom = plan.group_sizes, None, n
     else:
         C = D.expert_capacity(t, E, cfg.top_k, cfg.capacity_factor)
-        plan = D.make_capacity_plan(expert_ids, E, C)
-        buf = D.dispatch_capacity(x, plan, E)  # (E, C, d)
-        buf_local = jax.lax.dynamic_slice_in_dim(buf, rank * E_local, E_local,
-                                                 axis=0)
-        out_local = expert_fn(experts, buf_local, act)  # (E_local, C, d)
-        out = jax.lax.dynamic_update_slice_in_dim(
-            jnp.zeros((E, C, out_local.shape[-1]), out_local.dtype), out_local,
-            rank * E_local, axis=0)
-        y = D.combine_capacity(out, plan, g.combine_weights)
+        spec = shadow_spec(place, E, C)
+        if spec.main_capacity != C:
+            # the planner's capacity shrink prices a2a bytes; there is no
+            # wire here, so honoring it would only add decode-time drops
+            spec = spec._replace(main_capacity=C)
+        E_ns = spec.num_owned
+        E_local = E_ns // mp
+        if place is not None:
+            plan = D.make_capacity_plan(
+                expert_ids, E, tuple(int(c) for c in spec.capacities))
+        else:
+            plan = D.make_capacity_plan(expert_ids, E, C)
+        buf = D.dispatch_capacity(x, plan, E)  # (E, width, d)
+        buf_main, buf_shadow = split_buffer(buf, spec)
+        buf_local = jax.lax.dynamic_slice_in_dim(buf_main, rank * E_local,
+                                                 E_local, axis=0)
+        out_local = expert_fn(experts, buf_local, act)  # (E_local, Cm, d)
+        out_main = jax.lax.dynamic_update_slice_in_dim(
+            jnp.zeros((E_ns, spec.main_capacity, out_local.shape[-1]),
+                      out_local.dtype), out_local, rank * E_local, axis=0)
+        # shadow slots stay zero in the psum'd buffer; every model-axis rank
+        # serves them locally from the replicated weights instead
+        out = merge_outputs(out_main, None, spec)
+        if slotwise:
+            # per-slot contributions reduce across ranks BEFORE the fixed-
+            # order k-sum so the result is bitwise-invariant to the expert
+            # layout (an in-rank k-sum would FMA-fuse co-located slot pairs
+            # into one rounding)
+            c = jax.lax.psum(
+                D.combine_capacity_slots(out, plan, g.combine_weights), ax)
+            if shadow:
+                out_sh = expert_fn(shadow, buf_shadow, act)
+                c = c + D.combine_capacity_slots(shadow_only(out_sh, spec),
+                                                 plan, g.combine_weights)
+            y = c.sum(axis=1)
+        else:  # plain path: the cheap combined (t, d) psum
+            y = jax.lax.psum(D.combine_capacity(out, plan, g.combine_weights),
+                             ax)
         plan_load, plan_keep, denom = plan.load, plan.keep, t * cfg.top_k
-    y = jax.lax.psum(y, ax)
     for p in extra.values():  # see _moe_a2a
         y = y + dense_ffn(p, x, act)
 
     axes = tuple(dist.token_axes)
     load, drop = load_metrics(plan_load, plan_keep, denom)
-    if place is not None and not place.is_identity:
-        load = load[jnp.asarray(place.logical_to_physical)]  # logical order
+    if table is not None:
+        load = load[table]  # logical order
     pm = (lambda v: jax.lax.pmean(v, axes)) if axes else (lambda v: v)
     metrics = MoEMetrics(pm(load_balance_loss(g.probs, g.expert_ids, E)),
                          pm(router_z_loss(g.logits)), pm(load), pm(drop))
@@ -609,9 +713,22 @@ def _moe_psum(x, router, experts, extra, shadow, cfg: MoEConfig, act,
 # ---------------------------------------------------------------------------
 
 
+def _check_not_per_layer(place) -> None:
+    """This function applies ONE layer; a stacked per-layer plan must be
+    split upstream (models/lm.py) into geometry + per-layer ``l2p`` tables."""
+    if place is None:
+        return
+    from repro.placement.plan import PerLayerPlacement
+    if isinstance(place, PerLayerPlacement):
+        raise TypeError(
+            "fmoe_apply applies a single layer; split a PerLayerPlacement "
+            "into its geometry + per-layer l2p tables (models.lm does this "
+            "for the full stack) instead of passing it here")
+
+
 def fmoe_apply(params: dict, x: jax.Array, cfg: MoEConfig, *, act: str = "swiglu",
                dist: Optional[DistConfig] = None, impl: str = "einsum",
-               rng: Optional[jax.Array] = None, placement=None):
+               rng: Optional[jax.Array] = None, placement=None, l2p=None):
     """Apply the MoE FFN to ``x`` of shape (..., d_model).
 
     Returns ``(y, MoEMetrics)``.  ``impl`` selects the expert kernels
@@ -622,7 +739,12 @@ def fmoe_apply(params: dict, x: jax.Array, cfg: MoEConfig, *, act: str = "swiglu
 
     ``placement`` (or ``dist.placement``) is an ExpertPlacement: ``params``
     must already be in its physical order (repro.placement.migrate); routing
-    stays in logical expert space via the plan's index table.
+    stays in logical expert space via the plan's index table.  ``l2p`` is
+    *this layer's* logical->physical gate-id table (a traced (E,) int32
+    array) when the plan is per-layer: the layer scan in models/lm.py splits
+    a ``PerLayerPlacement`` into the shared static geometry (riding on
+    ``dist.placement``) plus the stacked tables it threads here — a
+    PerLayerPlacement itself must not reach this function.
     """
     expert_fn = EXPERT_FNS[impl]
     shape = x.shape
@@ -631,13 +753,15 @@ def fmoe_apply(params: dict, x: jax.Array, cfg: MoEConfig, *, act: str = "swiglu
 
     residual_keys = [k for k in ("shared", "dense") if k in params]
     if dist is None:
+        _check_not_per_layer(placement)
         y, metrics = _moe_local(xf, router, experts, cfg, act, expert_fn, rng,
-                                placement=placement, impl=impl)
+                                placement=placement, impl=impl, l2p=l2p)
         for k in residual_keys:
             y = y + dense_ffn(params[k], xf, act)
     else:
         place = dist.placement if dist.placement is not None else placement
         if place is not None:
+            _check_not_per_layer(place)
             if place.num_experts != cfg.num_experts:
                 raise ValueError(
                     f"placement has {place.num_experts} experts, "
@@ -650,9 +774,6 @@ def fmoe_apply(params: dict, x: jax.Array, cfg: MoEConfig, *, act: str = "swiglu
                 if dist.tp_axis:
                     raise NotImplementedError(
                         "expert shadowing + expert-internal TP")
-                if dist.mode != "a2a":
-                    raise NotImplementedError(
-                        "expert shadowing requires the a2a mode")
                 if (place.num_owned % dist.expert_parallelism
                         or place.num_owned == 0):
                     raise ValueError(
@@ -712,13 +833,21 @@ def fmoe_apply(params: dict, x: jax.Array, cfg: MoEConfig, *, act: str = "swiglu
         fn = functools.partial(local, cfg=cfg, act=act, expert_fn=expert_fn,
                                dist=dist, impl=impl)
         mspec = MoEMetrics(P(), P(), P(None), P())
+        in_specs = [tok_spec, jax.tree.map(lambda _: P(None, None), router),
+                    espec, xspec, sspec]
+        operands = [xf, router, experts, extra, shadow]
+        if l2p is not None:
+            # the per-layer gate-id table rides replicated into the region
+            operands.append(jnp.asarray(l2p, jnp.int32))
+            in_specs.append(P(None))
+        else:
+            fn = functools.partial(fn, l2p=None)
         y, metrics = compat.shard_map(
             fn, mesh=dist.mesh,
-            in_specs=(tok_spec, jax.tree.map(lambda _: P(None, None), router),
-                      espec, xspec, sspec),
+            in_specs=tuple(in_specs),
             out_specs=(tok_spec, mspec),
             check_vma=False,
-        )(xf, router, experts, extra, shadow)
+        )(*operands)
         # paper-faithful baseline: residuals outside shard_map (auto-sharded)
         for k in residual_keys:
             y = y + dense_ffn(params[k], xf, act)

@@ -15,18 +15,37 @@ import numpy as np
 
 
 class LoadMonitor:
-    def __init__(self, num_experts: int, *, ema: float = 0.99):
+    def __init__(self, num_experts: int, *, ema: float = 0.99,
+                 num_layers: int = 0):
         self.num_experts = num_experts
         self.ema = ema
         self.load_ema = np.full(num_experts, 1.0 / num_experts)
+        # per-layer mode (num_layers > 0): additionally track an (L, E) EMA —
+        # expert skew diverges per layer in deep stacks, and the per-layer
+        # planner (repro.placement.plan.plan_placement_per_layer) feeds on it
+        self.num_layers = num_layers
+        self.load_ema_layers = (np.full((num_layers, num_experts),
+                                        1.0 / num_experts)
+                                if num_layers else None)
         self.drop_ema = 0.0
         self.steps = 0
         self.history: list = []
 
     def update(self, metrics, *, record_every: int = 0) -> None:
-        """metrics: repro.core.balance.MoEMetrics (load may be summed over
-        layers; it is renormalized here)."""
+        """metrics: repro.core.balance.MoEMetrics.  ``metrics.load`` may be
+        an (E,) vector (summed over layers; renormalized here) or an (L, E)
+        per-layer stack — the latter also refreshes ``load_ema_layers``."""
         load = np.asarray(metrics.load, np.float64)
+        if load.ndim == 2:
+            if self.load_ema_layers is not None:
+                if load.shape != self.load_ema_layers.shape:
+                    raise ValueError(
+                        f"layer load {load.shape} != "
+                        f"{self.load_ema_layers.shape}")
+                rows = load / np.maximum(load.sum(-1, keepdims=True), 1e-12)
+                self.load_ema_layers = (self.ema * self.load_ema_layers
+                                        + (1 - self.ema) * rows)
+            load = load.sum(0)
         total = load.sum()
         if total > 0:
             load = load / total

@@ -54,6 +54,14 @@ def jit_serve_step(cfg: ModelConfig, mesh, batch: int, seq_len: int, *,
     opts["serve_tp"] keeps weights TP-resident (no FSDP over data) — at
     inference there are no optimizer states, so bf16 weights fit sharded over
     the model axis only and the per-layer weight all-gathers vanish (§Perf).
+
+    opts["placement"] is an ExpertPlacement or PerLayerPlacement whose
+    physical order ``params`` must already be in (placement.from_logical):
+    decode usually runs the psum expert mode, where a plan load-balances the
+    owned experts across ranks and serves shadowed hot experts locally,
+    outside the reduction (core/fmoe._moe_psum) — the same load-balance loop
+    as training, on the serving path.  Param/cache shardings are unchanged
+    (a placement permutes content, not shapes).
     """
     opts = dict(opts or {})
     mp = mesh.shape["model"] if "model" in mesh.axis_names else 1
@@ -132,6 +140,48 @@ def generate(params, cfg: ModelConfig, prompt: jax.Array, steps: int, *,
     return jnp.concatenate(out, axis=1)
 
 
+def plan_for_serving(params, cfg: ModelConfig, prompt: jax.Array,
+                     num_ranks: int, *, per_layer: bool = True):
+    """Measure per-layer expert load on the prompt and plan a decode layout.
+
+    One forward pass over the prompt yields the (L, E) load stack; the
+    planner (train=False: no grad all-reduce to charge for) picks each
+    layer's permutation.  Returns ``(plan, params)`` with params migrated
+    into the plan's physical order.
+
+    Expect ``num_shadow == 0`` from this path: the decode mode is psum,
+    where shadowing saves no wire bytes and replicates weight reads, so the
+    cost model correctly declines it — the per-layer *permutation* is what
+    pays at decode (balanced owned compute).  The decode-time shadow
+    execution in ``core/fmoe._moe_psum`` is there for the other direction:
+    a shadowed plan produced by the *training* loop (ReplanHook /
+    checkpoint restore) serves unchanged, bit-identically to its
+    unshadowed twin, instead of forcing a re-migration at deploy time.
+    """
+    import numpy as np
+
+    from repro.core.dispatch import expert_capacity
+    from repro.placement import (from_logical, load_calibration,
+                                 plan_placement, plan_placement_per_layer)
+
+    moe = cfg.moe
+    _, _, loads = lm.forward(params, cfg, prompt, layer_loads=True)
+    cap = expert_capacity(prompt.shape[0], moe.num_experts, moe.top_k,
+                          moe.capacity_factor)
+    # train=False: no grad all-reduce to charge; shrink_capacity=False: the
+    # decode path is psum — no a2a buffer exists, so a shrunk capacity would
+    # only add decode-time drops (and _moe_psum ignores the shrink anyway)
+    kw = dict(d_model=cfg.d_model, d_hidden=moe.d_expert_hidden,
+              capacity=cap, capacity_factor=moe.capacity_factor,
+              train=False, shrink_capacity=False,
+              constants=load_calibration())
+    if per_layer:
+        plan = plan_placement_per_layer(np.asarray(loads), num_ranks, **kw)
+    else:
+        plan = plan_placement(np.asarray(loads).sum(0), num_ranks, **kw)
+    return plan, from_logical(params, plan)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-360m")
@@ -139,6 +189,14 @@ def main() -> None:
     ap.add_argument("--prompt_len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--mesh", default="",
+                    help="DATAxMODEL mesh for the sharded decode step (e.g. "
+                         "1x4; on CPU set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
+    ap.add_argument("--per_layer_plans", action="store_true",
+                    help="measure per-layer expert load on the prompt and "
+                         "serve under a per-layer placement (decode-time "
+                         "shadowing; needs --mesh and an MoE arch)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -147,8 +205,32 @@ def main() -> None:
     params = lm.init_params(jax.random.PRNGKey(0), cfg)
     prompt = jax.random.randint(jax.random.PRNGKey(1),
                                 (args.batch, args.prompt_len), 0, cfg.vocab_size)
-    t0 = time.time()
-    seq = generate(params, cfg, prompt, args.gen)
+    if args.mesh:
+        from repro.launch.mesh import make_local_mesh
+        d, m = (int(v) for v in args.mesh.split("x"))
+        mesh = make_local_mesh(d, m)
+        opts: dict = {}
+        if args.per_layer_plans and cfg.moe is not None and m > 1:
+            plan, params = plan_for_serving(params, cfg, prompt, m,
+                                            per_layer=True)
+            opts["placement"] = plan
+            print(f"serving plan: shadow={plan.num_shadow} "
+                  f"cap_scale={plan.capacity_scale:.2f}")
+        seq_len = args.prompt_len + args.gen
+        step, _ = jit_serve_step(cfg, mesh, args.batch, seq_len, opts=opts)
+        cache = lm.init_cache(cfg, args.batch, cache_len_for(cfg, seq_len))
+        tok, out = prompt[:, :1], [prompt[:, :1]]
+        t0 = time.time()
+        with mesh:
+            for pos in range(seq_len - 1):
+                logits, cache = step(params, tok, jnp.int32(pos), cache)
+                tok = (prompt[:, pos + 1:pos + 2] if pos + 1 < args.prompt_len
+                       else jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32))
+                out.append(tok)
+        seq = jnp.concatenate(out, axis=1)
+    else:
+        t0 = time.time()
+        seq = generate(params, cfg, prompt, args.gen)
     dt = time.time() - t0
     print(f"generated {args.batch}x{args.gen} tokens in {dt:.2f}s "
           f"({args.batch * args.gen / dt:.1f} tok/s)")

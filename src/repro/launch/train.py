@@ -34,8 +34,12 @@ def moe_dist(cfg: ModelConfig, mesh, num_tokens: int, *,
     including the expert axis; psum otherwise (decode-time small batches);
     None when the config has no MoE or the mesh has no expert axis.
     ``opts`` toggles the §Perf beyond-paper optimizations (expert_tp,
-    constrain_tokens) and may carry an ExpertPlacement under ``placement``
-    (attached only on the a2a path — shadowing needs an a2a to skip).
+    constrain_tokens) and may carry an ExpertPlacement or PerLayerPlacement
+    under ``placement``, attached on every expert-parallel mode: the a2a
+    paths skip shadowed experts on the wire, and the psum (decode) path
+    balances owned experts per rank and serves shadowed ones outside the
+    reduction (core/fmoe._moe_psum) — params must be in the plan's physical
+    order either way.
     """
     opts = opts or {}
     if cfg.moe is None or "model" not in mesh.axis_names:
@@ -72,12 +76,16 @@ def moe_dist(cfg: ModelConfig, mesh, num_tokens: int, *,
     dsize = 1
     for a in d_axes:
         dsize *= mesh.shape[a]
-    # psum fallbacks: no a2a, so overlap_chunks / wire_dtype don't apply
+    # psum fallbacks: no a2a, so overlap_chunks / wire_dtype don't apply —
+    # but a placement does (decode-time shadowing skips hot experts in the
+    # psum reduction and serves them locally; see core/fmoe._moe_psum)
     if num_tokens % dsize == 0:
         return DistConfig(mesh, d_axes, expert_axis=expert_axis, tp_axis=None,
-                          constrain_tokens=extra["constrain_tokens"])
+                          constrain_tokens=extra["constrain_tokens"],
+                          placement=opts.get("placement"))
     return DistConfig(mesh, (), expert_axis=expert_axis, tp_axis=None,
-                      constrain_tokens=extra["constrain_tokens"])
+                      constrain_tokens=extra["constrain_tokens"],
+                      placement=opts.get("placement"))
 
 
 def make_train_step(cfg: ModelConfig, opt: AdamW, *, dist=None,
@@ -112,7 +120,8 @@ def make_train_step(cfg: ModelConfig, opt: AdamW, *, dist=None,
             n_e = cfg.moe.num_experts if cfg.moe is not None else 1
             aux0 = {"ce": jnp.zeros(()), "aux_loss": jnp.zeros(()),
                     "z_loss": jnp.zeros(()), "drop_frac": jnp.zeros(()),
-                    "load": jnp.zeros((n_e,))}
+                    "load": jnp.zeros((n_e,)),
+                    "load_layers": jnp.zeros((cfg.num_layers, n_e))}
             (grads, loss, aux), _ = jax.lax.scan(
                 body, (zero_g, jnp.zeros(()), aux0), micro)
             inv = 1.0 / num_microbatches
@@ -181,7 +190,8 @@ class ReplanHook:
 
     def __init__(self, cfg: ModelConfig, opt: AdamW, mesh, global_batch: int,
                  seq_len: int, *, every: int = 200,
-                 num_microbatches: int = 1, opts: Optional[dict] = None):
+                 num_microbatches: int = 1, opts: Optional[dict] = None,
+                 per_layer: bool = False):
         from repro.core.dispatch import expert_capacity
         from repro.core.monitor import LoadMonitor
         from repro.placement import (PlacementController, identity_placement,
@@ -190,6 +200,7 @@ class ReplanHook:
         self.cfg, self.opt, self.mesh = cfg, opt, mesh
         self.global_batch, self.seq_len = global_batch, seq_len
         self.num_microbatches, self.opts = num_microbatches, opts
+        self.per_layer = per_layer
         moe = cfg.moe
         n_dev = 1
         for a in mesh.axis_names:
@@ -210,7 +221,8 @@ class ReplanHook:
         t_local = max(1, global_batch * seq_len // n_dev // num_microbatches)
         cap = expert_capacity(t_local, moe.num_experts, moe.top_k,
                               moe.capacity_factor)
-        self.monitor = LoadMonitor(moe.num_experts)
+        L = cfg.num_layers if per_layer else 0
+        self.monitor = LoadMonitor(moe.num_experts, num_layers=L)
         # price plans with bandwidths measured on THIS machine when the
         # benchmark suite has left results behind (v5e roofline otherwise),
         # and with the bytes the wire actually moves under wire_dtype
@@ -221,7 +233,7 @@ class ReplanHook:
             d_hidden=moe.d_expert_hidden, capacity=cap,
             capacity_factor=moe.capacity_factor,
             every=every if self.enabled else 0, bytes_per_elem=wire_bytes,
-            constants=constants)
+            num_layers=L, constants=constants)
         # fetch load to host only on sampled steps: a per-step device_get
         # would serialize host and device for a decision made every `every`
         self.sync_every = max(1, every // 16)
@@ -235,12 +247,23 @@ class ReplanHook:
         from repro.core.balance import MoEMetrics
         from repro.placement import migrate
 
-        if ("load" in metrics and self.controller.every
+        if (self.per_layer and self.controller.every
+                and "load_layers" not in metrics and "load" in metrics):
+            # fail loudly: falling back to the summed load would leave the
+            # (L, E) EMA at its uniform init and the per-layer controller
+            # would silently never replan
+            raise ValueError(
+                "ReplanHook(per_layer=True) needs metrics['load_layers'] "
+                "(the (L, E) stack loss_fn emits); got only 'load'")
+        load_key = "load_layers" if self.per_layer else "load"
+        if (load_key in metrics and self.controller.every
                 and step % self.sync_every == 0):
             # device_get lands here (and only here) when metrics are device
-            # arrays: the monitor EMA samples every sync_every-th step
+            # arrays: the monitor EMA samples every sync_every-th step.
+            # per-layer mode feeds the stacked (L, E) loads from loss_fn's
+            # aux so each layer's skew drives its own plan.
             m = MoEMetrics(0.0, 0.0,
-                           jax.device_get(metrics["load"]),
+                           jax.device_get(metrics[load_key]),
                            jax.device_get(metrics.get("drop_frac", 0.0)))
             self.monitor.update(m)
         old = self.controller.current
@@ -279,6 +302,10 @@ def main() -> None:
     ap.add_argument("--replan_every", type=int, default=0,
                     help="steps between expert-placement replans "
                          "(0 = off; needs --mesh and an MoE arch)")
+    ap.add_argument("--per_layer_plans", action="store_true",
+                    help="plan expert placement per layer (each layer gets "
+                         "its own permutation + shadow set from its own "
+                         "measured load; needs --replan_every)")
     ap.add_argument("--overlap_chunks", type=int, default=0,
                     help="§5.2 smart schedule: pipeline the expert all-to-all "
                          "with compute in this many capacity micro-shards "
@@ -325,7 +352,8 @@ def main() -> None:
         if args.replan_every and cfg.moe is not None and m > 1:
             hook = ReplanHook(cfg, opt, mesh, args.batch, args.seq,
                               every=args.replan_every,
-                              num_microbatches=args.microbatches, opts=opts)
+                              num_microbatches=args.microbatches, opts=opts,
+                              per_layer=args.per_layer_plans)
             if not hook.enabled:  # no a2a path here: skip the per-step sync
                 print("replan disabled: placement needs the a2a expert path")
                 hook = None

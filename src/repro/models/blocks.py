@@ -80,9 +80,12 @@ def layer_init(rng: jax.Array, cfg: ModelConfig, *, cross: bool = False) -> dict
 
 
 def _apply_ffn(p: dict, cfg: ModelConfig, x: jax.Array,
-               dist: Optional[DistConfig], impl: str = "einsum"):
+               dist: Optional[DistConfig], impl: str = "einsum", l2p=None):
+    """``l2p``: this layer's logical->physical gate-id table, scanned out of
+    a stacked per-layer placement by models/lm.py (None = shared/no plan)."""
     if cfg.moe is not None:
-        return fmoe_apply(p, x, cfg.moe, act=cfg.act, dist=dist, impl=impl)
+        return fmoe_apply(p, x, cfg.moe, act=cfg.act, dist=dist, impl=impl,
+                          l2p=l2p)
     return dense_ffn(p, x, cfg.act), None
 
 
@@ -146,7 +149,7 @@ def layer_apply_seq(p: dict, cfg: ModelConfig, x: jax.Array, *, window,
                     dist: Optional[DistConfig] = None,
                     enc_out: Optional[jax.Array] = None,
                     mixer_state: Optional[Any] = None,
-                    impl: str = "einsum"):
+                    impl: str = "einsum", l2p=None):
     """x (B, S, d) -> (x, MoEMetrics|None).  mixer_state: SSM initial state
     (zeros created by the caller for ssm/hybrid families)."""
     xn = apply_norm(p["norm1"], x, cfg.norm)
@@ -165,7 +168,7 @@ def layer_apply_seq(p: dict, cfg: ModelConfig, x: jax.Array, *, window,
         metrics = None
     else:
         h, metrics = _apply_ffn(p.get("ffn"), cfg, apply_norm(p["norm2"], x, cfg.norm), dist,
-                                impl)
+                                impl, l2p)
     return x + h, metrics
 
 
@@ -176,7 +179,7 @@ def layer_apply_seq(p: dict, cfg: ModelConfig, x: jax.Array, *, window,
 
 def layer_apply_prefill(p: dict, cfg: ModelConfig, x: jax.Array, cache, *,
                         window, dist: Optional[DistConfig] = None,
-                        start: int = 0, impl: str = "einsum"):
+                        start: int = 0, impl: str = "einsum", l2p=None):
     """x (B, S, d), per-layer cache -> (x, filled_cache, MoEMetrics|None).
 
     One full-sequence pass writes every position's K/V (or recurrent state)
@@ -192,7 +195,7 @@ def layer_apply_prefill(p: dict, cfg: ModelConfig, x: jax.Array, cache, *,
         if cfg.moe is None:
             h, c2 = R.channel_mix(p["rwkv"], xn2, c1)
             return x + h, c2, None
-        h, metrics = _apply_ffn(p["ffn"], cfg, xn2, dist, impl)
+        h, metrics = _apply_ffn(p["ffn"], cfg, xn2, dist, impl, l2p)
         return x + h, c1, metrics
 
     if cfg.family == "hybrid":
@@ -226,7 +229,7 @@ def layer_apply_prefill(p: dict, cfg: ModelConfig, x: jax.Array, cache, *,
         new_cache = A.fill_kv_cache(cache, k, v, start=start)
 
     h, metrics = _apply_ffn(p["ffn"], cfg, apply_norm(p["norm2"], x, cfg.norm),
-                            dist, impl)
+                            dist, impl, l2p)
     return x + h, new_cache, metrics
 
 
@@ -237,7 +240,7 @@ def layer_apply_prefill(p: dict, cfg: ModelConfig, x: jax.Array, cache, *,
 
 def layer_apply_decode(p: dict, cfg: ModelConfig, x: jax.Array, cache, pos, *,
                        window, dist: Optional[DistConfig] = None,
-                       impl: str = "einsum"):
+                       impl: str = "einsum", l2p=None):
     """x (B, 1, d), per-layer cache -> (x, new_cache, MoEMetrics|None)."""
     if cfg.family == "ssm":
         h, c1 = R.time_mix(p["rwkv"], apply_norm(p["norm1"], x, cfg.norm), cache, cfg)
@@ -246,7 +249,7 @@ def layer_apply_decode(p: dict, cfg: ModelConfig, x: jax.Array, cache, pos, *,
             h, c2 = R.channel_mix(p["rwkv"], apply_norm(p["norm2"], x, cfg.norm), c1)
             return x + h, c2, None
         h, metrics = _apply_ffn(p["ffn"], cfg, apply_norm(p["norm2"], x, cfg.norm), dist,
-                                impl)
+                                impl, l2p)
         return x + h, c1, metrics
 
     attn_cache = cache["attn"] if isinstance(cache, dict) and "attn" in cache \
@@ -261,14 +264,14 @@ def layer_apply_decode(p: dict, cfg: ModelConfig, x: jax.Array, cache, pos, *,
                         kv_x=cache["enc_out"], causal=False)
         x = x + h
         h, metrics = _apply_ffn(p["ffn"], cfg, apply_norm(p["norm2"], x, cfg.norm), dist,
-                                impl)
+                                impl, l2p)
         return x + h, {"self": kv, "enc_out": cache["enc_out"]}, metrics
 
     h, new_cache = _mixer_decode(p, cfg, apply_norm(p["norm1"], x, cfg.norm),
                                  attn_cache, pos, window)
     x = x + h
     h, metrics = _apply_ffn(p["ffn"], cfg, apply_norm(p["norm2"], x, cfg.norm), dist,
-                            impl)
+                            impl, l2p)
     return x + h, new_cache, metrics
 
 

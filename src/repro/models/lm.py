@@ -34,6 +34,32 @@ def _n_experts(cfg: ModelConfig) -> int:
     return cfg.moe.num_experts if cfg.moe is not None else 1
 
 
+def _layer_tables(cfg: ModelConfig, dist: Optional[DistConfig]):
+    """Split a per-layer placement riding on ``dist`` for the layer scan.
+
+    A :class:`repro.placement.plan.PerLayerPlacement` can't pass into
+    fmoe_apply whole (each layer has its own gate-id table but the scan
+    needs one static geometry), so it splits here: ``dist.placement``
+    becomes the shared-geometry representative plan, and the stacked
+    ``(L, E)`` logical->physical tables return separately to ride the scan
+    as per-layer xs (blocks._apply_ffn threads each row as ``l2p``).
+    Returns ``(dist, tables | None)``.
+    """
+    if dist is None or dist.placement is None:
+        return dist, None
+    from repro.placement.plan import PerLayerPlacement
+    place = dist.placement
+    if not isinstance(place, PerLayerPlacement):
+        return dist, None
+    place.validate()
+    if place.num_layers != cfg.num_layers:
+        raise ValueError(
+            f"per-layer placement has {place.num_layers} layers, "
+            f"config has {cfg.num_layers}")
+    tables = jnp.asarray(place.logical_to_physical, jnp.int32)  # (L, E)
+    return dist._replace(placement=place.geometry), tables
+
+
 def _cast_params(p, dtype):
     """Cast float params to the compute dtype at point of use (master weights
     stay float32; the router re-promotes to f32 internally)."""
@@ -103,14 +129,19 @@ def encode(params: dict, cfg: ModelConfig, frames: jax.Array) -> jax.Array:
 def forward(params: dict, cfg: ModelConfig, tokens: jax.Array, *,
             frames: Optional[jax.Array] = None,
             patches: Optional[jax.Array] = None,
-            dist: Optional[DistConfig] = None, impl: str = "einsum"):
+            dist: Optional[DistConfig] = None, impl: str = "einsum",
+            layer_loads: bool = False):
     """tokens (B, S) -> (logits (B, S', V), MoEMetrics).
 
     vlm: ``patches`` (B, P, d) are prepended; logits cover the full combined
     sequence (caller slices text positions for the loss).
     audio: ``frames`` (B, F, d) go through the encoder; decoder cross-attends.
+    ``layer_loads=True`` additionally returns the per-layer expert load
+    stack (L, E) — expert skew is per layer, and the per-layer placement
+    planner feeds on this instead of the layer-summed ``metrics.load``.
     """
     dtype = jnp.dtype(cfg.dtype)
+    dist, tables = _layer_tables(cfg, dist)
     x = embed_lookup(params["embed"], tokens, dtype)
     if cfg.frontend == "vision" and patches is not None:
         x = jnp.concatenate([patches.astype(dtype), x], axis=1)
@@ -122,23 +153,32 @@ def forward(params: dict, cfg: ModelConfig, tokens: jax.Array, *,
     windows = B.layer_windows(cfg)
     state0 = B.mixer_state(cfg, batch, dtype)
     n_e = _n_experts(cfg)
+    want_loads = layer_loads and cfg.moe is not None
 
     def body(carry, xs):
         x, metrics = carry
-        p_l, window = xs
+        (p_l, window), l2p = xs[:2], (xs[2] if tables is not None else None)
         x, m = B.layer_apply_seq(_cast_params(p_l, dtype), cfg, x,
                                  window=window, dist=dist,
                                  enc_out=enc_out, mixer_state=state0,
-                                 impl=impl)
+                                 impl=impl, l2p=l2p)
         metrics = metrics + m if m is not None else metrics
-        return (x.astype(dtype), metrics), None
+        return ((x.astype(dtype), metrics),
+                m.load if want_loads else None)
 
     if cfg.remat == "full":
         body = jax.remat(body)
-    (x, metrics), _ = jax.lax.scan(
-        body, (x, MoEMetrics.zero(n_e)), (params["layers"], windows))
+    xs = (params["layers"], windows)
+    if tables is not None:
+        xs += (tables,)
+    (x, metrics), loads = jax.lax.scan(body, (x, MoEMetrics.zero(n_e)), xs)
     x = apply_norm(params["final_norm"], x, cfg.norm)
-    return _logits(params, cfg, x), metrics
+    logits = _logits(params, cfg, x)
+    if layer_loads:
+        if loads is None:
+            loads = jnp.zeros((cfg.num_layers, n_e))
+        return logits, metrics, loads
+    return logits, metrics
 
 
 def loss_fn(params: dict, cfg: ModelConfig, batch: dict, *,
@@ -147,10 +187,10 @@ def loss_fn(params: dict, cfg: ModelConfig, batch: dict, *,
     optionally "frames"/"patches"}.  ``impl`` picks the expert kernels
     (einsum | pallas | fused — see repro.core.fmoe.EXPERT_FNS)."""
     tokens = batch["tokens"]
-    logits, metrics = forward(params, cfg, tokens,
-                              frames=batch.get("frames"),
-                              patches=batch.get("patches"), dist=dist,
-                              impl=impl)
+    logits, metrics, loads = forward(params, cfg, tokens,
+                                     frames=batch.get("frames"),
+                                     patches=batch.get("patches"), dist=dist,
+                                     impl=impl, layer_loads=True)
     if cfg.frontend == "vision" and "patches" in batch:
         logits = logits[:, batch["patches"].shape[1]:]  # text positions only
     targets = tokens[:, 1:]
@@ -165,7 +205,8 @@ def loss_fn(params: dict, cfg: ModelConfig, batch: dict, *,
     L = max(cfg.num_layers, 1)
     aux = {"ce": ce, "aux_loss": metrics.aux_loss, "z_loss": metrics.z_loss,
            "drop_frac": metrics.drop_frac / L,
-           "load": metrics.load / L}  # per-expert load for the §6 monitor
+           "load": metrics.load / L,  # per-expert load for the §6 monitor
+           "load_layers": loads}  # (L, E) per-layer load (per-layer planner)
     return loss, aux
 
 
@@ -181,6 +222,7 @@ def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array, cache: Any, *,
     """tokens (B, S) + empty cache -> (logits (B, S', V), filled cache,
     metrics).  Decoding then continues at position S' with decode_step."""
     dtype = jnp.dtype(cfg.dtype)
+    dist, tables = _layer_tables(cfg, dist)
     x = embed_lookup(params["embed"], tokens, dtype)
     if cfg.frontend == "vision" and patches is not None:
         x = jnp.concatenate([patches.astype(dtype), x], axis=1)
@@ -196,15 +238,19 @@ def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array, cache: Any, *,
 
     def body(carry, xs):
         x, metrics = carry
-        p_l, window, cache_l = xs
+        p_l, window, cache_l = xs[:3]
+        l2p = xs[3] if tables is not None else None
         x, new_cache_l, m = B.layer_apply_prefill(
             _cast_params(p_l, dtype), cfg, x, cache_l, window=window,
-            dist=dist, impl=impl)
+            dist=dist, impl=impl, l2p=l2p)
         metrics = metrics + m if m is not None else metrics
         return (x.astype(dtype), metrics), new_cache_l
 
+    xs = (params["layers"], windows, cache)
+    if tables is not None:
+        xs += (tables,)
     (x, metrics), new_cache = jax.lax.scan(
-        body, (x, MoEMetrics.zero(n_e)), (params["layers"], windows, cache))
+        body, (x, MoEMetrics.zero(n_e)), xs)
     x = apply_norm(params["final_norm"], x, cfg.norm)
     return _logits(params, cfg, x), new_cache, metrics
 
@@ -227,8 +273,12 @@ def decode_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
                 pos: jax.Array, cache: Any, *,
                 dist: Optional[DistConfig] = None, impl: str = "einsum"):
     """tokens (B, 1) at absolute position ``pos`` -> (logits (B, 1, V),
-    new_cache, metrics)."""
+    new_cache, metrics).  A per-layer ``dist.placement`` is honored: each
+    layer's decode MoE (usually the psum mode) routes through its own
+    gate-id table, with shadowed hot experts served locally outside the
+    reduction (launch/serve.py wires this for the production decode step)."""
     dtype = jnp.dtype(cfg.dtype)
+    dist, tables = _layer_tables(cfg, dist)
     x = embed_lookup(params["embed"], tokens, dtype)
     cache_len = _cache_len(cfg, cache)
     windows = jnp.minimum(B.layer_windows(cfg),
@@ -237,15 +287,19 @@ def decode_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
 
     def body(carry, xs):
         x, metrics = carry
-        p_l, window, cache_l = xs
+        p_l, window, cache_l = xs[:3]
+        l2p = xs[3] if tables is not None else None
         x, new_cache_l, m = B.layer_apply_decode(
             _cast_params(p_l, dtype), cfg, x, cache_l, pos,
-            window=window, dist=dist, impl=impl)
+            window=window, dist=dist, impl=impl, l2p=l2p)
         metrics = metrics + m if m is not None else metrics
         return (x.astype(dtype), metrics), new_cache_l
 
+    xs = (params["layers"], windows, cache)
+    if tables is not None:
+        xs += (tables,)
     (x, metrics), new_cache = jax.lax.scan(
-        body, (x, MoEMetrics.zero(n_e)), (params["layers"], windows, cache))
+        body, (x, MoEMetrics.zero(n_e)), xs)
     x = apply_norm(params["final_norm"], x, cfg.norm)
     return _logits(params, cfg, x), new_cache, metrics
 

@@ -1,24 +1,31 @@
 """Dynamic expert placement & shadowing (closing FastMoE §6's open loop).
 
-plan.py      — ExpertPlacement + roofline cost model + PlacementController
+plan.py      — ExpertPlacement / PerLayerPlacement + roofline cost model +
+               PlacementController (per-layer aware)
 migrate.py   — permute live params / optimizer state between layouts
-shadow.py    — replicated hot-expert execution, skipped in the all-to-all
+               (per-layer plans permute each layer's slice independently)
+shadow.py    — replicated hot-expert execution: skipped in the all-to-all
+               (train) and in the psum reduction (decode)
 calibrate.py — cost-model constants measured from benchmarks/results
 """
 from repro.placement.calibrate import (CostConstants, calibrate_constants,
                                        load_calibration)
 from repro.placement.migrate import (from_logical, migrate,
                                      router_index_table, to_logical)
-from repro.placement.plan import (ExpertPlacement, PlacementController,
-                                  identity_placement, placement_cost,
-                                  plan_placement)
-from repro.placement.shadow import (ShadowSpec, merge_outputs, shadow_spec,
-                                    split_buffer)
+from repro.placement.plan import (ExpertPlacement, PerLayerPlacement,
+                                  PlacementController, identity_per_layer,
+                                  identity_placement, per_layer_cost,
+                                  per_layer_placement, placement_cost,
+                                  plan_placement, plan_placement_per_layer)
+from repro.placement.shadow import (ShadowSpec, merge_outputs, shadow_only,
+                                    shadow_spec, split_buffer)
 
 __all__ = [
-    "CostConstants", "ExpertPlacement", "PlacementController", "ShadowSpec",
-    "calibrate_constants", "from_logical", "identity_placement",
-    "load_calibration", "merge_outputs", "migrate", "placement_cost",
-    "plan_placement", "router_index_table", "shadow_spec", "split_buffer",
-    "to_logical",
+    "CostConstants", "ExpertPlacement", "PerLayerPlacement",
+    "PlacementController", "ShadowSpec", "calibrate_constants",
+    "from_logical", "identity_per_layer", "identity_placement",
+    "load_calibration", "merge_outputs", "migrate", "per_layer_cost",
+    "per_layer_placement", "placement_cost", "plan_placement",
+    "plan_placement_per_layer", "router_index_table", "shadow_only",
+    "shadow_spec", "split_buffer", "to_logical",
 ]

@@ -9,16 +9,23 @@ checkpoints, which store logical order via :func:`to_logical`) are unchanged.
 Works on a single MoE layer's ``params["experts"]`` dict, on full LM trees
 (stacked ``(L, E, ...)`` expert leaves are permuted on dim 1), and on AdamW
 state (whose mu/nu mirror the param tree).
+
+:class:`~repro.placement.plan.PerLayerPlacement` plans permute each layer's
+slice of a stacked leaf with that layer's own table (``(L, E)`` index array,
+``take_along_axis`` on dim 1); they require stacked trees — a per-layer plan
+meeting a bare ``(E, ...)`` leaf is an error, not a silent broadcast.
 """
 from __future__ import annotations
 
-from typing import Any
+from typing import Any, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.placement.plan import ExpertPlacement
+from repro.placement.plan import ExpertPlacement, PerLayerPlacement
+
+Plan = Union[ExpertPlacement, PerLayerPlacement]
 
 
 def _expert_axis(path: tuple, shape: tuple, num_experts: int) -> int | None:
@@ -40,42 +47,72 @@ def _expert_axis(path: tuple, shape: tuple, num_experts: int) -> int | None:
 
 
 def _permute_tree(tree: Any, idx: np.ndarray, num_experts: int) -> Any:
+    """Permute expert leaves by ``idx``: (E,) shared or (L, E) per layer."""
     take = jnp.asarray(idx, jnp.int32)
+    per_layer = take.ndim == 2
 
     def leaf(path, x):
         ax = _expert_axis(path, x.shape, num_experts)
         if ax is None:
             return x
-        return jnp.take(x, take, axis=ax)
+        if not per_layer:
+            return jnp.take(x, take, axis=ax)
+        if ax != 1 or x.shape[0] != take.shape[0]:
+            raise ValueError(
+                f"per-layer plan ({take.shape[0]} layers) needs stacked "
+                f"(L, E, ...) expert leaves; got {x.shape} at {path}")
+        return jax.vmap(lambda xl, il: jnp.take(xl, il, axis=0))(x, take)
 
     return jax.tree_util.tree_map_with_path(leaf, tree)
 
 
-def migrate(tree: Any, old: ExpertPlacement, new: ExpertPlacement) -> Any:
+def _tables(plan: Plan, to_physical: bool) -> np.ndarray:
+    """Index table(s) of a plan: (E,) for shared, (L, E) for per-layer."""
+    if isinstance(plan, PerLayerPlacement):
+        return (plan.physical_to_logical if to_physical
+                else plan.logical_to_physical)
+    if to_physical:
+        return np.asarray(plan.physical_to_logical, np.int32)
+    return plan.logical_to_physical
+
+
+def migrate(tree: Any, old: Plan, new: Plan) -> Any:
     """Re-layout a tree from ``old``'s physical order into ``new``'s.
 
     ``tree`` may be a layer's params, a full LM param tree, or optimizer
     state — any pytree whose expert leaves live under an ``experts`` key.
-    new_phys[p] = old_phys[old.l2p[new.p2l[p]]].
+    new_phys[p] = old_phys[old.l2p[new.p2l[p]]].  Shared and per-layer plans
+    mix freely (a shared plan broadcasts over layers).
     """
     if old.num_experts != new.num_experts:
         raise ValueError((old.num_experts, new.num_experts))
-    idx = old.logical_to_physical[np.asarray(new.physical_to_logical,
-                                             np.int32)]
+    l2p_old = _tables(old, to_physical=False)
+    p2l_new = _tables(new, to_physical=True)
+    if l2p_old.ndim != p2l_new.ndim:  # mixed shared / per-layer: broadcast
+        L = max(a.shape[0] for a in (l2p_old, p2l_new) if a.ndim == 2)
+        if l2p_old.ndim == 1:
+            l2p_old = np.broadcast_to(l2p_old, (L,) + l2p_old.shape)
+        else:
+            p2l_new = np.broadcast_to(p2l_new, (L,) + p2l_new.shape)
+    idx = np.take_along_axis(l2p_old, p2l_new.astype(np.int32),
+                             axis=-1) if l2p_old.ndim == 2 else \
+        l2p_old[p2l_new.astype(np.int32)]
     return _permute_tree(tree, idx, new.num_experts)
 
 
-def to_logical(tree: Any, plan: ExpertPlacement) -> Any:
+def to_logical(tree: Any, plan: Plan) -> Any:
     """Physical -> logical order (the checkpoint-compatible layout)."""
-    return _permute_tree(tree, plan.logical_to_physical, plan.num_experts)
-
-
-def from_logical(tree: Any, plan: ExpertPlacement) -> Any:
-    """Logical -> physical order (what the executing layer consumes)."""
-    return _permute_tree(tree, np.asarray(plan.physical_to_logical, np.int32),
+    return _permute_tree(tree, _tables(plan, to_physical=False),
                          plan.num_experts)
 
 
-def router_index_table(plan: ExpertPlacement) -> np.ndarray:
-    """The logical->physical table the gate output is mapped through."""
-    return plan.logical_to_physical
+def from_logical(tree: Any, plan: Plan) -> Any:
+    """Logical -> physical order (what the executing layer consumes)."""
+    return _permute_tree(tree, _tables(plan, to_physical=True),
+                         plan.num_experts)
+
+
+def router_index_table(plan: Plan) -> np.ndarray:
+    """The logical->physical table(s) the gate output is mapped through:
+    (E,) for a shared plan, (L, E) stacked for a per-layer plan."""
+    return _tables(plan, to_physical=False)

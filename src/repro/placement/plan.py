@@ -98,6 +98,93 @@ def identity_placement(num_experts: int, num_ranks: int) -> ExpertPlacement:
                            tuple(range(num_experts)))
 
 
+class PerLayerPlacement(NamedTuple):
+    """One :class:`ExpertPlacement` per MoE layer, sharing a *geometry*.
+
+    Expert load skew is per layer (DeepSpeed's multitask MoE measurements),
+    so each layer gets its own permutation and its own shadowed hot set.
+    The layer stack is applied with ``jax.lax.scan`` over homogeneous params,
+    which forces every layer's plan to share the static *geometry* —
+    ``(num_experts, num_ranks, num_shadow, capacity_scale)`` — while the
+    per-layer logical→physical tables ride through the scan as a stacked
+    ``(L, E)`` index array (see models/lm.py).  migrate.py permutes each
+    layer's expert slice of a stacked ``(L, E, ...)`` tree independently.
+    """
+
+    layers: tuple  # tuple[ExpertPlacement, ...], geometry-identical
+
+    def validate(self) -> "PerLayerPlacement":
+        if not self.layers:
+            raise ValueError("PerLayerPlacement needs at least one layer")
+        g = self.layers[0]
+        for i, p in enumerate(self.layers):
+            if ((p.num_experts, p.num_ranks, p.num_shadow, p.capacity_scale)
+                    != (g.num_experts, g.num_ranks, g.num_shadow,
+                        g.capacity_scale)):
+                raise ValueError(
+                    f"layer {i} geometry {p[:2] + p[3:]} differs from layer 0 "
+                    f"{g[:2] + g[3:]} — scan needs one shared geometry")
+        return self
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.layers)
+
+    @property
+    def num_experts(self) -> int:
+        return self.layers[0].num_experts
+
+    @property
+    def num_ranks(self) -> int:
+        return self.layers[0].num_ranks
+
+    @property
+    def num_shadow(self) -> int:
+        return self.layers[0].num_shadow
+
+    @property
+    def num_owned(self) -> int:
+        return self.layers[0].num_owned
+
+    @property
+    def capacity_scale(self) -> float:
+        return self.layers[0].capacity_scale
+
+    @property
+    def geometry(self) -> ExpertPlacement:
+        """A representative single-layer plan carrying the shared static
+        geometry (what DistConfig.placement holds inside the layer scan)."""
+        return self.layers[0]
+
+    @property
+    def is_identity(self) -> bool:
+        return all(p.is_identity for p in self.layers)
+
+    @property
+    def logical_to_physical(self) -> np.ndarray:
+        """(L, E) stacked gate-id tables (one row per layer)."""
+        return np.stack([p.logical_to_physical for p in self.layers])
+
+    @property
+    def physical_to_logical(self) -> np.ndarray:
+        return np.stack([np.asarray(p.physical_to_logical, np.int32)
+                         for p in self.layers])
+
+    def layer(self, i: int) -> ExpertPlacement:
+        return self.layers[i]
+
+
+def per_layer_placement(layers) -> PerLayerPlacement:
+    """Validated constructor for a geometry-shared per-layer plan."""
+    return PerLayerPlacement(tuple(layers)).validate()
+
+
+def identity_per_layer(num_experts: int, num_ranks: int,
+                       num_layers: int) -> PerLayerPlacement:
+    return PerLayerPlacement(
+        (identity_placement(num_experts, num_ranks),) * num_layers)
+
+
 # ---------------------------------------------------------------------------
 # Cost model (roofline constants; seconds per train step)
 # ---------------------------------------------------------------------------
@@ -170,6 +257,41 @@ def placement_cost(place: ExpertPlacement, load: np.ndarray, *,
 # ---------------------------------------------------------------------------
 
 
+def _residual_scale(load: np.ndarray, owned: np.ndarray, capacity: int) -> float:
+    """Capacity multiplier covering the residual (non-shadow) load peak.
+
+    Baseline C is capacity_factor x the fair share 1/E, so an expert at load
+    fraction f needs f*E*C slots for the same headroom; size the a2a buffer
+    to the residual peak.
+    """
+    E = load.size
+    f_max = float(load[owned].max()) if owned.size else 0.0
+    return min(1.0, max(f_max * E, 8.0 / max(capacity, 8)))
+
+
+def _build_plan(load: np.ndarray, num_ranks: int, S: int,
+                scale: float) -> ExpertPlacement:
+    """Shadow the S hottest experts, greedy-balance the rest into contiguous
+    per-rank blocks (the shared build step of both planners)."""
+    E = load.size
+    hot_first = np.argsort(-load, kind="stable")
+    shadow = hot_first[:S]
+    owned = np.sort(hot_first[S:])
+    # balanced contiguous blocks: greedy-assign owned experts to ranks,
+    # then lay each rank's experts out contiguously (physical order)
+    ranks = np.asarray(greedy_placement(owned.size, num_ranks,
+                                        load[owned]), np.int64)
+    phys = [int(e) for r in range(num_ranks)
+            for e in owned[ranks == r]]
+    phys += [int(e) for e in shadow]
+    return ExpertPlacement(E, num_ranks, tuple(phys), int(S), float(scale))
+
+
+def _norm_load(load: np.ndarray) -> np.ndarray:
+    load = np.asarray(load, np.float64)
+    return load / max(load.sum(), 1e-12)
+
+
 def plan_placement(load: np.ndarray, num_ranks: int, *, d_model: int,
                    d_hidden: int, capacity: int, capacity_factor: float = 1.0,
                    bytes_per_elem: int = 4, train: bool = True,
@@ -184,32 +306,17 @@ def plan_placement(load: np.ndarray, num_ranks: int, *, d_model: int,
     than the baseline buffer).  Falls back to a pure load-balancing
     permutation (S=0) when shadowing doesn't pay.
     """
-    load = np.asarray(load, np.float64)
+    load = _norm_load(load)
     E = load.size
-    load = load / max(load.sum(), 1e-12)
     if E % num_ranks:
         raise ValueError(f"num_experts {E} not divisible by ranks {num_ranks}")
     hot_first = np.argsort(-load, kind="stable")
 
     def build(S: int) -> ExpertPlacement:
-        shadow = hot_first[:S]
-        owned = np.sort(hot_first[S:])
         scale = 1.0
         if shrink_capacity and S:
-            # baseline C is capacity_factor x the fair share 1/E, so an
-            # expert at load fraction f needs f*E*C slots for the same
-            # headroom; size the a2a buffer to the residual peak
-            f_max = float(load[owned].max()) if owned.size else 0.0
-            scale = min(1.0, max(f_max * E, 8.0 / max(capacity, 8)))
-        # balanced contiguous blocks: greedy-assign owned experts to ranks,
-        # then lay each rank's experts out contiguously (physical order)
-        ranks = np.asarray(greedy_placement(owned.size, num_ranks,
-                                            load[owned]), np.int64)
-        phys = [int(e) for r in range(num_ranks)
-                for e in owned[ranks == r]]
-        phys += [int(e) for e in shadow]
-        return ExpertPlacement(E, num_ranks, tuple(phys), int(S),
-                               float(scale))
+            scale = _residual_scale(load, np.sort(hot_first[S:]), capacity)
+        return _build_plan(load, num_ranks, S, scale)
 
     kw = dict(d_model=d_model, d_hidden=d_hidden, capacity=capacity,
               capacity_factor=capacity_factor, bytes_per_elem=bytes_per_elem,
@@ -229,6 +336,83 @@ def plan_placement(load: np.ndarray, num_ranks: int, *, d_model: int,
     return best if best is not None else base
 
 
+def per_layer_cost(plan: PerLayerPlacement, load: np.ndarray,
+                   **kw) -> PlacementCost:
+    """Summed modeled per-step cost of an (L,)-stacked plan under (L, E) load.
+
+    Each layer's shadow weights are distinct parameters, so the sync and hbm
+    terms are charged per layer; the weight-broadcast amortization shares one
+    replan interval across the whole stack (``replan_every`` divides each
+    layer's broadcast term — a single replan migrates all L layers at once).
+    """
+    load = np.asarray(load, np.float64)
+    if load.ndim != 2 or load.shape[0] != plan.num_layers:
+        raise ValueError(f"load shape {load.shape} != (L={plan.num_layers}, E)")
+    parts = [placement_cost(p, load[i], **kw)
+             for i, p in enumerate(plan.layers)]
+    return PlacementCost(sum(p.a2a_s for p in parts),
+                         sum(p.sync_s for p in parts),
+                         sum(p.hbm_s for p in parts),
+                         float(np.mean([p.drop_frac for p in parts])))
+
+
+def plan_placement_per_layer(load: np.ndarray, num_ranks: int, *,
+                             d_model: int, d_hidden: int, capacity: int,
+                             capacity_factor: float = 1.0,
+                             bytes_per_elem: int = 4, train: bool = True,
+                             replan_every: int = 200,
+                             max_shadow_frac: float = 0.5,
+                             shrink_capacity: bool = True,
+                             constants: Optional[CostConstants] = None,
+                             ) -> PerLayerPlacement:
+    """Per-layer planner: one permutation + shadow *set* per layer, one
+    shared geometry.
+
+    The scan over the layer stack needs static shapes, so the shadow count S
+    and capacity scale are chosen *jointly* — the S minimizing the summed
+    per-layer cost (hot layers' a2a savings subsidize cool ones) — while
+    each layer independently picks *which* experts to shadow (its own
+    hottest) and how to permute the rest (its own greedy balance).  The
+    shared capacity scale is the max of the per-layer residual peaks, so no
+    layer drops more than it would under the baseline buffer.
+
+    With identical per-layer loads this degenerates to ``plan_placement``
+    stacked L times (the acceptance bit-exactness case).
+    """
+    load = np.asarray(load, np.float64)
+    if load.ndim != 2:
+        raise ValueError(f"per-layer load must be (L, E), got {load.shape}")
+    L, E = load.shape
+    if E % num_ranks:
+        raise ValueError(f"num_experts {E} not divisible by ranks {num_ranks}")
+    rows = [_norm_load(load[i]) for i in range(L)]
+    hot = [np.argsort(-r, kind="stable") for r in rows]
+
+    def build(S: int) -> PerLayerPlacement:
+        scale = 1.0
+        if shrink_capacity and S:
+            scale = max(_residual_scale(rows[i], np.sort(hot[i][S:]), capacity)
+                        for i in range(L))
+        return PerLayerPlacement(tuple(
+            _build_plan(rows[i], num_ranks, S, scale) for i in range(L)))
+
+    kw = dict(d_model=d_model, d_hidden=d_hidden, capacity=capacity,
+              capacity_factor=capacity_factor, bytes_per_elem=bytes_per_elem,
+              train=train, replan_every=replan_every, constants=constants)
+    base = build(0)
+    base_drop = per_layer_cost(base, load, **kw).drop_frac
+    best, best_cost = None, np.inf
+    max_s = int(max_shadow_frac * E) // num_ranks * num_ranks
+    for S in range(0, max_s + 1, num_ranks):
+        cand = base if S == 0 else build(S)
+        cost = per_layer_cost(cand, load, **kw)
+        if cost.drop_frac > base_drop + 1e-9:
+            continue
+        if cost.total_s < best_cost - 1e-12:
+            best, best_cost = cand, cost.total_s
+    return (best if best is not None else base).validate()
+
+
 # ---------------------------------------------------------------------------
 # Replan controller (the train.py hook's brain)
 # ---------------------------------------------------------------------------
@@ -241,34 +425,57 @@ class PlacementController:
     return it iff the modeled step time improves on the current plan by at
     least ``min_gain`` (relative).  The caller owns executing the migration
     (see migrate.py) and swapping the jitted step function.
+
+    ``num_layers > 0`` switches to per-layer mode: plans come from
+    :func:`plan_placement_per_layer` fed by the monitor's ``(L, E)``
+    layer-load EMA, and ``current`` is a :class:`PerLayerPlacement`.
     """
 
     def __init__(self, monitor, num_ranks: int, *, d_model: int,
                  d_hidden: int, capacity: int, capacity_factor: float = 1.0,
                  every: int = 200, min_gain: float = 0.02, train: bool = True,
                  shrink_capacity: bool = True, bytes_per_elem: int = 4,
+                 num_layers: int = 0,
                  constants: Optional[CostConstants] = None):
         self.monitor = monitor
         self.num_ranks = num_ranks
         self.every = every
         self.min_gain = min_gain
+        self.num_layers = num_layers
         self.constants = constants if constants is not None else CostConstants()
         self.kw = dict(d_model=d_model, d_hidden=d_hidden, capacity=capacity,
                        capacity_factor=capacity_factor, train=train,
                        replan_every=every, shrink_capacity=shrink_capacity,
                        bytes_per_elem=bytes_per_elem, constants=self.constants)
-        self.current = identity_placement(monitor.num_experts, num_ranks)
+        if num_layers:
+            if getattr(monitor, "num_layers", 0) != num_layers:
+                raise ValueError(
+                    f"per-layer controller ({num_layers} layers) needs a "
+                    f"LoadMonitor(num_layers={num_layers})")
+            self.current = identity_per_layer(monitor.num_experts, num_ranks,
+                                              num_layers)
+        else:
+            self.current = identity_placement(monitor.num_experts, num_ranks)
         self.replans = 0
 
-    def maybe_replan(self, step: int) -> Optional[ExpertPlacement]:
+    def _cost(self, plan, load) -> float:
+        ckw = {k: v for k, v in self.kw.items() if k != "shrink_capacity"}
+        if self.num_layers:
+            return per_layer_cost(plan, load, **ckw).total_s
+        return placement_cost(plan, load, **ckw).total_s
+
+    def maybe_replan(self, step: int):
         """New plan to migrate to, or None to keep the current layout."""
         if self.every <= 0 or step == 0 or step % self.every:
             return None
-        load = self.monitor.load_ema
-        ckw = {k: v for k, v in self.kw.items() if k != "shrink_capacity"}
-        cand = plan_placement(load, self.num_ranks, **self.kw)
-        now = placement_cost(self.current, load, **ckw).total_s
-        new = placement_cost(cand, load, **ckw).total_s
+        if self.num_layers:
+            load = self.monitor.load_ema_layers
+            cand = plan_placement_per_layer(load, self.num_ranks, **self.kw)
+        else:
+            load = self.monitor.load_ema
+            cand = plan_placement(load, self.num_ranks, **self.kw)
+        now = self._cost(self.current, load)
+        new = self._cost(cand, load)
         if new < now * (1.0 - self.min_gain) and cand != self.current:
             self.current = cand
             self.replans += 1

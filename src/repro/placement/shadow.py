@@ -83,3 +83,14 @@ def merge_outputs(out_main: jnp.ndarray, out_shadow: Optional[jnp.ndarray],
     if out_shadow is not None and spec.num_shadow:
         out = out.at[spec.num_owned:, :spec.shadow_capacity].set(out_shadow)
     return out
+
+
+def shadow_only(out_shadow: jnp.ndarray, spec: ShadowSpec) -> jnp.ndarray:
+    """(S, shadow_capacity, dout) shadow outputs alone in a zeroed (E, width,
+    dout) combine buffer — the decode (psum) path's local addend: shadowed
+    slots are excluded from the cross-rank reduction and served from this
+    buffer instead (every model-axis rank holds the same tokens there, so
+    the local contribution is identical on all of them)."""
+    d_out = out_shadow.shape[-1]
+    out = jnp.zeros((spec.num_experts, spec.width, d_out), out_shadow.dtype)
+    return out.at[spec.num_owned:, :spec.shadow_capacity].set(out_shadow)

@@ -1,58 +1,78 @@
 """Multi-(fake-)device execution tests, run in subprocesses so the main test
-process keeps its single CPU device (per the dry-run contract)."""
-import os
-import subprocess
-import sys
-import textwrap
+process keeps its single CPU device (per the dry-run contract).
 
+All multi-rank emulation plumbing lives in tests/dist_utils.py (the
+consolidated differential harness); scripts import it inside the subprocess.
+The headline test is the dispatch × impl × dist × overlap matrix sweep:
+every combination must reproduce the single-rank oracle.
+"""
 import pytest
 
-ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+import dist_utils as du
 
 
-def _run(script: str, devices: int = 8) -> str:
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
-    env["PYTHONPATH"] = os.path.join(ROOT, "src")
-    out = subprocess.run([sys.executable, "-c", textwrap.dedent(script)],
-                         capture_output=True, text=True, env=env, timeout=560)
-    assert out.returncode == 0, out.stderr[-3000:]
-    return out.stdout
+# ---------------------------------------------------------------------------
+# The matrix: dispatch × impl × dist-mode × overlap vs the single-rank oracle
+# ---------------------------------------------------------------------------
+
+# one subprocess per (dispatch, dist-mode) cell; impl × overlap loop inside
+# (jax import dominates subprocess cost, not the tiny jitted layers)
+@pytest.mark.parametrize("dispatch,dist_mode", [
+    ("capacity", "a2a"), ("capacity", "psum"),
+    ("ragged", "a2a"), ("ragged", "psum"),
+])
+def test_matrix_matches_single_rank_oracle(dispatch, dist_mode):
+    out = du.run(f"""
+    import numpy as np, jax.numpy as jnp
+    import dist_utils as du
+    from repro.core import fmoe
+    dispatch, dist_mode = {dispatch!r}, {dist_mode!r}
+    env = du.moe_env(dispatch=dispatch)
+    mesh = du.make_mesh()
+    axes = ("data", "model") if dist_mode == "a2a" else ("data",)
+    for impl in ("einsum", "pallas", "fused"):
+        y_ref, m_ref = du.oracle(env, impl=impl)
+        for nc in (0, 2):
+            dist = fmoe.DistConfig(mesh, axes, overlap_chunks=nc)
+            assert dist.mode == dist_mode
+            y, m = du.dist_apply(env, mesh, dist, impl=impl)
+            du.assert_close(y, y_ref, 1e-5, msg=(impl, nc))
+            np.testing.assert_allclose(np.asarray(m.load),
+                                       np.asarray(m_ref.load), atol=1e-6)
+            if dispatch == "ragged":
+                assert float(m.drop_frac) == 0.0  # dropless by construction
+    print("matrix cell ok")
+    """)
+    assert "matrix cell ok" in out
 
 
-def test_a2a_and_psum_match_local():
-    print(_run("""
-        import jax, jax.numpy as jnp
-        from repro.configs.base import MoEConfig
+def test_a2a_and_psum_match_naive_baseline():
+    """The paper-faithful oracle: the Rau-style masked loop."""
+    print(du.run("""
+        import jax.numpy as jnp
+        import dist_utils as du
         from repro.core import fmoe, naive
-        mesh = jax.make_mesh((2, 4), ("data", "model"))
-        cfg = MoEConfig(num_experts=8, top_k=2, d_expert_hidden=64,
-                        capacity_factor=8.0)
-        params = fmoe.fmoe_init(jax.random.PRNGKey(0), 32, cfg)
-        x = jax.random.normal(jax.random.PRNGKey(1), (8, 16, 32))
-        y_ref = naive.moe_loop_masked(params, x, cfg)
+        env = du.moe_env()
+        mesh = du.make_mesh()
+        y_ref = naive.moe_loop_masked(env.params, env.x, env.cfg)
         for axes in [("data", "model"), ("data",)]:
-            dist = fmoe.DistConfig(mesh, axes)
-            with mesh:
-                y, m = jax.jit(lambda p, x: fmoe.fmoe_apply(p, x, cfg, dist=dist))(params, x)
-            err = float(jnp.abs(y - y_ref).max())
-            assert err < 1e-5, (axes, err)
-            print("mode", dist.mode, "ok", err)
+            y, m = du.dist_apply(env, mesh, fmoe.DistConfig(mesh, axes))
+            du.assert_close(y, y_ref, 1e-5, msg=axes)
+            print("mode", fmoe.DistConfig(mesh, axes).mode, "ok")
     """))
 
 
 def test_a2a_collective_appears_in_hlo():
-    out = _run("""
-        import jax, jax.numpy as jnp
-        from repro.configs.base import MoEConfig
+    out = du.run("""
+        import jax
+        import dist_utils as du
         from repro.core import fmoe
-        mesh = jax.make_mesh((2, 4), ("data", "model"))
-        cfg = MoEConfig(num_experts=8, top_k=2, d_expert_hidden=64)
-        params = fmoe.fmoe_init(jax.random.PRNGKey(0), 32, cfg)
-        x = jax.random.normal(jax.random.PRNGKey(1), (8, 16, 32))
+        env = du.moe_env()
+        mesh = du.make_mesh()
         dist = fmoe.DistConfig(mesh, ("data", "model"))
         with mesh:
-            lowered = jax.jit(lambda p, x: fmoe.fmoe_apply(p, x, cfg, dist=dist)[0]).lower(params, x)
+            lowered = jax.jit(lambda p, x: fmoe.fmoe_apply(
+                p, x, env.cfg, dist=dist)[0]).lower(env.params, env.x)
         txt = lowered.compile().as_text()
         assert "all-to-all" in txt, "expected all-to-all in HLO"
         print("all-to-all present")
@@ -63,29 +83,21 @@ def test_a2a_collective_appears_in_hlo():
 def test_gradient_sync_semantics():
     """Paper §3.2: replicated (world) param grads identical across all
     devices; expert (none-tag) grads live only on their shard."""
-    print(_run("""
-        import jax, jax.numpy as jnp
-        import numpy as np
-        from repro.configs.base import MoEConfig
+    print(du.run("""
+        import jax, numpy as np
+        import dist_utils as du
         from repro.core import fmoe
         from jax.sharding import NamedSharding, PartitionSpec as P
-        mesh = jax.make_mesh((2, 4), ("data", "model"))
-        cfg = MoEConfig(num_experts=8, top_k=2, d_expert_hidden=64,
-                        capacity_factor=8.0)
-        params = fmoe.fmoe_init(jax.random.PRNGKey(0), 32, cfg)
+        env = du.moe_env()
+        mesh = du.make_mesh()
         espec = jax.tree.map(lambda _: NamedSharding(mesh, P("model", None, None)),
-                             params["experts"])
+                             env.params["experts"])
         rspec = jax.tree.map(lambda _: NamedSharding(mesh, P(None, None)),
-                             params["router"])
-        params = {"router": jax.device_put(params["router"], rspec),
-                  "experts": jax.device_put(params["experts"], espec)}
-        x = jax.random.normal(jax.random.PRNGKey(1), (8, 16, 32))
+                             env.params["router"])
+        params = {"router": jax.device_put(env.params["router"], rspec),
+                  "experts": jax.device_put(env.params["experts"], espec)}
         dist = fmoe.DistConfig(mesh, ("data", "model"))
-        def loss(p):
-            y, _ = fmoe.fmoe_apply(p, x, cfg, dist=dist)
-            return (y ** 2).mean()
-        with mesh:
-            g = jax.jit(jax.grad(loss))(params)
+        g = du.layer_grads(env, dist, mesh=mesh, params=params)
         # router grad: replicated => every device shard identical (world tag)
         rshards = [np.asarray(s.data) for s in g["router"]["w"].addressable_shards]
         for s in rshards[1:]:
@@ -98,14 +110,13 @@ def test_gradient_sync_semantics():
 
 
 def test_train_step_runs_on_mesh():
-    print(_run("""
+    print(du.run("""
         import jax, jax.numpy as jnp
         from repro.configs import get_config, reduced
         from repro.launch.mesh import make_local_mesh
         from repro.launch.train import jit_train_step
         from repro.models import lm
         from repro.optim import AdamW
-        import dataclasses
         cfg = reduced(get_config("arctic-480b"))
         mesh = make_local_mesh(2, 4)
         opt = AdamW()
@@ -126,13 +137,12 @@ def test_train_step_runs_on_mesh():
 def test_cache_seq_sharded_decode_matches_single_device():
     """Window-sharded KV cache (§Perf decode opt) must be numerically
     transparent: sharded decode == local decode."""
-    print(_run("""
+    print(du.run("""
         import functools, jax, jax.numpy as jnp, numpy as np
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.configs import get_config, reduced
         from repro.launch.sharding import cache_specs
         from repro.models import lm
-        import dataclasses
         cfg = reduced(get_config("qwen2-72b"))
         params = lm.init_params(jax.random.PRNGKey(0), cfg)
         B, W = 8, 8192  # W >= model_axis*2048 so the seq-shard gate engages
@@ -171,40 +181,30 @@ def test_cache_seq_sharded_decode_matches_single_device():
 def test_cross_pod_expert_parallelism_matches_local():
     """§Perf multi-pod: experts sharded over (pod, model) — the tuple-axis
     all-to-all must be numerically identical to the local layer."""
-    print(_run("""
-        import jax, jax.numpy as jnp
-        from repro.configs.base import MoEConfig
-        from repro.core import fmoe, naive
+    print(du.run("""
+        import jax, numpy as np
+        import dist_utils as du
+        from repro.core import fmoe
+        env = du.moe_env(num_shared_experts=1)
         mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
-        cfg = MoEConfig(num_experts=8, top_k=2, d_expert_hidden=64,
-                        capacity_factor=8.0, num_shared_experts=1)
-        params = fmoe.fmoe_init(jax.random.PRNGKey(0), 32, cfg)
-        x = jax.random.normal(jax.random.PRNGKey(1), (8, 16, 32))
-        y_ref = fmoe.fmoe_apply(params, x, cfg)[0]
+        y_ref, _ = du.oracle(env)
         dist = fmoe.DistConfig(mesh, ("pod", "data", "model"),
                                expert_axis=("pod", "model"),
                                constrain_tokens=True)
         assert dist.mode == "a2a" and dist.expert_parallelism == 4
-        with mesh:
-            y, m = jax.jit(lambda p, x: fmoe.fmoe_apply(p, x, cfg, dist=dist))(params, x)
-        err = float(jnp.abs(y - y_ref).max())
-        assert err < 1e-5, err
+        y, m = du.dist_apply(env, mesh, dist)
+        du.assert_close(y, y_ref, 1e-5)
         # grads flow through the cross-pod a2a
-        def loss(p):
-            yy, mm = fmoe.fmoe_apply(p, x, cfg, dist=dist)
-            return (yy ** 2).mean() + 0.01 * mm.aux_loss
-        with mesh:
-            g = jax.jit(jax.grad(loss))(params)
-        import numpy as np
+        g = du.layer_grads(env, dist, mesh=mesh)
         assert all(np.isfinite(np.asarray(l, np.float32)).all()
                    for l in jax.tree.leaves(g))
-        print("cross-pod expert parallelism ok", err)
+        print("cross-pod expert parallelism ok")
     """))
 
 
 def test_hierarchical_a2a_equals_flat():
     """Beyond-paper 2-hop all-to-all must move the same data as 1-hop."""
-    print(_run("""
+    print(du.run("""
         import jax, jax.numpy as jnp, numpy as np
         from repro.compat import shard_map
         from repro.core.comm import hierarchical_all_to_all

@@ -118,6 +118,71 @@ def test_ragged_moe_hlo_no_blocking_a2a_no_hidden():
     assert "RAGGED_HLO_OK" in out.stdout
 
 
+def test_pipelined_hlo_collectives_bracket_expert_gemms():
+    """ROADMAP follow-on (ISSUE 5): the §5.2 schedule's value is exchange /
+    compute overlap, so the *structure* of the optimized HLO must show it —
+    collective-permutes must actually bracket the expert GEMM fusions, not
+    merely replace the blocking all-to-all.
+
+    On backends that async-schedule (TPU), every chunk's expert GEMM must
+    sit between a ``collective-permute-start`` and its matching ``-done``.
+    XLA:CPU lowers synchronous ``collective-permute``s, where the same
+    interleaving shows as op order: with overlap_chunks=2 the instruction
+    stream must contain >= 2 separate expert-GEMM runs each flanked by
+    collective-permutes on both sides (S0 | S1 C0 R0 | C1 R1)."""
+    import dist_utils as du
+
+    out = du.run("""
+        import re
+        import jax
+        from repro.configs.base import MoEConfig
+        from repro.core import fmoe
+        mesh = jax.make_mesh((1, 4), ("data", "model"))
+        cfg = MoEConfig(num_experts=8, top_k=2, d_expert_hidden=32,
+                        capacity_factor=2.0)
+        params = fmoe.fmoe_init(jax.random.PRNGKey(0), 16, cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, 16))
+        piped = fmoe.DistConfig(mesh, ("data", "model"), overlap_chunks=2)
+        with mesh:
+            txt = jax.jit(lambda p, x: fmoe.fmoe_apply(
+                p, x, cfg, dist=piped)[0]).lower(params, x).compile().as_text()
+        lines = txt.splitlines()
+        # expert GEMMs: batched (E_local, rows, ·) dots — 3-D outputs.  The
+        # router GEMM and combine einsum are 2-D, so they don't count.
+        gemm = [i for i, l in enumerate(lines)
+                if re.search(r"= \\S+\\[\\d+,\\d+,\\d+\\]\\S* dot\\(", l)]
+        assert gemm, "no expert GEMMs found in optimized HLO"
+        starts = [i for i, l in enumerate(lines)
+                  if "collective-permute-start" in l]
+        if starts:  # async backend: GEMMs inside a start/done window
+            dones = [i for i, l in enumerate(lines)
+                     if "collective-permute-done" in l]
+            assert any(s < g < d for g in gemm
+                       for s, d in zip(starts, dones)), \\
+                "no expert GEMM scheduled inside a start/done window"
+        else:  # sync lowering: bracket structure via instruction order
+            cp = [i for i, l in enumerate(lines)
+                  if re.search(r"= \\S+ collective-permute\\(", l)]
+            assert cp, "no collective-permutes in pipelined HLO"
+            # count maximal GEMM runs with a collective-permute on both sides
+            events = sorted([(i, "cp") for i in cp] + [(i, "g") for i in gemm])
+            runs, seen_cp, in_run, bracketed = 0, False, False, 0
+            for _, kind in events:
+                if kind == "cp":
+                    if in_run:
+                        bracketed += 1
+                        in_run = False
+                    seen_cp = True
+                elif seen_cp:
+                    in_run = True
+            assert bracketed >= 2, (
+                f"expected >= 2 expert-GEMM runs bracketed by collective-"
+                f"permutes (overlap_chunks=2), found {bracketed}")
+        print("BRACKET_OK")
+    """, devices=4)
+    assert "BRACKET_OK" in out
+
+
 def test_pipelined_moe_hlo_has_no_blocking_all_to_all():
     script = """
         import jax

@@ -1,0 +1,280 @@
+"""Per-layer placement unit + property tests (ISSUE 5) — host-side, tier 1.
+
+Covers the stacked-plan type (shared-geometry validation), the per-layer
+planner (degeneracy to the shared planner under identical loads, distinct
+layouts under skew), per-layer migration (hypothesis round-trips), the
+logical->physical table inverse, the (L, E) LoadMonitor, the per-layer
+controller, and layout-free checkpoints under per-layer plans.
+"""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.configs.base import MoEConfig
+from repro.core import fmoe
+from repro.core.balance import MoEMetrics
+from repro.core.monitor import LoadMonitor
+from repro.placement import (ExpertPlacement, PerLayerPlacement,
+                             PlacementController, from_logical,
+                             identity_per_layer, migrate, per_layer_cost,
+                             per_layer_placement, placement_cost,
+                             plan_placement, plan_placement_per_layer,
+                             router_index_table, to_logical)
+
+
+def _zipf(E, a=1.2):
+    load = 1.0 / (np.arange(E) + 1) ** a
+    return load / load.sum()
+
+
+def _random_plan(E, W, S, seed):
+    """A structurally valid plan with a random permutation + shadow set."""
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(E)
+    phys = tuple(int(e) for e in np.r_[np.sort(perm[S:]), perm[:S]])
+    return ExpertPlacement(E, W, phys, num_shadow=S)
+
+
+def _random_per_layer(L, E, W, S, seed):
+    return per_layer_placement(
+        [_random_plan(E, W, S, seed * 101 + i) for i in range(L)])
+
+
+# ---------------------------------------------------------------------------
+# Type / planner
+# ---------------------------------------------------------------------------
+
+
+def test_per_layer_validates_shared_geometry():
+    a = _random_plan(8, 4, 4, 0)
+    b = _random_plan(8, 4, 0, 1)  # different shadow count
+    with pytest.raises(ValueError):
+        per_layer_placement([a, b])
+    plp = per_layer_placement([a, _random_plan(8, 4, 4, 1)])
+    assert plp.num_layers == 2 and plp.num_shadow == 4
+    assert plp.geometry == a
+    assert plp.logical_to_physical.shape == (2, 8)
+
+
+def test_identity_per_layer_is_identity():
+    plp = identity_per_layer(8, 4, 3)
+    assert plp.is_identity and plp.num_layers == 3
+    np.testing.assert_array_equal(plp.logical_to_physical,
+                                  np.tile(np.arange(8), (3, 1)))
+
+
+def test_planner_degenerates_to_shared_on_identical_rows():
+    E, W, L = 16, 4, 3
+    row = _zipf(E)
+    kw = dict(d_model=256, d_hidden=512, capacity=4096)
+    plp = plan_placement_per_layer(np.stack([row] * L), W, **kw)
+    shared = plan_placement(row, W, **kw)
+    assert all(p == shared for p in plp.layers)
+
+
+def test_planner_distinct_layouts_under_skew():
+    E, W, L = 16, 4, 4
+    rng = np.random.default_rng(0)
+    load = np.stack([_zipf(E)[rng.permutation(E)] for _ in range(L)])
+    plp = plan_placement_per_layer(load, W, d_model=256, d_hidden=512,
+                                   capacity=4096)
+    plp.validate()  # geometry shared by construction
+    assert len({p.physical_to_logical for p in plp.layers}) >= 2
+    # each layer shadows its OWN hottest experts
+    if plp.num_shadow:
+        for i, p in enumerate(plp.layers):
+            hottest = set(np.argsort(-load[i])[:plp.num_shadow].tolist())
+            assert set(p.physical_to_logical[p.num_owned:]) == hottest
+
+
+def test_per_layer_cost_sums_layers():
+    E, W, L = 16, 4, 2
+    load = np.stack([_zipf(E)] * L)
+    plp = identity_per_layer(E, W, L)
+    kw = dict(d_model=256, d_hidden=512, capacity=4096)
+    total = per_layer_cost(plp, load, **kw)
+    single = placement_cost(plp.layer(0), load[0], **kw)
+    assert total.total_s == pytest.approx(L * single.total_s)
+
+
+def test_planner_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        plan_placement_per_layer(_zipf(8), 4, d_model=8, d_hidden=8,
+                                 capacity=8)  # 1-D load
+    with pytest.raises(ValueError):
+        plan_placement_per_layer(np.stack([_zipf(10)] * 2), 4, d_model=8,
+                                 d_hidden=8, capacity=8)  # E % ranks
+
+
+# ---------------------------------------------------------------------------
+# Property tests: migrate round-trips + table inverses (hypothesis)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 4), st.integers(0, 2**31 - 1), st.integers(0, 2))
+def test_migrate_round_trip_identity_per_layer(L, seed, s_idx):
+    """old -> new -> old is the identity on every layer's expert slice."""
+    E, W = 8, 4
+    S = (0, 4, 8 // 2)[s_idx] // W * W
+    old = _random_per_layer(L, E, W, S, seed % 10_000)
+    new = _random_per_layer(L, E, W, S, seed % 10_000 + 7)
+    tree = {"layers": {"ffn": {"experts": {
+        "wi": jnp.arange(L * E * 2 * 3, dtype=jnp.float32).reshape(L, E, 2, 3)}}}}
+    there = migrate(tree, old, new)
+    back = migrate(there, new, old)
+    np.testing.assert_array_equal(
+        np.asarray(back["layers"]["ffn"]["experts"]["wi"]),
+        np.asarray(tree["layers"]["ffn"]["experts"]["wi"]))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 4), st.integers(0, 2**31 - 1))
+def test_logical_physical_tables_are_inverse(L, seed):
+    plp = _random_per_layer(L, 8, 4, 4, seed % 10_000)
+    l2p = plp.logical_to_physical  # (L, E)
+    p2l = plp.physical_to_logical
+    eye = np.tile(np.arange(8), (L, 1))
+    np.testing.assert_array_equal(np.take_along_axis(l2p, p2l, 1), eye)
+    np.testing.assert_array_equal(np.take_along_axis(p2l, l2p, 1), eye)
+    np.testing.assert_array_equal(router_index_table(plp), l2p)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 3), st.integers(0, 2**31 - 1))
+def test_from_to_logical_round_trip(L, seed):
+    plp = _random_per_layer(L, 8, 4, 0, seed % 10_000)
+    tree = {"layers": {"ffn": {"experts": {
+        "wo": jnp.arange(L * 8 * 3 * 2, dtype=jnp.float32).reshape(L, 8, 3, 2)}},
+        "attn": {"w": jnp.ones((L, 4, 4))}}}
+    back = to_logical(from_logical(tree, plp), plp)
+    np.testing.assert_array_equal(
+        np.asarray(back["layers"]["ffn"]["experts"]["wo"]),
+        np.asarray(tree["layers"]["ffn"]["experts"]["wo"]))
+    # non-expert leaves untouched
+    np.testing.assert_array_equal(
+        np.asarray(from_logical(tree, plp)["layers"]["attn"]["w"]),
+        np.asarray(tree["layers"]["attn"]["w"]))
+
+
+def test_per_layer_plan_rejects_unstacked_tree():
+    plp = _random_per_layer(2, 8, 4, 0, 0)
+    layer = {"experts": {"wi": jnp.zeros((8, 4, 4))}}  # bare (E, ...) leaf
+    with pytest.raises(ValueError):
+        from_logical(layer, plp)
+
+
+def test_migrate_mixed_shared_and_per_layer():
+    L, E, W = 3, 8, 4
+    shared = _random_plan(E, W, 0, 5)
+    plp = _random_per_layer(L, E, W, 0, 6)
+    tree = {"experts": {"wi": jnp.arange(L * E * 2, dtype=jnp.float32)
+                        .reshape(L, E, 2, 1)}}
+    via = migrate(from_logical(tree, shared), shared, plp)
+    direct = from_logical(tree, plp)
+    np.testing.assert_array_equal(np.asarray(via["experts"]["wi"]),
+                                  np.asarray(direct["experts"]["wi"]))
+
+
+# ---------------------------------------------------------------------------
+# Monitor + controller
+# ---------------------------------------------------------------------------
+
+
+def test_monitor_tracks_layer_loads():
+    mon = LoadMonitor(8, ema=0.5, num_layers=2)
+    load = np.stack([_zipf(8), _zipf(8)[::-1]])
+    for _ in range(6):
+        mon.update(MoEMetrics(0.0, 0.0, load, 0.0))
+    assert mon.load_ema_layers.shape == (2, 8)
+    # converges toward the per-layer distributions, summed EMA toward mean
+    np.testing.assert_allclose(mon.load_ema_layers[0], _zipf(8), atol=0.05)
+    np.testing.assert_allclose(mon.load_ema_layers[1], _zipf(8)[::-1],
+                               atol=0.05)
+    with pytest.raises(ValueError):
+        mon.update(MoEMetrics(0.0, 0.0, np.ones((3, 8)), 0.0))
+
+
+def test_controller_per_layer_replans_with_skew():
+    L = 3
+    mon = LoadMonitor(16, ema=0.5, num_layers=L)
+    ctl = PlacementController(mon, 4, d_model=256, d_hidden=512,
+                              capacity=4096, every=4, num_layers=L)
+    rng = np.random.default_rng(0)
+    skew = np.stack([_zipf(16)[rng.permutation(16)] for _ in range(L)])
+    fired = []
+    for s in range(12):
+        mon.update(MoEMetrics(0.0, 0.0, skew, 0.0))
+        out = ctl.maybe_replan(s)
+        if out is not None:
+            fired.append(s)
+            assert isinstance(out, PerLayerPlacement)
+    assert fired and fired[0] == 4
+    assert ctl.current.num_shadow > 0  # comm-dominated regime shadows
+
+
+def test_controller_per_layer_requires_layer_monitor():
+    mon = LoadMonitor(16)  # no layer EMA
+    with pytest.raises(ValueError):
+        PlacementController(mon, 4, d_model=8, d_hidden=8, capacity=8,
+                            num_layers=2)
+
+
+# ---------------------------------------------------------------------------
+# fmoe guards + layout-free checkpoints
+# ---------------------------------------------------------------------------
+
+
+def test_fmoe_apply_rejects_whole_per_layer_plan():
+    cfg = MoEConfig(num_experts=8, top_k=2, d_expert_hidden=16)
+    params = fmoe.fmoe_init(jax.random.PRNGKey(0), 16, cfg)
+    x = jnp.zeros((4, 16))
+    with pytest.raises(TypeError):
+        fmoe.fmoe_apply(params, x, cfg, placement=identity_per_layer(8, 1, 2))
+
+
+def test_local_layer_honors_l2p_table():
+    """The traced per-layer table path == the static placement path."""
+    cfg = MoEConfig(num_experts=8, top_k=2, d_expert_hidden=16,
+                    capacity_factor=8.0)
+    params = fmoe.fmoe_init(jax.random.PRNGKey(0), 16, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 16))
+    plan = _random_plan(8, 1, 0, 3)
+    pp = from_logical(params, plan)
+    y0, m0 = fmoe.fmoe_apply(params, x, cfg)
+    y1, m1 = fmoe.fmoe_apply(pp, x, cfg, placement=plan)
+    y2, m2 = jax.jit(lambda p, x, t: fmoe.fmoe_apply(p, x, cfg, l2p=t))(
+        pp, x, jnp.asarray(plan.logical_to_physical))
+    np.testing.assert_array_equal(np.asarray(y0), np.asarray(y1))
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+    np.testing.assert_array_equal(np.asarray(m1.load), np.asarray(m2.load))
+
+
+def test_checkpoint_layout_free_under_per_layer_plan(tmp_path):
+    """save(placement=A) then restore(placement=B) == migrate(A -> B):
+    checkpoints never know the physical layout."""
+    from repro.checkpoint import ckpt
+
+    L, E = 2, 8
+    tree = {"layers": {"ffn": {"experts": {
+        "wi": jnp.arange(L * E * 4, dtype=jnp.float32).reshape(L, E, 2, 2)}}}}
+    a = _random_per_layer(L, E, 4, 4, 11)
+    b = _random_per_layer(L, E, 4, 4, 22)
+    phys_a = from_logical(tree, a)
+    path = os.path.join(str(tmp_path), "step_1")
+    ckpt.save(path, phys_a, placement=a)
+    got_b = ckpt.restore(path, tree, placement=b)
+    want_b = from_logical(tree, b)
+    np.testing.assert_array_equal(
+        np.asarray(got_b["layers"]["ffn"]["experts"]["wi"]),
+        np.asarray(want_b["layers"]["ffn"]["experts"]["wi"]))
+    # and a plain restore comes back in logical order
+    got = ckpt.restore(path, tree)
+    np.testing.assert_array_equal(
+        np.asarray(got["layers"]["ffn"]["experts"]["wi"]),
+        np.asarray(tree["layers"]["ffn"]["experts"]["wi"]))

@@ -2,27 +2,12 @@
 ppermute-decomposed exchange must be *bit-exact* vs the serial all-to-all,
 composed with shadow placement, expert-internal TP and the bf16 wire.
 
-Multi-device cases run in subprocesses with fake host devices (same contract
-as tests/test_distributed.py: the main process keeps its single CPU device).
+Multi-device cases run in subprocesses with fake host devices via the
+consolidated harness in tests/dist_utils.py (the main process keeps its
+single CPU device).
 """
-import os
-import subprocess
-import sys
-import textwrap
-
+import dist_utils as du
 from repro.core.pipeline import resolve_chunks
-
-ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-
-
-def _run(script: str, devices: int = 8) -> str:
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
-    env["PYTHONPATH"] = os.path.join(ROOT, "src")
-    out = subprocess.run([sys.executable, "-c", textwrap.dedent(script)],
-                         capture_output=True, text=True, env=env, timeout=560)
-    assert out.returncode == 0, out.stderr[-3000:]
-    return out.stdout
 
 
 def test_resolve_chunks():
@@ -72,7 +57,7 @@ _SETUP = """
 def test_ppermute_a2a_equals_lax_all_to_all():
     """The decomposed exchange is pure data movement: bitwise equal to
     lax.all_to_all for single and tuple mesh axes, f32 and bf16."""
-    out = _run("""
+    out = du.run("""
     import numpy as np, jax, jax.numpy as jnp
     from jax.sharding import PartitionSpec as P
     from repro import compat
@@ -114,7 +99,7 @@ def test_ppermute_a2a_equals_lax_all_to_all():
 def test_chunked_moe_bit_exact_vs_serial():
     """Acceptance: the pipelined path (any chunking, incl. non-dividing
     requests) returns bit-identical outputs, metrics and gradients."""
-    out = _run(_SETUP + """
+    out = du.run(_SETUP + """
     def loss(p, dist):
         y, m = fmoe.fmoe_apply(p, x, cfg, dist=dist)
         return (y ** 2).mean() + 0.01 * m.aux_loss
@@ -143,7 +128,7 @@ def test_chunked_moe_bit_exact_vs_serial():
 def test_chunked_composes_with_shadow_and_tp():
     """overlap_chunks must compose with placement/shadowing (shadow compute
     as overlap filler) and with expert-internal TP."""
-    out = _run(_SETUP + """
+    out = du.run(_SETUP + """
     from repro.placement import ExpertPlacement, from_logical
     load = np.asarray(m0.load)
     hot = np.argsort(-load)
@@ -170,7 +155,7 @@ def test_wire_dtype_bf16_round_trip_tolerance():
     """Satellite: DistConfig.wire_dtype="bf16" halves payload bytes; the
     round-trip must stay within bf16 quantization of the f32 path and be
     bit-exact between serial and chunked schedules."""
-    out = _run(_SETUP + """
+    out = du.run(_SETUP + """
     ys = {}
     for nc in (0, 4):
         dist = fmoe.DistConfig(mesh, ("data", "model"), overlap_chunks=nc,

@@ -7,32 +7,16 @@ rows, same tile partitioning, same f32 accumulation order), and composed
 correctly with the capacity a2a, Zipf skew (ranks receiving zero tokens),
 the bf16 wire, overlap chunking, and bounded (dropping) shards.
 
-Host tests exercise the pure index math of core/dispatch; multi-device
-cases run in subprocesses with fake devices (tests/test_distributed.py
-contract: the main process keeps its single CPU device).
+Host tests exercise the pure index math of core/dispatch through the
+multi-rank emulation oracle in tests/dist_utils.py; multi-device cases run
+in subprocesses via the same harness (the main process keeps its single CPU
+device).
 """
-import os
-import subprocess
-import sys
-import textwrap
-
-import jax
 import jax.numpy as jnp
 import numpy as np
 
+import dist_utils as du
 from repro.core import dispatch as D
-
-ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-
-
-def _run(script: str, devices: int = 8) -> str:
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
-    env["PYTHONPATH"] = os.path.join(ROOT, "src")
-    out = subprocess.run([sys.executable, "-c", textwrap.dedent(script)],
-                         capture_output=True, text=True, env=env, timeout=560)
-    assert out.returncode == 0, out.stderr[-3000:]
-    return out.stdout
 
 
 # ---------------------------------------------------------------------------
@@ -40,45 +24,11 @@ def _run(script: str, devices: int = 8) -> str:
 # ---------------------------------------------------------------------------
 
 
-def _emulate_exchange(rng, mp, e_local, t, k, bound):
-    """Run the full send→exchange→compact pipeline for mp fake ranks on the
-    host and return, per rank, the compacted rows + group sizes it computes."""
-    E = mp * e_local
-    sends, counts, rows = [], [], []
-    for r in range(mp):
-        ids = rng.integers(0, E, size=(t * k,))
-        order = np.argsort(ids, kind="stable")
-        gs = np.bincount(ids, minlength=E)
-        xp = D.make_ragged_xplan(jnp.asarray(gs, jnp.int32), t * k, E, mp,
-                                 bound)
-        # payload rows are (rank, original row index) tags
-        payload = np.stack([np.full(t * k, r), order], 1)
-        buf = np.full((mp * bound, 2), -1)
-        dest = np.asarray(xp.send_dest)
-        ok = dest < mp * bound
-        buf[dest[ok]] = payload[ok]
-        sends.append(buf.reshape(mp, bound, 2))
-        counts.append(np.asarray(xp.peer_counts))
-        rows.append((ids, order, np.asarray(xp.keep)))
-    outs = []
-    for r in range(mp):  # the all-to-all: shard s of rank r's recv = rank
-        recv = np.stack([sends[s][r] for s in range(mp)])  # s's shard r
-        incoming = np.stack([counts[s][r] for s in range(mp)])
-        cplan, gs_local = D.ragged_recv_compact(jnp.asarray(incoming,
-                                                            jnp.int32), bound)
-        compact = np.full((mp * bound, 2), -1)
-        cp = np.asarray(cplan)
-        ok = cp < mp * bound
-        compact[cp[ok]] = recv.reshape(mp * bound, 2)[ok]
-        outs.append((compact, np.asarray(gs_local), incoming))
-    return rows, outs
-
-
 def test_xplan_recv_roundtrip():
     rng = np.random.default_rng(0)
     mp, e_local, t, k = 4, 2, 8, 2
     bound = t * k  # dropless
-    rows, outs = _emulate_exchange(rng, mp, e_local, t, k, bound)
+    rows, outs = du.emulate_ragged_exchange(rng, mp, e_local, t, k, bound)
     total_seen = 0
     for r, (compact, gs_local, incoming) in enumerate(outs):
         # group sizes = what every source assigned to this rank's experts
@@ -141,44 +91,37 @@ def test_recv_compact_zero_source():
 
 _SETUP = """
     import numpy as np, jax, jax.numpy as jnp
-    from repro.configs.base import MoEConfig
+    import dist_utils as du
     from repro.core import fmoe
-    mesh = jax.make_mesh((2, 4), ("data", "model"))
-    cfg = MoEConfig(num_experts=8, top_k=2, d_expert_hidden=64,
-                    dispatch="ragged")
-    params = fmoe.fmoe_init(jax.random.PRNGKey(0), 32, cfg)
-    x = jax.random.normal(jax.random.PRNGKey(1), (8, 16, 32))
-    def apply(dist, p=None, impl="fused", c=cfg, xx=None):
-        with mesh:
-            return jax.jit(lambda p_, x_: fmoe.fmoe_apply(
-                p_, x_, c, dist=dist, impl=impl))(
-                    p if p is not None else params,
-                    xx if xx is not None else x)
+    env = du.moe_env(dispatch="ragged", capacity_factor=1.25)
+    mesh = du.make_mesh()
 """
 
 
 def test_ragged_a2a_matches_single_rank_and_capacity():
-    out = _run(_SETUP + """
+    out = du.run(_SETUP + """
     import dataclasses
     for impl in ("einsum", "pallas", "fused"):
-        y_ref, m_ref = fmoe.fmoe_apply(params, x, cfg, impl=impl)
-        y, m = apply(fmoe.DistConfig(mesh, ("data", "model")), impl=impl)
-        err = float(jnp.abs(y - y_ref).max())
-        assert err < 1e-5, (impl, err)
+        y_ref, m_ref = du.oracle(env, impl=impl)
+        y, m = du.dist_apply(env, mesh,
+                             fmoe.DistConfig(mesh, ("data", "model")),
+                             impl=impl)
+        du.assert_close(y, y_ref, 1e-5, msg=impl)
         np.testing.assert_allclose(np.asarray(m.load), np.asarray(m_ref.load),
                                    atol=1e-6)
         assert float(m.drop_frac) == 0.0  # dropless by construction
         # psum mode (tokens not sharded over the expert axis)
-        yp, mp_ = apply(fmoe.DistConfig(mesh, ("data",)), impl=impl)
-        assert float(jnp.abs(yp - y_ref).max()) < 1e-5, impl
+        yp, mp_ = du.dist_apply(env, mesh, fmoe.DistConfig(mesh, ("data",)),
+                                impl=impl)
+        du.assert_close(yp, y_ref, 1e-5, msg=impl)
         assert float(mp_.drop_frac) == 0.0
     # vs the capacity a2a under uniform-ish load (cf large enough: no drops)
-    ccap = dataclasses.replace(cfg, dispatch="capacity", capacity_factor=8.0)
-    ycap, mcap = apply(fmoe.DistConfig(mesh, ("data", "model")), c=ccap)
-    yrag, _ = apply(fmoe.DistConfig(mesh, ("data", "model")))
+    envc = du.moe_env(dispatch="capacity", capacity_factor=8.0)
+    ycap, mcap = du.dist_apply(envc, mesh,
+                               fmoe.DistConfig(mesh, ("data", "model")))
+    yrag, _ = du.dist_apply(env, mesh, fmoe.DistConfig(mesh, ("data", "model")))
     assert float(mcap.drop_frac) == 0.0
-    err = float(jnp.abs(ycap - yrag).max())
-    assert err < 1e-5, err
+    du.assert_close(ycap, yrag, 1e-5)
     print("ragged matches ok")
     """)
     assert "ragged matches ok" in out
@@ -191,16 +134,14 @@ def test_ragged_bit_exact_on_1x4_fused():
     grad is x^T @ dlogits at a different GEMM shape (t vs T rows), so it
     matches to f32 reassociation tolerance, not bitwise — that GEMM is
     outside the exchange."""
-    out = _run("""
+    out = du.run("""
     import numpy as np, jax, jax.numpy as jnp
-    from repro.configs.base import MoEConfig
+    import dist_utils as du
     from repro.core import fmoe
+    env = du.moe_env(dispatch="ragged", capacity_factor=1.25)
     mesh = jax.make_mesh((1, 4), ("data", "model"))
-    cfg = MoEConfig(num_experts=8, top_k=2, d_expert_hidden=64,
-                    dispatch="ragged")
-    params = fmoe.fmoe_init(jax.random.PRNGKey(0), 32, cfg)
-    x = jax.random.normal(jax.random.PRNGKey(1), (8, 16, 32))
     dist = fmoe.DistConfig(mesh, ("data", "model"))
+    cfg = env.cfg
 
     def loss(p, x, dist):
         y, _ = fmoe.fmoe_apply(p, x, cfg, dist=dist, impl="fused")
@@ -211,14 +152,14 @@ def test_ragged_bit_exact_on_1x4_fused():
         # The router weight stays frozen: its grad is x^T @ dlogits at a
         # different GEMM shape per sharding, bitwise-equal only up to f32
         # reassociation, and feeding that ulp back would cascade.
-        p = params
+        p = env.params
         step = jax.jit(lambda p, x: (
             fmoe.fmoe_apply(p, x, cfg, dist=dist, impl="fused")[0],
             jax.grad(loss)(p, x, dist)))
         ys, gr = [], None
         for _ in range(steps):
             with mesh:
-                y, g = step(p, x)
+                y, g = step(p, env.x)
             p = {**p, "experts": jax.tree.map(lambda a, b: a - lr * b,
                                               p["experts"], g["experts"])}
             ys.append(np.asarray(y))
@@ -228,14 +169,10 @@ def test_ragged_bit_exact_on_1x4_fused():
     ys0, p0, g0 = train(None)
     ys1, p1, g1 = train(dist)
     for a, b in zip(ys0, ys1):
-        np.testing.assert_array_equal(a, b)  # bitwise, every step
+        du.assert_bit_exact(a, b)  # bitwise, every step
     for k in ("wi_gate", "wi_up", "wo"):
-        np.testing.assert_array_equal(np.asarray(p0["experts"][k]),
-                                      np.asarray(p1["experts"][k]))
-        np.testing.assert_array_equal(np.asarray(g0["experts"][k]),
-                                      np.asarray(g1["experts"][k]))
-    np.testing.assert_allclose(np.asarray(g0["router"]["w"]),
-                               np.asarray(g1["router"]["w"]), atol=1e-6)
+        du.assert_bit_exact(p0["experts"][k], p1["experts"][k])
+    du.assert_grads_match(g0, g1)
     print("1x4 fused bit-exact ok")
     """, devices=4)
     assert "1x4 fused bit-exact ok" in out
@@ -246,29 +183,26 @@ def test_ragged_chunked_wire_and_skew():
     the ragged exchange; Zipf-style skew routing everything to two experts
     leaves half the ranks receiving zero tokens and still matches the
     single-rank path with zero drops."""
-    out = _run(_SETUP + """
-    y0, m0 = apply(fmoe.DistConfig(mesh, ("data", "model")))
+    out = du.run(_SETUP + """
+    y0, m0 = du.dist_apply(env, mesh, fmoe.DistConfig(mesh, ("data", "model")))
     for nc in (2, 4, 3):
-        y1, m1 = apply(fmoe.DistConfig(mesh, ("data", "model"),
-                                       overlap_chunks=nc))
-        assert (np.asarray(y0) == np.asarray(y1)).all(), nc
+        y1, m1 = du.dist_apply(env, mesh, fmoe.DistConfig(
+            mesh, ("data", "model"), overlap_chunks=nc))
+        du.assert_bit_exact(y1, y0, msg=nc)
         np.testing.assert_array_equal(np.asarray(m0.load), np.asarray(m1.load))
-    yb, _ = apply(fmoe.DistConfig(mesh, ("data", "model"), wire_dtype="bf16"))
-    yb4, _ = apply(fmoe.DistConfig(mesh, ("data", "model"), wire_dtype="bf16",
-                                   overlap_chunks=4))
+    yb, _ = du.dist_apply(env, mesh, fmoe.DistConfig(mesh, ("data", "model"),
+                                                     wire_dtype="bf16"))
+    yb4, _ = du.dist_apply(env, mesh, fmoe.DistConfig(
+        mesh, ("data", "model"), wire_dtype="bf16", overlap_chunks=4))
     err = float(jnp.abs(yb - y0).max())
     assert 0 < err < 0.05, err  # bf16 quantization, and the cast happened
-    assert (np.asarray(yb) == np.asarray(yb4)).all()
+    du.assert_bit_exact(yb4, yb)
     # skew: all tokens to experts {0, 1} -> ranks owning experts 4..7 get 0
-    w = np.zeros((32, 8), np.float32); w[:, 0] = 10.0; w[:, 1] = 5.0
-    ps = {**params, "router": {**params["router"], "w": jnp.asarray(w)}}
-    xs = jnp.abs(x) + 0.1  # positive rows: expert 0 then 1 win everywhere
-    y_ref, m_ref = fmoe.fmoe_apply(ps, xs, cfg, impl="fused")
-    with mesh:
-        y2, m2 = jax.jit(lambda p_, x_: fmoe.fmoe_apply(
-            p_, x_, cfg, dist=fmoe.DistConfig(mesh, ("data", "model")),
-            impl="fused"))(ps, xs)
-    assert float(jnp.abs(y2 - y_ref).max()) < 1e-5
+    skew = du.skew_router(env)
+    y_ref, m_ref = du.oracle(skew, impl="fused")
+    y2, m2 = du.dist_apply(skew, mesh, fmoe.DistConfig(mesh, ("data", "model")),
+                           impl="fused")
+    du.assert_close(y2, y_ref, 1e-5)
     assert float(m2.drop_frac) == 0.0
     load = np.asarray(m2.load)
     np.testing.assert_allclose(load[:2], [0.5, 0.5], atol=1e-6)
@@ -282,19 +216,17 @@ def test_ragged_composes_with_shadow_placement():
     """Shadowed hot experts are served locally outside the exchange: outputs
     identical, monitor load still in logical order, and the shadow filler
     composes with chunking."""
-    out = _run(_SETUP + """
-    from repro.placement import ExpertPlacement, from_logical
-    y0, m0 = apply(fmoe.DistConfig(mesh, ("data", "model")))
+    out = du.run(_SETUP + """
+    from repro.placement import from_logical
+    y0, m0 = du.dist_apply(env, mesh, fmoe.DistConfig(mesh, ("data", "model")))
     load = np.asarray(m0.load)
-    hot = np.argsort(-load)
-    S = 4
-    phys = tuple(int(e) for e in np.sort(hot[S:])) + tuple(int(e) for e in hot[:S])
-    plan = ExpertPlacement(8, 4, phys, num_shadow=S, capacity_scale=1.0)
-    pp = from_logical(params, plan)
+    plan = du.hot_shadow_plan(load, 4, 4)
+    pp = from_logical(env.params, plan)
     for nc in (0, 4):
-        y1, m1 = apply(fmoe.DistConfig(mesh, ("data", "model"), placement=plan,
-                                       overlap_chunks=nc), pp)
-        assert float(jnp.abs(y1 - y0).max()) < 1e-5, nc
+        y1, m1 = du.dist_apply(env, mesh, fmoe.DistConfig(
+            mesh, ("data", "model"), placement=plan, overlap_chunks=nc),
+            params=pp)
+        du.assert_close(y1, y0, 1e-5, msg=nc)
         np.testing.assert_allclose(np.asarray(m1.load), load, atol=1e-6)
     print("shadow compose ok")
     """)
@@ -305,14 +237,13 @@ def test_ragged_bound_trades_drops():
     """A sub-dropless ragged_bound drops the over-bound rows (tracked in
     drop_frac) and still produces finite outputs; the default bound drops
     nothing on the same input."""
-    out = _run(_SETUP + """
-    w = np.zeros((32, 8), np.float32); w[:, 0] = 10.0; w[:, 1] = 5.0
-    ps = {**params, "router": {**params["router"], "w": jnp.asarray(w)}}
-    xs = jnp.abs(x) + 0.1  # all rows to experts 0/1 = rank 0's shard
-    _, m_full = apply(fmoe.DistConfig(mesh, ("data", "model")), ps, xx=xs)
+    out = du.run(_SETUP + """
+    skew = du.skew_router(env)  # all rows to experts 0/1 = rank 0's shard
+    _, m_full = du.dist_apply(skew, mesh,
+                              fmoe.DistConfig(mesh, ("data", "model")))
     assert float(m_full.drop_frac) == 0.0
-    yb, mb = apply(fmoe.DistConfig(mesh, ("data", "model"), ragged_bound=8),
-                   ps, xx=xs)
+    yb, mb = du.dist_apply(skew, mesh, fmoe.DistConfig(
+        mesh, ("data", "model"), ragged_bound=8))
     # per rank: 32 rows all to peer 0, bound 8 -> 24/32 dropped
     np.testing.assert_allclose(float(mb.drop_frac), 0.75, atol=1e-6)
     assert np.isfinite(np.asarray(yb)).all()
@@ -324,14 +255,9 @@ def test_ragged_bound_trades_drops():
 def test_train_cli_runs_ragged_mesh():
     """launch/train.py accepts --dispatch ragged with --mesh (the ISSUE-4
     unlock) and takes optimizer steps."""
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
-    env["PYTHONPATH"] = os.path.join(ROOT, "src")
-    out = subprocess.run(
-        [sys.executable, "-m", "repro.launch.train", "--arch", "fastmoe-gpt",
-         "--reduced", "--steps", "2", "--batch", "4", "--seq", "32",
-         "--mesh", "1x4", "--dispatch", "ragged", "--impl", "fused",
-         "--overlap_chunks", "2", "--log_every", "1"],
-        capture_output=True, text=True, env=env, timeout=560, cwd=ROOT)
-    assert out.returncode == 0, out.stderr[-3000:]
-    assert "done: 2 steps" in out.stdout, out.stdout
+    out = du.run_cli(
+        ["repro.launch.train", "--arch", "fastmoe-gpt", "--reduced",
+         "--steps", "2", "--batch", "4", "--seq", "32", "--mesh", "1x4",
+         "--dispatch", "ragged", "--impl", "fused", "--overlap_chunks", "2",
+         "--log_every", "1"], devices=4)
+    assert "done: 2 steps" in out, out

@@ -1,4 +1,6 @@
-"""Benchmark utilities: paper-style timing (warm-up + 16 reps, §5.1)."""
+"""Benchmark utilities: paper-style timing (warm-up + 16 reps, §5.1),
+plus the shared metrics sink every fig script's rows land in
+(repro.obs.sink — benchmarks/run.py points it at <out>/metrics.jsonl)."""
 from __future__ import annotations
 
 import os
@@ -6,6 +8,37 @@ import time
 
 import jax
 import numpy as np
+
+_RESULTS_DIR: str | None = None
+_SINK = None
+
+
+def set_results_dir(path: str | None) -> None:
+    """Route :func:`record` / :func:`emit` telemetry to
+    ``<path>/metrics.jsonl`` (None closes the sink)."""
+    global _RESULTS_DIR, _SINK
+    if _SINK is not None:
+        _SINK.close()
+        _SINK = None
+    _RESULTS_DIR = path
+
+
+def _sink():
+    global _SINK
+    if _SINK is None and _RESULTS_DIR is not None:
+        from repro.obs import JsonlSink
+        os.makedirs(_RESULTS_DIR, exist_ok=True)
+        _SINK = JsonlSink(os.path.join(_RESULTS_DIR, "metrics.jsonl"),
+                          append=True)
+    return _SINK
+
+
+def record(rec: dict) -> None:
+    """Emit one telemetry record to the shared benchmark sink (no-op until
+    :func:`set_results_dir` has pointed it somewhere)."""
+    s = _sink()
+    if s is not None:
+        s.emit(rec)
 
 
 def smoke_mode() -> bool:
@@ -32,3 +65,4 @@ def timeit(fn, *args, reps: int = 16, warmup: int = 3) -> dict:
 
 def emit(name: str, us: float, derived: str = "") -> None:
     print(f"{name},{us:.1f},{derived}", flush=True)
+    record({"kind": "bench", "name": name, "us": us, "derived": derived})

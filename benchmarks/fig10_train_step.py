@@ -14,12 +14,84 @@ the XLA two-pass path; the HBM-traffic win shows on real TPUs.  The
 """
 from __future__ import annotations
 
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit, timeit
 
 T, DM, DH, E, K = 256, 64, 128, 8, 2
+W = 4  # expert-parallel ranks for the distributed wire-evidence rows
+
+# Distributed wire evidence: one fwd+bwd value_and_grad step per (dispatch,
+# wire dtype), with the device-side wire counter checked against the
+# *forward* program's optimized-HLO exchange bytes (the counter models the
+# forward exchange; the backward adds its mirror image on top).
+_DIST_SCRIPT = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={w}"
+import json
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.configs.base import MoEConfig
+from repro.core import fmoe
+from repro.launch.roofline import collective_bytes
+
+w, E, T, DM, DH, K = {w}, {e}, {t}, {dm}, {dh}, {k}
+x = jax.random.normal(jax.random.PRNGKey(1), (T, DM))
+mesh = jax.make_mesh((1, w), ("data", "model"))
+rows = []
+for dispatch in ("capacity", "ragged"):
+    cfg = MoEConfig(num_experts=E, top_k=K, d_expert_hidden=DH,
+                    dispatch=dispatch, capacity_factor=2.0)
+    params = fmoe.fmoe_init(jax.random.PRNGKey(0), DM, cfg)
+    for wire in (None, "bf16"):
+        dist = fmoe.DistConfig(mesh, ("data", "model"), wire_dtype=wire)
+
+        def fwd(p, x_):
+            return fmoe.fmoe_apply(p, x_, cfg, dist=dist)
+
+        def loss(p, x_):
+            y, m = fwd(p, x_)
+            return (y ** 2).mean(), m
+
+        step = jax.jit(jax.value_and_grad(loss, has_aux=True))
+        with mesh:
+            import time
+            for _ in range(2):
+                jax.block_until_ready(step(params, x)[0][0])
+            ts = []
+            for _ in range(8):
+                t0 = time.perf_counter()
+                (l, m), g = step(params, x)
+                jax.block_until_ready(l)
+                ts.append(time.perf_counter() - t0)
+            ftxt = jax.jit(fwd).lower(params, x).compile().as_text()
+        cb = collective_bytes(ftxt)
+        hlo_wire = float(cb.get("all-to-all", 0)
+                         + cb.get("collective-permute", 0))
+        meas = float(m.obs.wire_bytes)
+        assert abs(meas - hlo_wire) <= 0.10 * max(hlo_wire, 1.0), (
+            f"{{dispatch}}/{{wire}}: counter {{meas}} vs fwd HLO {{hlo_wire}}")
+        rows.append({{"dispatch": dispatch, "wire_dtype": wire or "f32",
+                      "us": float(np.median(ts) * 1e6),
+                      "wire_bytes": meas, "hlo_fwd_bytes": hlo_wire,
+                      "dropped": float(m.obs.dropped),
+                      "imbalance": float(m.obs.imbalance)}})
+for d in ("capacity", "ragged"):
+    f32 = next(r for r in rows if r["dispatch"] == d
+               and r["wire_dtype"] == "f32")
+    b16 = next(r for r in rows if r["dispatch"] == d
+               and r["wire_dtype"] == "bf16")
+    ratio = b16["wire_bytes"] / f32["wire_bytes"]
+    assert 0.4 <= ratio <= 0.6, f"{{d}}: bf16 wire ratio {{ratio}}"
+print("RESULTJSON " + json.dumps(rows))
+"""
 
 
 def _materializes_mh(fn, *args, min_rows: int, hidden: int) -> bool:
@@ -62,4 +134,27 @@ def run(quick: bool = False) -> list[dict]:
                  f"fwd+bwd materializes_MH={mh}")
             assert (impl == "fused") == (not mh), (
                 "fused step must not materialize (M, H); two-pass must")
+    rows += _run_dist(quick)
+    return rows
+
+
+def _run_dist(quick: bool) -> list[dict]:
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(root, "src")
+    env.pop("XLA_FLAGS", None)
+    t = T // 2 if quick else T
+    script = _DIST_SCRIPT.format(w=W, e=E, t=t, dm=DM, dh=DH, k=K)
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(script)],
+                         capture_output=True, text=True, env=env, timeout=560)
+    if out.returncode != 0:
+        raise RuntimeError(out.stderr[-2000:])
+    rows = json.loads(out.stdout.strip().split("RESULTJSON ")[1].splitlines()[0])
+    for r in rows:
+        r.update(impl="einsum", distributed=True, ranks=W,
+                 backend=jax.default_backend())
+        emit(f"fig10_dist_{r['dispatch']}_{r['wire_dtype']}", r["us"],
+             f"wire_bytes={r['wire_bytes']:.0f} "
+             f"hlo_fwd_bytes={r['hlo_fwd_bytes']:.0f} "
+             f"imbalance={r['imbalance']:.2f}")
     return rows

@@ -60,6 +60,7 @@ params["router"]["w"] = jnp.asarray(centers.T * 4.0)
 mesh = jax.make_mesh((1, w), ("data", "model"))
 dist0 = fmoe.DistConfig(mesh, ("data", "model"))
 dist1 = fmoe.DistConfig(mesh, ("data", "model"), overlap_chunks=CH)
+dist_b = fmoe.DistConfig(mesh, ("data", "model"), wire_dtype="bf16")
 
 def bench(dist):
     fn = jax.jit(lambda p_, x_: fmoe.fmoe_apply(p_, x_, cfg, dist=dist))
@@ -72,18 +73,45 @@ def bench(dist):
             y, m = fn(params, x)
             jax.block_until_ready(y)
             ts.append(time.perf_counter() - t0)
-        txt = jax.jit(lambda p_, x_: fmoe.fmoe_apply(p_, x_, cfg, dist=dist)[0]
-                      ).lower(params, x).compile().as_text()
-    return float(np.median(ts) * 1e6), np.asarray(y), txt
+        # lower the FULL (y, metrics) program: the wire-byte comparison must
+        # see the counts exchange too (a [0]-only lowering would DCE it)
+        txt = fn.lower(params, x).compile().as_text()
+    return float(np.median(ts) * 1e6), np.asarray(y), m, txt
 
-us0, y0, hlo0 = bench(dist0)
-us1, y1, hlo1 = bench(dist1)
+from repro.launch.roofline import collective_bytes
+
+def hlo_wire(txt):
+    cb = collective_bytes(txt)
+    return float(cb.get("all-to-all", 0) + cb.get("collective-permute", 0))
+
+us0, y0, m0, hlo0 = bench(dist0)
+us1, y1, m1, hlo1 = bench(dist1)
+us_b, _, m_b, hlo_b = bench(dist_b)
 assert (y0 == y1).all(), "pipelined path must be bit-exact vs serial"
+# measured (device counter) vs modeled (optimized-HLO exchange output bytes)
+# must agree: the counter is the same quantity computed at trace time
+pairs = {{"serial": (float(m0.obs.wire_bytes), hlo_wire(hlo0)),
+          "pipelined": (float(m1.obs.wire_bytes), hlo_wire(hlo1)),
+          "bf16": (float(m_b.obs.wire_bytes), hlo_wire(hlo_b))}}
+for name, (meas, model) in pairs.items():
+    assert abs(meas - model) <= 0.10 * max(model, 1.0), (
+        f"{{name}}: counter {{meas}} vs HLO {{model}}")
+assert 0.4 <= pairs["bf16"][0] / pairs["serial"][0] <= 0.6, (
+    "bf16 wire must be ~half of f32")
 a2a0 = hlo0.count("all-to-all")
 cp1 = hlo1.count("collective-permute")
 cap = expert_capacity(NB // w, E, K, cfg.capacity_factor)
 chunk_elems = (E * (cap // CH)) * DM  # per-chunk payload per rank, one way
-print(f"RESULT {{us0:.1f}} {{us1:.1f}} {{CH}} {{a2a0}} {{cp1}} {{chunk_elems}}")
+import json
+print("RESULTJSON " + json.dumps({{
+    "us0": us0, "us1": us1, "ch": CH, "a2a0": a2a0, "cp1": cp1,
+    "chunk_elems": chunk_elems,
+    "wire_bytes_serial": pairs["serial"][0],
+    "hlo_bytes_serial": pairs["serial"][1],
+    "wire_bytes_pipelined": pairs["pipelined"][0],
+    "hlo_bytes_pipelined": pairs["pipelined"][1],
+    "wire_bytes_bf16": pairs["bf16"][0],
+    "hlo_bytes_bf16": pairs["bf16"][1]}}))
 """
 
 
@@ -99,19 +127,31 @@ def run(quick: bool = False) -> list[dict]:
                          capture_output=True, text=True, env=env, timeout=560)
     if out.returncode != 0:
         raise RuntimeError(out.stderr[-2000:])
-    vals = out.stdout.strip().split("RESULT ")[1].split()
+    import json
+
     import jax  # backend tag gates cost-model calibration (placement/calibrate)
+    vals = json.loads(out.stdout.strip().split("RESULTJSON ")[1].splitlines()[0])
     row = {
-        "us_serial": float(vals[0]), "us_pipelined": float(vals[1]),
-        "n_chunks": int(vals[2]), "hlo_all_to_all_serial": int(vals[3]),
-        "hlo_collective_permute_pipelined": int(vals[4]),
-        "chunk_elems": int(vals[5]), "bit_exact": True,
+        "us_serial": vals["us0"], "us_pipelined": vals["us1"],
+        "n_chunks": vals["ch"], "hlo_all_to_all_serial": vals["a2a0"],
+        "hlo_collective_permute_pipelined": vals["cp1"],
+        "chunk_elems": vals["chunk_elems"], "bit_exact": True,
+        # wire-byte evidence: device-side counter vs optimized-HLO exchange
+        # bytes (asserted within 10% in-subprocess before printing)
+        "wire_bytes_serial": vals["wire_bytes_serial"],
+        "hlo_bytes_serial": vals["hlo_bytes_serial"],
+        "wire_bytes_pipelined": vals["wire_bytes_pipelined"],
+        "hlo_bytes_pipelined": vals["hlo_bytes_pipelined"],
+        "wire_bytes_bf16": vals["wire_bytes_bf16"],
+        "hlo_bytes_bf16": vals["hlo_bytes_bf16"],
         "backend": jax.default_backend(),
     }
     emit("fig9_serial", row["us_serial"],
-         f"all_to_all_ops={row['hlo_all_to_all_serial']}")
+         f"all_to_all_ops={row['hlo_all_to_all_serial']} "
+         f"wire_bytes={row['wire_bytes_serial']:.0f}")
     emit("fig9_pipelined", row["us_pipelined"],
          f"chunks={row['n_chunks']} "
          f"collective_permutes={row['hlo_collective_permute_pipelined']} "
-         f"chunk_elems={row['chunk_elems']} bit_exact=True")
+         f"chunk_elems={row['chunk_elems']} bit_exact=True "
+         f"wire_bytes={row['wire_bytes_pipelined']:.0f}")
     return [row]

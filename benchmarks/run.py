@@ -41,6 +41,13 @@ def main() -> None:
     picked = args.only.split(",") if args.only else list(suites)
 
     os.makedirs(args.out, exist_ok=True)
+    # unified telemetry (repro.obs): every fig's rows also land in
+    # <out>/metrics.jsonl via benchmarks.common, and per-fig wall times in a
+    # Chrome trace next to them
+    from benchmarks import common
+    from repro.obs import trace as obs_trace
+    common.set_results_dir(args.out)
+    obs_trace.configure(enabled=True)
     # merge into existing results so `--only fig9` doesn't drop fig8's rows
     # (results.json also feeds repro.placement.calibrate)
     results = {}
@@ -54,11 +61,35 @@ def main() -> None:
     print("name,us_per_call,derived")
     for name in picked:
         t0 = time.time()
-        results[name] = suites[name](quick=args.quick)
+        with obs_trace.span(f"bench:{name}"):
+            results[name] = suites[name](quick=args.quick)
         print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+    results["wire_summary"] = _wire_summary(results)
     with open(os.path.join(args.out, "results.json"), "w") as f:
         json.dump(results, f, indent=1)
+    common.set_results_dir(None)  # flush + close metrics.jsonl
+    obs_trace.export(os.path.join(args.out, "trace.json"))
     print(f"# wrote {args.out}/results.json")
+    print(f"# wrote {args.out}/metrics.jsonl and {args.out}/trace.json")
+
+
+def _wire_summary(results: dict) -> dict:
+    """Collect the measured-vs-modeled wire-byte evidence rows (fig9/fig10)
+    into one top-level block (experiments/summarize.py renders it)."""
+    out: dict = {}
+    for row in results.get("fig9", []):
+        for k in ("wire_bytes_serial", "hlo_bytes_serial",
+                  "wire_bytes_pipelined", "hlo_bytes_pipelined",
+                  "wire_bytes_bf16", "hlo_bytes_bf16"):
+            if k in row:
+                out.setdefault("fig9", {})[k] = row[k]
+    for row in results.get("fig10", []):
+        if row.get("distributed") and "wire_bytes" in row:
+            key = f"{row['dispatch']}_{row['wire_dtype']}"
+            out.setdefault("fig10", {})[key] = {
+                "wire_bytes": row["wire_bytes"],
+                "hlo_fwd_bytes": row["hlo_fwd_bytes"]}
+    return out
 
 
 if __name__ == "__main__":

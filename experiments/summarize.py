@@ -97,16 +97,47 @@ def moe_bench_table():
               f"a2a_elems={r['a2a_elems_on']} shadow={r['num_shadow']} "
               f"cap_scale={r['capacity_scale']:.2f} drop={r['drop_on']:.3f} |")
     for r in res.get("fig9", []):
+        wire0 = (f" wire_bytes={r['wire_bytes_serial']:.0f}"
+                 if "wire_bytes_serial" in r else "")
+        wire1 = (f" wire_bytes={r['wire_bytes_pipelined']:.0f}"
+                 if "wire_bytes_pipelined" in r else "")
         print(f"| fig9 | serial | {r['us_serial']:.0f} | "
-              f"all_to_all_ops={r['hlo_all_to_all_serial']} |")
+              f"all_to_all_ops={r['hlo_all_to_all_serial']}{wire0} |")
         print(f"| fig9 | pipelined x{r['n_chunks']} | {r['us_pipelined']:.0f} | "
               f"collective_permutes={r['hlo_collective_permute_pipelined']} "
               f"chunk_elems={r['chunk_elems']} "
-              f"bit_exact={r['bit_exact']} |")
+              f"bit_exact={r['bit_exact']}{wire1} |")
     for r in res.get("fig10", []):
-        print(f"| fig10 | {r['dispatch']}/{r['impl']} | {r['us']:.0f} | "
-              f"fwd+bwd tokens={r['tokens']} "
-              f"materializes_MH={r['materializes_mh']} |")
+        if r.get("distributed"):
+            print(f"| fig10 | dist {r['dispatch']}/{r['wire_dtype']} "
+                  f"x{r['ranks']} | {r['us']:.0f} | "
+                  f"wire_bytes={r['wire_bytes']:.0f} "
+                  f"hlo_fwd_bytes={r['hlo_fwd_bytes']:.0f} "
+                  f"imbalance={r['imbalance']:.2f} |")
+        else:
+            print(f"| fig10 | {r['dispatch']}/{r['impl']} | {r['us']:.0f} | "
+                  f"fwd+bwd tokens={r['tokens']} "
+                  f"materializes_MH={r['materializes_mh']} |")
+    _wire_evidence(res)
+
+
+def _wire_evidence(res):
+    """Measured (device counter) vs modeled (optimized HLO) wire bytes —
+    the fig9/fig10 evidence block collected by benchmarks/run.py."""
+    ws = res.get("wire_summary") or {}
+    if not ws:
+        return
+    print("\n### Wire-byte evidence (device counters vs optimized HLO)\n")
+    print("| source | setting | measured bytes | HLO bytes |")
+    print("|---|---|---|---|")
+    f9 = ws.get("fig9", {})
+    for key in ("serial", "pipelined", "bf16"):
+        m, h = f9.get(f"wire_bytes_{key}"), f9.get(f"hlo_bytes_{key}")
+        if m is not None and h is not None:
+            print(f"| fig9 | {key} | {m:.0f} | {h:.0f} |")
+    for key, v in sorted(ws.get("fig10", {}).items()):
+        print(f"| fig10 | {key} | {v['wire_bytes']:.0f} | "
+              f"{v['hlo_fwd_bytes']:.0f} |")
 
 
 if __name__ == "__main__":

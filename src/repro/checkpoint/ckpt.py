@@ -15,6 +15,8 @@ from typing import Any
 import jax
 import numpy as np
 
+from repro.obs import trace as obs_trace
+
 
 def _flatten(tree: Any, prefix: str = "") -> dict:
     out = {}
@@ -38,23 +40,24 @@ def save(path: str, tree: Any, *, step: int | None = None,
     physical expert layout.  It is undone before writing (per-layer plans
     un-permute each layer's slice), so checkpoints are always in logical
     expert order — layout-free, restorable under any future placement."""
-    if placement is not None:
-        from repro.placement.migrate import to_logical
-        tree = to_logical(tree, placement)
-    os.makedirs(path, exist_ok=True)
-    flat = _flatten(tree)
-    manifest = {"step": step, "params": {}}
-    for i, (key, val) in enumerate(flat.items()):
-        arr = np.asarray(jax.device_get(val))
-        dtype = str(arr.dtype)
-        if dtype == "bfloat16":  # np.save can't serialize ml_dtypes
-            arr = arr.astype(np.float32)
-        fname = f"arr_{i:05d}.npy"
-        np.save(os.path.join(path, fname), arr)
-        manifest["params"][key] = {"file": fname, "dtype": dtype,
-                                   "shape": list(arr.shape)}
-    with open(os.path.join(path, "manifest.json"), "w") as f:
-        json.dump(manifest, f, indent=1)
+    with obs_trace.span("ckpt_save", path=path, step=step):
+        if placement is not None:
+            from repro.placement.migrate import to_logical
+            tree = to_logical(tree, placement)
+        os.makedirs(path, exist_ok=True)
+        flat = _flatten(tree)
+        manifest = {"step": step, "params": {}}
+        for i, (key, val) in enumerate(flat.items()):
+            arr = np.asarray(jax.device_get(val))
+            dtype = str(arr.dtype)
+            if dtype == "bfloat16":  # np.save can't serialize ml_dtypes
+                arr = arr.astype(np.float32)
+            fname = f"arr_{i:05d}.npy"
+            np.save(os.path.join(path, fname), arr)
+            manifest["params"][key] = {"file": fname, "dtype": dtype,
+                                       "shape": list(arr.shape)}
+        with open(os.path.join(path, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
 
 
 def restore(path: str, like: Any, *, placement=None) -> Any:
@@ -64,26 +67,29 @@ def restore(path: str, like: Any, *, placement=None) -> Any:
     checkpoint (the inverse of :func:`save`'s ``placement``) — restoring
     under a *different* plan than the one saved under is fine, which is the
     point: checkpoints don't know layouts."""
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
-    flat_like = _flatten(like)
-    missing = set(flat_like) - set(manifest["params"])
-    extra = set(manifest["params"]) - set(flat_like)
-    if missing or extra:
-        raise ValueError(f"checkpoint mismatch: missing={sorted(missing)[:5]} "
-                         f"extra={sorted(extra)[:5]}")
-    loaded = {}
-    for key, meta in manifest["params"].items():
-        arr = np.load(os.path.join(path, meta["file"]))
-        want = flat_like[key]
-        if tuple(arr.shape) != tuple(want.shape):
-            raise ValueError(f"{key}: shape {arr.shape} != {tuple(want.shape)}")
-        loaded[key] = arr.astype(want.dtype)
-    tree = _unflatten_like(like, loaded, "")
-    if placement is not None:
-        from repro.placement.migrate import from_logical
-        tree = from_logical(tree, placement)
-    return tree
+    with obs_trace.span("ckpt_restore", path=path):
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        flat_like = _flatten(like)
+        missing = set(flat_like) - set(manifest["params"])
+        extra = set(manifest["params"]) - set(flat_like)
+        if missing or extra:
+            raise ValueError(
+                f"checkpoint mismatch: missing={sorted(missing)[:5]} "
+                f"extra={sorted(extra)[:5]}")
+        loaded = {}
+        for key, meta in manifest["params"].items():
+            arr = np.load(os.path.join(path, meta["file"]))
+            want = flat_like[key]
+            if tuple(arr.shape) != tuple(want.shape):
+                raise ValueError(
+                    f"{key}: shape {arr.shape} != {tuple(want.shape)}")
+            loaded[key] = arr.astype(want.dtype)
+        tree = _unflatten_like(like, loaded, "")
+        if placement is not None:
+            from repro.placement.migrate import from_logical
+            tree = from_logical(tree, placement)
+        return tree
 
 
 def _unflatten_like(like: Any, flat: dict, prefix: str) -> Any:

@@ -2,27 +2,37 @@
 implemented here as a beyond-paper feature, following Switch/GShard)."""
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.obs.counters import ObsCounters
+
 
 class MoEMetrics(NamedTuple):
-    """Per-MoE-layer metrics, accumulable across layers (all arrays)."""
+    """Per-MoE-layer metrics, accumulable across layers (all arrays).
+
+    ``obs`` carries the device-side telemetry counters (repro.obs.counters)
+    through the same layer-scan accumulation; monitor-feeding constructions
+    that never '+'-accumulate may leave it None (the default).
+    """
 
     aux_loss: jax.Array  # scalar — Switch load-balance loss
     z_loss: jax.Array  # scalar — router logit z-loss
     load: jax.Array  # (E,) float32 — fraction of tokens assigned per expert
     drop_frac: jax.Array  # scalar — fraction of (token, slot) pairs dropped
+    obs: Any = None  # Optional[ObsCounters] — wire/drop/shadow counters
 
     @staticmethod
     def zero(num_experts: int) -> "MoEMetrics":
         z = jnp.zeros(())
-        return MoEMetrics(z, z, jnp.zeros((num_experts,)), z)
+        return MoEMetrics(z, z, jnp.zeros((num_experts,)), z,
+                          ObsCounters.zero())
 
     def __add__(self, other: "MoEMetrics") -> "MoEMetrics":
-        return MoEMetrics(*(a + b for a, b in zip(self, other)))
+        return MoEMetrics(*(b if a is None else a if b is None else a + b
+                            for a, b in zip(self, other)))
 
 
 def load_balance_loss(probs: jax.Array, expert_ids: jax.Array,

@@ -27,6 +27,8 @@ from repro.core import dispatch as D
 from repro.core import pipeline
 from repro.core.balance import MoEMetrics, load_balance_loss, load_metrics, router_z_loss
 from repro.core.gate import gate_forward, gate_init
+from repro.obs import counters as obs_counters
+from repro.obs.counters import ObsCounters
 
 
 class DistConfig(NamedTuple):
@@ -77,6 +79,12 @@ class DistConfig(NamedTuple):
     overlap_chunks: int = 0  # §5.2 pipelined exchange (0/1 = serial)
     wire_dtype: Optional[str] = None  # a2a payload dtype ("bf16" | None)
     ragged_bound: int = 0  # dropless-exchange peer-shard rows (0 = T*k)
+    # device-side telemetry counters (repro.obs.counters) riding the metrics
+    # output.  They are derived from static shapes + values the paths already
+    # reduce (no extra collectives — tests/test_obs.py locks the HLO diff);
+    # False pins them to zeros, which is what that regression test compares
+    # against.
+    obs: bool = True
 
     @property
     def expert_axes(self) -> tuple:
@@ -283,6 +291,21 @@ def _route_table(place, l2p):
     return None
 
 
+def _axes_size(dist: "DistConfig", axes) -> int:
+    """Static number of ranks in the given mesh-axis group (1 if empty)."""
+    n = 1
+    for a in axes:
+        n *= int(dist.mesh.shape[a])
+    return n
+
+
+def _imbalance(owned_load: jax.Array, mp: int, E_local: int) -> jax.Array:
+    """max/mean of per-expert-rank received load from an already-global
+    physical-order owned-expert load vector (no collective of its own)."""
+    per_rank = owned_load.astype(jnp.float32).reshape(mp, E_local).sum(axis=1)
+    return per_rank.max() / jnp.maximum(per_rank.mean(), 1e-6)
+
+
 def _moe_local(x: jax.Array, router: dict, experts: dict, cfg: MoEConfig,
                act: str, expert_fn: Callable, rng=None, placement=None,
                impl: str = "einsum", l2p=None):
@@ -313,7 +336,9 @@ def _moe_local(x: jax.Array, router: dict, experts: dict, cfg: MoEConfig,
     if table is not None:
         load = load[table]  # logical order
     metrics = MoEMetrics(load_balance_loss(g.probs, g.expert_ids, cfg.num_experts),
-                         router_z_loss(g.logits), load, drop)
+                         router_z_loss(g.logits), load, drop,
+                         obs_counters.local_counters(
+                             dropped=drop * (T * cfg.top_k)))
     return y, metrics
 
 
@@ -426,17 +451,35 @@ def _moe_a2a(x, router, experts, extra, shadow, l2p, cfg: MoEConfig, act,
         shadow_load = jax.lax.psum(plan.load[E_ns:], axes)
         load_global = jnp.concatenate([load_global,
                                        shadow_load.astype(load_global.dtype)])
+    if dist.obs:
+        # telemetry derived BEFORE the logical-order gather: the owned
+        # physical slots [0, E_ns) are what the exchange actually moved
+        imbalance = _imbalance(load_global[:E_ns], mp, E_local)
+        shadow_hits = (shadow_load.astype(jnp.float32).sum()
+                       if spec.num_shadow else jnp.zeros(()))
     if table is not None:
         # back to logical expert order for the monitor
         load_global = load_global[table]
     load, _ = load_metrics(load_global, None,
                            jnp.maximum(load_global.sum(), 1))
     _, drop = load_metrics(plan.load, plan.keep, t * cfg.top_k)
+    drop_pm = jax.lax.pmean(drop, axes)
+    if dist.obs:
+        obs = obs_counters.exchange_counters(
+            frac=pipeline.wire_fraction(mp, decompose=n_chunks > 1),
+            fwd_rows=E_ns * Cm, d_in=d, in_dtype=x.dtype,
+            ret_rows=E_ns * Cm, d_out=out.shape[-1], out_dtype=out.dtype,
+            counts_elems=E_ns, wire_dtype=wire,
+            dropped=drop_pm * (t * cfg.top_k * _axes_size(dist, axes)),
+            shadow_hits=shadow_hits, imbalance=imbalance)
+    else:
+        obs = ObsCounters.zero()
     metrics = MoEMetrics(
         jax.lax.pmean(load_balance_loss(g.probs, g.expert_ids, E), axes),
         jax.lax.pmean(router_z_loss(g.logits), axes),
         load,
-        jax.lax.pmean(drop, axes),
+        drop_pm,
+        obs,
     )
     return y, metrics
 
@@ -539,16 +582,34 @@ def _moe_a2a_ragged(x, router, experts, extra, shadow, l2p, cfg: MoEConfig,
     # ---- metrics: global assigned load + bound-overflow drops ----
     axes = tuple(dist.token_axes)
     load_global = jax.lax.psum(plan.group_sizes, axes)
+    if dist.obs:
+        # physical order: owned slots [0, E_ns) took the exchange, the tail
+        # [E_ns, E) are shadowed hot experts served locally on every rank
+        imbalance = _imbalance(load_global[:E_ns], mp, E_local)
+        shadow_hits = (load_global[E_ns:].astype(jnp.float32).sum()
+                       if E_ns < E else jnp.zeros(()))
     if table is not None:
         load_global = load_global[table]
     load, _ = load_metrics(load_global, None,
                            jnp.maximum(load_global.sum(), 1))
     dropped = (xplan.num_owned_rows - xplan.keep.sum()).astype(jnp.float32)
+    drop_pm = jax.lax.pmean(dropped / n, axes)
+    if dist.obs:
+        obs = obs_counters.exchange_counters(
+            frac=pipeline.wire_fraction(mp, decompose=n_chunks > 1),
+            fwd_rows=mp * B, d_in=d, in_dtype=x.dtype,
+            ret_rows=mp * B, d_out=ret.shape[-1], out_dtype=ret.dtype,
+            counts_elems=E_ns, wire_dtype=wire,
+            dropped=drop_pm * (n * _axes_size(dist, axes)),
+            shadow_hits=shadow_hits, imbalance=imbalance)
+    else:
+        obs = ObsCounters.zero()
     metrics = MoEMetrics(
         jax.lax.pmean(load_balance_loss(g.probs, g.expert_ids, E), axes),
         jax.lax.pmean(router_z_loss(g.logits), axes),
         load,
-        jax.lax.pmean(dropped / n, axes),
+        drop_pm,
+        obs,
     )
     return y, metrics
 
@@ -638,6 +699,7 @@ def _moe_psum(x, router, experts, extra, shadow, l2p, cfg: MoEConfig, act,
             # dispatch.combine_capacity_slots)
             c = jax.lax.psum(
                 D.combine_ragged_slots(y_sorted, plan, g.combine_weights), ax)
+            psum_elems, psum_dtype = c.size, c.dtype
             if shadow:
                 # shadow rows = the sorted tail [num_owned_rows, n), shifted
                 # to offset 0 — computed on every rank, excluded from the psum
@@ -653,6 +715,7 @@ def _moe_psum(x, router, experts, extra, shadow, l2p, cfg: MoEConfig, act,
         else:  # plain path: the cheap combined (t, d) psum
             y = jax.lax.psum(
                 D.combine_ragged(y_sorted, plan, g.combine_weights), ax)
+            psum_elems, psum_dtype = y.size, y.dtype
         plan_load, plan_keep, denom = plan.group_sizes, None, n
     else:
         C = D.expert_capacity(t, E, cfg.top_k, cfg.capacity_factor)
@@ -686,6 +749,7 @@ def _moe_psum(x, router, experts, extra, shadow, l2p, cfg: MoEConfig, act,
             # into one rounding)
             c = jax.lax.psum(
                 D.combine_capacity_slots(out, plan, g.combine_weights), ax)
+            psum_elems, psum_dtype = c.size, c.dtype
             if shadow:
                 out_sh = expert_fn(shadow, buf_shadow, act)
                 c = c + D.combine_capacity_slots(shadow_only(out_sh, spec),
@@ -694,17 +758,34 @@ def _moe_psum(x, router, experts, extra, shadow, l2p, cfg: MoEConfig, act,
         else:  # plain path: the cheap combined (t, d) psum
             y = jax.lax.psum(D.combine_capacity(out, plan, g.combine_weights),
                              ax)
+            psum_elems, psum_dtype = y.size, y.dtype
         plan_load, plan_keep, denom = plan.load, plan.keep, t * cfg.top_k
     for p in extra.values():  # see _moe_a2a
         y = y + dense_ffn(p, x, act)
 
     axes = tuple(dist.token_axes)
     load, drop = load_metrics(plan_load, plan_keep, denom)
-    if table is not None:
-        load = load[table]  # logical order
     pm = (lambda v: jax.lax.pmean(v, axes)) if axes else (lambda v: v)
+    # pmean the PHYSICAL-order load first, telemetry reads it, then gather to
+    # logical order — pmean commutes with the replicated-table gather, so the
+    # monitor sees bitwise-identical values
+    load_pm = pm(load)
+    drop_pm = pm(drop)
+    if dist.obs:
+        n_ranks = _axes_size(dist, axes)
+        imbalance = _imbalance(load_pm[:E_ns], mp, E_local)
+        shadow_hits = (load_pm[E_ns:].sum() * (denom * n_ranks)
+                       if E_ns < E else jnp.zeros(()))
+        obs = obs_counters.reduction_counters(
+            payload_elems=psum_elems, payload_dtype=psum_dtype,
+            dropped=drop_pm * (denom * n_ranks),
+            shadow_hits=shadow_hits, imbalance=imbalance)
+    else:
+        obs = ObsCounters.zero()
+    if table is not None:
+        load_pm = load_pm[table]  # logical order
     metrics = MoEMetrics(pm(load_balance_loss(g.probs, g.expert_ids, E)),
-                         pm(router_z_loss(g.logits)), pm(load), pm(drop))
+                         pm(router_z_loss(g.logits)), load_pm, drop_pm, obs)
     return y, metrics
 
 
@@ -832,7 +913,8 @@ def fmoe_apply(params: dict, x: jax.Array, cfg: MoEConfig, *, act: str = "swiglu
                  for k, v in extra.items()}
         fn = functools.partial(local, cfg=cfg, act=act, expert_fn=expert_fn,
                                dist=dist, impl=impl)
-        mspec = MoEMetrics(P(), P(), P(None), P())
+        mspec = MoEMetrics(P(), P(), P(None), P(),
+                           ObsCounters(P(), P(), P(), P(), P()))
         in_specs = [tok_spec, jax.tree.map(lambda _: P(None, None), router),
                     espec, xspec, sspec]
         operands = [xf, router, experts, extra, shadow]

@@ -9,6 +9,7 @@ is the *global* per-expert arrival count, not a local estimate.
 from __future__ import annotations
 
 import json
+from collections import deque
 from typing import Optional
 
 import numpy as np
@@ -16,7 +17,8 @@ import numpy as np
 
 class LoadMonitor:
     def __init__(self, num_experts: int, *, ema: float = 0.99,
-                 num_layers: int = 0):
+                 num_layers: int = 0, history_cap: int = 512,
+                 record_every: int = 0, sink=None):
         self.num_experts = num_experts
         self.ema = ema
         self.load_ema = np.full(num_experts, 1.0 / num_experts)
@@ -29,12 +31,17 @@ class LoadMonitor:
                                 if num_layers else None)
         self.drop_ema = 0.0
         self.steps = 0
-        self.history: list = []
+        # bounded ring: long runs must not grow host memory without limit
+        self.history: deque = deque(maxlen=max(1, int(history_cap)))
+        self.record_every = record_every  # default cadence for update()
+        self.sink = sink  # optional repro.obs.sink.MetricsSink
 
-    def update(self, metrics, *, record_every: int = 0) -> None:
+    def update(self, metrics, *, record_every: Optional[int] = None) -> None:
         """metrics: repro.core.balance.MoEMetrics.  ``metrics.load`` may be
         an (E,) vector (summed over layers; renormalized here) or an (L, E)
-        per-layer stack — the latter also refreshes ``load_ema_layers``."""
+        per-layer stack — the latter also refreshes ``load_ema_layers``.
+        ``record_every`` overrides the instance default for this call; each
+        recorded snapshot also lands in the attached sink."""
         load = np.asarray(metrics.load, np.float64)
         if load.ndim == 2:
             if self.load_ema_layers is not None:
@@ -53,8 +60,13 @@ class LoadMonitor:
         self.load_ema = self.ema * self.load_ema + (1 - self.ema) * load
         self.drop_ema = self.ema * self.drop_ema + (1 - self.ema) * drop
         self.steps += 1
+        if record_every is None:
+            record_every = self.record_every
         if record_every and self.steps % record_every == 0:
-            self.history.append({"step": self.steps, **self.snapshot()})
+            rec = {"step": self.steps, **self.snapshot()}
+            self.history.append(rec)
+            if self.sink is not None:
+                self.sink.emit({"kind": "load_monitor", **rec})
 
     def snapshot(self) -> dict:
         l = self.load_ema / max(self.load_ema.sum(), 1e-12)
@@ -74,8 +86,8 @@ class LoadMonitor:
     def dump(self, path: str) -> None:
         with open(path, "w") as f:
             json.dump({"num_experts": self.num_experts, "steps": self.steps,
-                       "final": self.snapshot(), "history": self.history}, f,
-                      indent=1)
+                       "final": self.snapshot(),
+                       "history": list(self.history)}, f, indent=1)
 
 
 def expert_placement(num_experts: int, num_workers: int,

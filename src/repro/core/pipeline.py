@@ -34,6 +34,31 @@ import jax.numpy as jnp
 from jax import lax
 
 
+_BITS_FOR_BYTES = {1: jnp.uint8, 2: jnp.uint16, 4: jnp.uint32, 8: jnp.uint64}
+
+
+def _to_wire(x: jnp.ndarray, orig, wire_dtype):
+    """Narrow to the wire dtype AND bitcast to the same-width unsigned int.
+
+    The bitcast is load-bearing: XLA's convert-mover hoists a plain
+    ``convert`` past data-movement ops, so a bf16-cast payload would cross
+    the wire as the full-width original dtype (observed on XLA:CPU) — the
+    collective must *operand-type* at the wire width to actually shrink.
+    A bitcast round-trip is bit-exact, so values are unchanged.
+    """
+    if wire_dtype is None or jnp.dtype(wire_dtype) == jnp.dtype(orig):
+        return x, None
+    w = x.astype(wire_dtype)
+    return (lax.bitcast_convert_type(
+        w, _BITS_FOR_BYTES[jnp.dtype(wire_dtype).itemsize]), wire_dtype)
+
+
+def _from_wire(x: jnp.ndarray, orig, wire_dtype):
+    if wire_dtype is None:
+        return x.astype(orig)
+    return lax.bitcast_convert_type(x, wire_dtype).astype(orig)
+
+
 def ppermute_all_to_all(x: jnp.ndarray, axis, mp: int, *,
                         wire_dtype=None) -> jnp.ndarray:
     """``lax.all_to_all(x, axis, 0, 0, tiled=True)`` as mp-1 collective-permutes.
@@ -50,10 +75,9 @@ def ppermute_all_to_all(x: jnp.ndarray, axis, mp: int, *,
     instead of scheduling one blocking fused all-to-all.
     """
     orig = x.dtype
-    if wire_dtype is not None:
-        x = x.astype(wire_dtype)
+    x, wd = _to_wire(x, orig, wire_dtype)
     if mp == 1:
-        return x.astype(orig)
+        return _from_wire(x, orig, wd)
     n = x.shape[0] // mp
     idx = lax.axis_index(axis)
     own = lax.dynamic_slice_in_dim(x, idx * n, n, 0)
@@ -64,7 +88,7 @@ def ppermute_all_to_all(x: jnp.ndarray, axis, mp: int, *,
                             [(r, (r + s) % mp) for r in range(mp)])
         out = lax.dynamic_update_slice_in_dim(out, recv,
                                               ((idx - s) % mp) * n, 0)
-    return out.astype(orig)
+    return _from_wire(out, orig, wd)
 
 
 def chunked_all_to_all(x: jnp.ndarray, axis, mp: int, n_chunks: int, *,
@@ -87,9 +111,8 @@ def chunked_all_to_all(x: jnp.ndarray, axis, mp: int, n_chunks: int, *,
 def _plain_all_to_all(x, *, axis, mp, wire_dtype=None):
     del mp
     orig = x.dtype
-    if wire_dtype is not None:
-        x = x.astype(wire_dtype)
-    return lax.all_to_all(x, axis, 0, 0, tiled=True).astype(orig)
+    x, wd = _to_wire(x, orig, wire_dtype)
+    return _from_wire(lax.all_to_all(x, axis, 0, 0, tiled=True), orig, wd)
 
 
 def counts_all_to_all(counts: jnp.ndarray, axis, mp: int, *,
@@ -102,6 +125,20 @@ def counts_all_to_all(counts: jnp.ndarray, axis, mp: int, *,
     if decompose:
         return ppermute_all_to_all(counts, axis, mp)
     return lax.all_to_all(counts, axis, 0, 0, tiled=True)
+
+
+def wire_fraction(mp: int, *, decompose: bool) -> float:
+    """Fraction of a tiled dim-0 exchange that actually crosses the wire.
+
+    The ppermute decomposition keeps each rank's own slice on-chip (only the
+    mp-1 shifted slices move), so decomposed exchanges transfer (mp-1)/mp of
+    the nominal buffer — which is also exactly what the optimized HLO's
+    collective-permute output bytes sum to, keeping the device-side wire
+    counters (repro.obs.counters) 1:1 comparable with
+    ``roofline.collective_bytes``.  A monolithic all-to-all is accounted at
+    its full output size, matching its HLO op.
+    """
+    return (mp - 1) / mp if (decompose and mp > 0) else 1.0
 
 
 def resolve_chunks(requested: int, capacity: int) -> int:

@@ -39,16 +39,28 @@ def cache_len_for(cfg: ModelConfig, seq_len: int) -> int:
     return seq_len
 
 
-def make_serve_step(cfg: ModelConfig, *, dist=None):
+def make_serve_step(cfg: ModelConfig, *, dist=None, with_metrics: bool = False):
+    """``with_metrics=True`` returns a third output: a dict of scalar decode
+    telemetry (drop_frac + the repro.obs wire/drop/shadow counters, summed
+    over layers like training's loss_fn aux) — same trace, no extra syncs."""
+    L = max(cfg.num_layers, 1)
+
     def serve_step(params, tokens, pos, cache):
-        logits, new_cache, _ = lm.decode_step(params, cfg, tokens, pos, cache,
+        logits, new_cache, m = lm.decode_step(params, cfg, tokens, pos, cache,
                                               dist=dist)
-        return logits, new_cache
+        if not with_metrics:
+            return logits, new_cache
+        md = {"drop_frac": m.drop_frac / L}
+        if m.obs is not None:
+            md.update(wire_elems=m.obs.wire_elems, wire_bytes=m.obs.wire_bytes,
+                      dropped=m.obs.dropped, shadow_hits=m.obs.shadow_hits,
+                      imbalance=m.obs.imbalance / L)
+        return logits, new_cache, md
     return serve_step
 
 
 def jit_serve_step(cfg: ModelConfig, mesh, batch: int, seq_len: int, *,
-                   opts: dict | None = None):
+                   opts: dict | None = None, with_metrics: bool = False):
     """Sharding-annotated decode step for the production mesh.
 
     opts["serve_tp"] keeps weights TP-resident (no FSDP over data) — at
@@ -89,9 +101,10 @@ def jit_serve_step(cfg: ModelConfig, mesh, batch: int, seq_len: int, *,
     tshard = jax.sharding.NamedSharding(mesh, batch_spec(batch, mesh))
     rep = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
     dist = moe_dist(cfg, mesh, batch, opts=opts)
-    fn = make_serve_step(cfg, dist=dist)
+    fn = make_serve_step(cfg, dist=dist, with_metrics=with_metrics)
+    oshard = (None, cshard, None) if with_metrics else (None, cshard)
     return jax.jit(fn, in_shardings=(pshard, tshard, rep, cshard),
-                   out_shardings=(None, cshard), donate_argnums=(3,)), cache_shape
+                   out_shardings=oshard, donate_argnums=(3,)), cache_shape
 
 
 def generate(params, cfg: ModelConfig, prompt: jax.Array, steps: int, *,
@@ -197,7 +210,20 @@ def main() -> None:
                     help="measure per-layer expert load on the prompt and "
                          "serve under a per-layer placement (decode-time "
                          "shadowing; needs --mesh and an MoE arch)")
+    ap.add_argument("--metrics_out", default="",
+                    help="write per-decode-step telemetry (JSONL): latency, "
+                         "tokens/sec, device-side wire/drop/shadow counters "
+                         "(repro.obs; needs --mesh)")
+    ap.add_argument("--trace", default="",
+                    help="write a Chrome trace of host-side decode_step "
+                         "spans (chrome://tracing / perfetto)")
     args = ap.parse_args()
+
+    from repro.obs import JsonlSink
+    from repro.obs import trace as obs_trace
+    sink = JsonlSink(args.metrics_out) if args.metrics_out else None
+    if args.trace:
+        obs_trace.configure(enabled=True)
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -217,17 +243,40 @@ def main() -> None:
             print(f"serving plan: shadow={plan.num_shadow} "
                   f"cap_scale={plan.capacity_scale:.2f}")
         seq_len = args.prompt_len + args.gen
-        step, _ = jit_serve_step(cfg, mesh, args.batch, seq_len, opts=opts)
+        step, _ = jit_serve_step(cfg, mesh, args.batch, seq_len, opts=opts,
+                                 with_metrics=sink is not None)
         cache = lm.init_cache(cfg, args.batch, cache_len_for(cfg, seq_len))
         tok, out = prompt[:, :1], [prompt[:, :1]]
+        telemetry = sink is not None or obs_trace.enabled()
+        lat: list = []
         t0 = time.time()
         with mesh:
             for pos in range(seq_len - 1):
-                logits, cache = step(params, tok, jnp.int32(pos), cache)
+                ts = time.time()
+                with obs_trace.span("decode_step", pos=pos):
+                    res = step(params, tok, jnp.int32(pos), cache)
+                    logits, cache = res[0], res[1]
+                    if telemetry:  # real per-step latency, not dispatch time
+                        jax.block_until_ready(logits)
+                lat.append(time.time() - ts)
+                if sink is not None:
+                    rec = {"kind": "decode_step", "pos": pos,
+                           "wall_s": lat[-1],
+                           "tokens_per_s": args.batch / max(lat[-1], 1e-9)}
+                    if len(res) > 2:
+                        rec.update({k: float(v) for k, v in res[2].items()})
+                    sink.emit(rec)
                 tok = (prompt[:, pos + 1:pos + 2] if pos + 1 < args.prompt_len
                        else jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32))
                 out.append(tok)
         seq = jnp.concatenate(out, axis=1)
+        if len(lat) > 1:
+            # steady-state decode latency (skip step 0: it pays the compile)
+            srt = sorted(lat[1:])
+            p50 = srt[len(srt) // 2]
+            p99 = srt[min(len(srt) - 1, int(len(srt) * 0.99))]
+            print(f"decode: {len(lat)} steps, p50 {p50 * 1e3:.1f}ms "
+                  f"p99 {p99 * 1e3:.1f}ms")
     else:
         t0 = time.time()
         seq = generate(params, cfg, prompt, args.gen)
@@ -235,6 +284,12 @@ def main() -> None:
     print(f"generated {args.batch}x{args.gen} tokens in {dt:.2f}s "
           f"({args.batch * args.gen / dt:.1f} tok/s)")
     print(seq[0])
+    if sink is not None:
+        sink.close()
+        print(f"metrics written to {args.metrics_out}")
+    if args.trace:
+        obs_trace.export(args.trace)
+        print(f"trace written to {args.trace}")
 
 
 if __name__ == "__main__":

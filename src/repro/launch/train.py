@@ -121,7 +121,11 @@ def make_train_step(cfg: ModelConfig, opt: AdamW, *, dist=None,
             aux0 = {"ce": jnp.zeros(()), "aux_loss": jnp.zeros(()),
                     "z_loss": jnp.zeros(()), "drop_frac": jnp.zeros(()),
                     "load": jnp.zeros((n_e,)),
-                    "load_layers": jnp.zeros((cfg.num_layers, n_e))}
+                    "load_layers": jnp.zeros((cfg.num_layers, n_e)),
+                    # obs counters (repro.obs) emitted by loss_fn's aux
+                    "wire_elems": jnp.zeros(()), "wire_bytes": jnp.zeros(()),
+                    "dropped": jnp.zeros(()), "shadow_hits": jnp.zeros(()),
+                    "imbalance": jnp.zeros(())}
             (grads, loss, aux), _ = jax.lax.scan(
                 body, (zero_g, jnp.zeros(()), aux0), micro)
             inv = 1.0 / num_microbatches
@@ -191,7 +195,7 @@ class ReplanHook:
     def __init__(self, cfg: ModelConfig, opt: AdamW, mesh, global_batch: int,
                  seq_len: int, *, every: int = 200,
                  num_microbatches: int = 1, opts: Optional[dict] = None,
-                 per_layer: bool = False):
+                 per_layer: bool = False, sink=None):
         from repro.core.dispatch import expert_capacity
         from repro.core.monitor import LoadMonitor
         from repro.placement import (PlacementController, identity_placement,
@@ -222,7 +226,11 @@ class ReplanHook:
         cap = expert_capacity(t_local, moe.num_experts, moe.top_k,
                               moe.capacity_factor)
         L = cfg.num_layers if per_layer else 0
-        self.monitor = LoadMonitor(moe.num_experts, num_layers=L)
+        self.sink = sink  # optional repro.obs MetricsSink (replan events +
+        # the monitor's sampled load snapshots land here)
+        # updates arrive pre-sampled (every sync_every steps), so record each
+        self.monitor = LoadMonitor(moe.num_experts, num_layers=L, sink=sink,
+                                   record_every=1 if sink is not None else 0)
         # price plans with bandwidths measured on THIS machine when the
         # benchmark suite has left results behind (v5e roofline otherwise),
         # and with the bytes the wire actually moves under wire_dtype
@@ -270,12 +278,21 @@ class ReplanHook:
         new = self.controller.maybe_replan(step)
         if new is None:
             return params, opt_state, None
-        step_fn, pshard, oshard = jit_train_step(
-            self.cfg, self.opt, self.mesh, self.global_batch, self.seq_len,
-            num_microbatches=self.num_microbatches, opts=self.opts,
-            placement=new)
-        params = jax.device_put(migrate(params, old, new), pshard)
-        opt_state = jax.device_put(migrate(opt_state, old, new), oshard)
+        from repro.obs import trace as obs_trace
+        with obs_trace.span("replan", step=step):
+            step_fn, pshard, oshard = jit_train_step(
+                self.cfg, self.opt, self.mesh, self.global_batch, self.seq_len,
+                num_microbatches=self.num_microbatches, opts=self.opts,
+                placement=new)
+            with obs_trace.span("migrate", step=step):
+                params = jax.device_put(migrate(params, old, new), pshard)
+                opt_state = jax.device_put(migrate(opt_state, old, new),
+                                           oshard)
+        if self.sink is not None:
+            self.sink.emit({"kind": "replan", "step": step,
+                            "num_shadow": int(new.num_shadow),
+                            "capacity_scale": float(new.capacity_scale),
+                            "imbalance": self.monitor.imbalance})
         return params, opt_state, step_fn
 
 
@@ -325,7 +342,21 @@ def main() -> None:
                     help="ragged exchange: rows per peer shard (static "
                          "pad-to-max-per-peer width; 0 = local tokens * "
                          "top_k, which never drops)")
+    ap.add_argument("--metrics_out", default="",
+                    help="write per-step telemetry records (JSONL): wall "
+                         "time, device-side wire/drop/shadow counters, "
+                         "HLO-modeled collective bytes, monitor snapshots "
+                         "and replan events (repro.obs)")
+    ap.add_argument("--trace", default="",
+                    help="write a Chrome trace (chrome://tracing / perfetto) "
+                         "of host-side spans: train_step, replan, migrate")
     args = ap.parse_args()
+
+    from repro.obs import JsonlSink, StepStats, modeled_collective_bytes
+    from repro.obs import trace as obs_trace
+    sink = JsonlSink(args.metrics_out) if args.metrics_out else None
+    if args.trace:
+        obs_trace.configure(enabled=True)
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -353,7 +384,7 @@ def main() -> None:
             hook = ReplanHook(cfg, opt, mesh, args.batch, args.seq,
                               every=args.replan_every,
                               num_microbatches=args.microbatches, opts=opts,
-                              per_layer=args.per_layer_plans)
+                              per_layer=args.per_layer_plans, sink=sink)
             if not hook.enabled:  # no a2a path here: skip the per-step sync
                 print("replan disabled: placement needs the a2a expert path")
                 hook = None
@@ -364,19 +395,47 @@ def main() -> None:
                                           num_microbatches=args.microbatches,
                                           impl=args.impl))
 
+    def modeled_of(fn, p, o, b, s):
+        # HLO-derived collective bytes for the StepStats modeled-vs-measured
+        # comparison; the AOT lowering shares nothing with fn's jit cache, so
+        # only pay for it when telemetry asked for it
+        try:
+            return modeled_collective_bytes(
+                fn.lower(p, o, b, jnp.int32(s)).compile())
+        except Exception:
+            return {}
+
+    telemetry = sink is not None or obs_trace.enabled()
+    modeled: dict = {}
     data = SyntheticLM(cfg.vocab_size, args.seq)
     t0 = time.time()
     for step, batch in enumerate(data.batches(args.batch)):
         if step >= args.steps:
             break
         batch = {k: jnp.asarray(v) for k, v in batch.items()}
-        params, opt_state, metrics = step_fn(params, opt_state, batch,
-                                             jnp.int32(step))
+        if step == 0 and sink is not None:
+            modeled = modeled_of(step_fn, params, opt_state, batch, step)
+        ts = time.time()
+        with obs_trace.span("train_step", step=step):
+            params, opt_state, metrics = step_fn(params, opt_state, batch,
+                                                 jnp.int32(step))
+            if telemetry:  # real wall times: don't let dispatch run ahead
+                jax.block_until_ready(metrics)
+        if sink is not None:
+            counters = {k: float(metrics[k])
+                        for k in ("loss", "drop_frac", "wire_elems",
+                                  "wire_bytes", "dropped", "shadow_hits",
+                                  "imbalance") if k in metrics}
+            sink.emit(StepStats("train_step", step, time.time() - ts,
+                                counters=counters, modeled=modeled).record())
         if hook is not None:
             params, opt_state, new_fn = hook.observe(step, metrics, params,
                                                      opt_state)
             if new_fn is not None:
                 step_fn = new_fn
+                if sink is not None:  # new layout -> new collective profile
+                    modeled = modeled_of(step_fn, params, opt_state, batch,
+                                         step)
                 p = hook.placement
                 print(f"step {step:5d} replan: shadow={p.num_shadow} "
                       f"cap_scale={p.capacity_scale:.2f} "
@@ -386,6 +445,12 @@ def main() -> None:
                   f"gnorm {float(metrics['grad_norm']):.3f} "
                   f"({time.time() - t0:.1f}s)")
     print(f"done: {args.steps} steps in {time.time() - t0:.1f}s")
+    if sink is not None:
+        sink.close()
+        print(f"metrics written to {args.metrics_out}")
+    if args.trace:
+        obs_trace.export(args.trace)
+        print(f"trace written to {args.trace}")
 
 
 if __name__ == "__main__":

@@ -207,6 +207,13 @@ def loss_fn(params: dict, cfg: ModelConfig, batch: dict, *,
            "drop_frac": metrics.drop_frac / L,
            "load": metrics.load / L,  # per-expert load for the §6 monitor
            "load_layers": loads}  # (L, E) per-layer load (per-layer planner)
+    obs = metrics.obs
+    if obs is not None:
+        # device-side telemetry (repro.obs.counters), summed over layers —
+        # rides the same device->host transfer as the loss
+        aux.update(wire_elems=obs.wire_elems, wire_bytes=obs.wire_bytes,
+                   dropped=obs.dropped, shadow_hits=obs.shadow_hits,
+                   imbalance=obs.imbalance / L)  # per-layer avg
     return loss, aux
 
 

@@ -1,0 +1,100 @@
+"""Device-side telemetry counters riding the MoE metrics pytree.
+
+One :class:`ObsCounters` per MoE layer, accumulated across layers by the
+model's layer scan exactly like the rest of :class:`repro.core.balance.
+MoEMetrics` — the counters are ordinary array leaves of the metrics output,
+so they reach the host on the same transfer as the loss and add **zero**
+extra device→host syncs (tests/test_obs.py locks the stronger property:
+zero extra collectives in the optimized HLO, byte-for-byte).
+
+The fields are derived only from (a) trace-time constants — buffer shapes,
+wire dtypes, the ppermute decomposition factor — and (b) values the
+distributed paths already reduce for the load monitor (the Fig-2 counts
+exchange / psum'd group sizes and the pmean'd drop fraction).  That is what
+keeps them free: no counter introduces a collective of its own.
+
+Semantics (per train/decode step, summed over MoE layers):
+
+  wire_elems / wire_bytes — elements/bytes of the expert exchange that
+    actually cross the wire **per device**: dispatch + return payloads (at
+    ``DistConfig.wire_dtype`` width) plus the counts exchange, scaled by
+    (mp-1)/mp when the §5.2 schedule decomposes the all-to-all into
+    ppermutes (a rank's own slice never leaves the chip).  Comparable 1:1
+    with ``roofline.collective_bytes`` parsed from the optimized HLO.
+  dropped — (token, slot) assignments dropped **globally** (capacity
+    overflow or ragged-bound overflow).
+  shadow_hits — assignments served by shadowed (replicated) hot experts
+    globally; these rows never cross the wire.
+  imbalance — max/mean of per-expert-rank received load (1.0 = perfectly
+    balanced).  Summed over layers like the rest; divide by num_layers for
+    the per-layer average (models/lm.loss_fn does).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ObsCounters(NamedTuple):
+    """Per-layer device-side counters (all f32 scalars, '+'-accumulable)."""
+
+    wire_elems: jax.Array  # exchange elements crossing the wire, per device
+    wire_bytes: jax.Array  # same in bytes (payload at wire_dtype + counts)
+    dropped: jax.Array  # global dropped (token, slot) assignments
+    shadow_hits: jax.Array  # global assignments served by shadowed experts
+    imbalance: jax.Array  # max/mean per-rank received load (1.0 = balanced)
+
+    @staticmethod
+    def zero() -> "ObsCounters":
+        z = jnp.zeros(())
+        return ObsCounters(z, z, z, z, z)
+
+    def __add__(self, other: "ObsCounters") -> "ObsCounters":
+        return ObsCounters(*(a + b for a, b in zip(self, other)))
+
+    def as_dict(self) -> dict:
+        return dict(zip(self._fields, self))
+
+
+def exchange_counters(*, frac: float, fwd_rows: int, d_in: int, in_dtype,
+                      ret_rows: int, d_out: int, out_dtype, counts_elems: int,
+                      wire_dtype=None, dropped, shadow_hits,
+                      imbalance) -> ObsCounters:
+    """Counters for one a2a-style exchange (capacity or ragged).
+
+    ``frac`` is the wire fraction of the nominal buffer (see
+    ``repro.core.pipeline.wire_fraction``); payload widths honor
+    ``wire_dtype`` when the exchange casts across the wire, the counts leg
+    is always int32.  ``dropped`` / ``shadow_hits`` / ``imbalance`` are the
+    already-reduced values the caller derived from existing collectives.
+    """
+    bi = jnp.dtype(wire_dtype if wire_dtype is not None else in_dtype).itemsize
+    bo = jnp.dtype(wire_dtype if wire_dtype is not None else out_dtype).itemsize
+    elems = frac * (fwd_rows * d_in + ret_rows * d_out + counts_elems)
+    byts = frac * (fwd_rows * d_in * bi + ret_rows * d_out * bo
+                   + counts_elems * 4)
+    return ObsCounters(jnp.float32(elems), jnp.float32(byts),
+                       jnp.asarray(dropped, jnp.float32),
+                       jnp.asarray(shadow_hits, jnp.float32),
+                       jnp.asarray(imbalance, jnp.float32))
+
+
+def reduction_counters(*, payload_elems: int, payload_dtype, dropped,
+                       shadow_hits, imbalance) -> ObsCounters:
+    """Counters for the psum (decode) mode: one all-reduce of the combined
+    output is the only wire traffic (there is no counts leg)."""
+    b = jnp.dtype(payload_dtype).itemsize
+    return ObsCounters(jnp.float32(payload_elems),
+                       jnp.float32(payload_elems * b),
+                       jnp.asarray(dropped, jnp.float32),
+                       jnp.asarray(shadow_hits, jnp.float32),
+                       jnp.asarray(imbalance, jnp.float32))
+
+
+def local_counters(*, dropped) -> ObsCounters:
+    """Single-worker path: nothing crosses any wire."""
+    z = jnp.zeros(())
+    return ObsCounters(z, z, jnp.asarray(dropped, jnp.float32), z,
+                       jnp.float32(1.0))

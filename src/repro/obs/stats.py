@@ -1,0 +1,59 @@
+"""StepStats: one record merging measured wall time + device-side counters
+with the HLO-derived *modeled* collective bytes (repro.launch.roofline) —
+the modeled-vs-measured comparison the ROADMAP's wire-byte evidence calls
+for, in a shape any MetricsSink can emit.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+
+def modeled_collective_bytes(compiled_or_text) -> dict:
+    """Per-op-type collective bytes from a compiled step (or its HLO text)."""
+    from repro.launch.roofline import collective_bytes
+
+    text = (compiled_or_text if isinstance(compiled_or_text, str)
+            else compiled_or_text.as_text())
+    return collective_bytes(text)
+
+
+@dataclass
+class StepStats:
+    """One step's telemetry: wall time, device counters, modeled bytes."""
+
+    name: str
+    step: int
+    wall_s: float
+    counters: dict = field(default_factory=dict)  # measured (device-side)
+    modeled: dict = field(default_factory=dict)  # HLO collective bytes by op
+
+    @property
+    def measured_wire_bytes(self) -> Optional[float]:
+        v = self.counters.get("wire_bytes")
+        return float(v) if v is not None else None
+
+    @property
+    def modeled_wire_bytes(self) -> float:
+        """The exchange ops the wire counters cover: all-to-all when the
+        schedule is serial, collective-permute when ppermute-decomposed."""
+        return float(self.modeled.get("all-to-all", 0)
+                     + self.modeled.get("collective-permute", 0))
+
+    @property
+    def wire_ratio(self) -> Optional[float]:
+        m = self.measured_wire_bytes
+        if m is None or not self.modeled:
+            return None
+        return m / max(self.modeled_wire_bytes, 1e-9)
+
+    def record(self) -> dict:
+        """Flat dict for a MetricsSink."""
+        rec = {"kind": self.name, "step": self.step, "wall_s": self.wall_s}
+        rec.update({k: v for k, v in self.counters.items()})
+        for op, b in self.modeled.items():
+            rec[f"modeled_{op.replace('-', '_')}_bytes"] = b
+        r = self.wire_ratio
+        if r is not None:
+            rec["wire_measured_over_modeled"] = r
+        return rec

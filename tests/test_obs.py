@@ -1,0 +1,410 @@
+"""Unified telemetry (repro.obs): device-side wire/drop/shadow counters on
+the MoE metrics pytree, the host-side span tracer, and the pluggable
+metrics sinks.
+
+The wire counters' contract is strong: for every distributed schedule
+(serial a2a, ppermute-decomposed, bf16 wire, ragged/dropless) the counter
+must equal BOTH the hand-computed exchange size AND the optimized HLO's
+collective output bytes (roofline.collective_bytes) — and turning the
+counters off (DistConfig.obs=False) must leave the program's collectives
+byte-for-byte unchanged, i.e. telemetry is free.
+"""
+import json
+import os
+from types import SimpleNamespace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import dist_utils as du
+from repro.core.monitor import LoadMonitor
+from repro.obs import sink as obs_sink
+from repro.obs import trace as obs_trace
+from repro.obs.counters import ObsCounters
+from repro.obs.stats import StepStats, modeled_collective_bytes
+
+
+# ---------------------------------------------------------------------------
+# Counters: single-device semantics + pytree accumulation
+# ---------------------------------------------------------------------------
+
+
+def test_local_counters_single_device():
+    """No dist: nothing crosses any wire; dropped = drop_frac * (T * k)."""
+    env = du.moe_env(capacity_factor=0.5)  # force capacity overflow
+    y, m = du.oracle(env)
+    T = env.x.shape[0] * env.x.shape[1]
+    assert float(m.obs.wire_elems) == 0.0
+    assert float(m.obs.wire_bytes) == 0.0
+    assert float(m.obs.shadow_hits) == 0.0
+    assert float(m.obs.imbalance) == 1.0
+    assert float(m.drop_frac) > 0.0
+    np.testing.assert_allclose(float(m.obs.dropped),
+                               float(m.drop_frac) * T * env.cfg.top_k,
+                               rtol=1e-5)
+
+
+def test_counters_accumulate_like_metrics():
+    """ObsCounters is '+'-accumulable (the layer scan sums it)."""
+    a = ObsCounters(*(jnp.float32(v) for v in (1, 2, 3, 4, 1.5)))
+    b = ObsCounters(*(jnp.float32(v) for v in (10, 20, 30, 40, 0.5)))
+    s = a + b
+    assert [float(v) for v in s] == [11, 22, 33, 44, 2.0]
+    z = ObsCounters.zero()
+    assert [float(v) for v in (z + a)] == [float(v) for v in a]
+    d = a.as_dict()
+    assert set(d) == {"wire_elems", "wire_bytes", "dropped", "shadow_hits",
+                      "imbalance"}
+
+
+# ---------------------------------------------------------------------------
+# Multi-rank wire counters: hand math == device counter == optimized HLO
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.tier1
+def test_wire_counters_match_hand_math_and_hlo():
+    out = du.run("""
+    import numpy as np, jax, jax.numpy as jnp
+    import dist_utils as du
+    from repro.core import fmoe
+    from repro.core.dispatch import expert_capacity
+    from repro.launch.roofline import collective_bytes
+
+    E, k, d = 8, 2, 32
+    mesh = du.make_mesh(2, 4)  # tokens over 8 ranks, experts over mp=4
+    axes = ("data", "model")
+    mp, shards = 4, 8
+    env = du.moe_env()          # T=128, capacity_factor=8 (no drops)
+    t = 128 // shards
+    C = expert_capacity(t, E, k, env.cfg.capacity_factor)
+
+    def run(env, dist, params=None):
+        with mesh:
+            fn = jax.jit(lambda p, x: fmoe.fmoe_apply(p, x, env.cfg,
+                                                      dist=dist))
+            p = env.params if params is None else params
+            y, m = fn(p, env.x)
+            # lower the FULL (y, m) program so the counts leg isn't DCE'd
+            txt = fn.lower(p, env.x).compile().as_text()
+        cb = collective_bytes(txt)
+        return m, float(cb.get("all-to-all", 0)
+                        + cb.get("collective-permute", 0))
+
+    # serial capacity a2a, f32 wire: full (E, C, d) payload each way + the
+    # int32 Fig-2 counts exchange
+    m, hlo = run(env, fmoe.DistConfig(mesh, axes))
+    elems = E * C * d * 2 + E
+    assert float(m.obs.wire_elems) == elems, (float(m.obs.wire_elems), elems)
+    assert float(m.obs.wire_bytes) == 4 * elems
+    assert float(m.obs.wire_bytes) == hlo, (float(m.obs.wire_bytes), hlo)
+    assert float(m.obs.dropped) == 0.0
+    assert float(m.obs.shadow_hits) == 0.0
+    assert float(m.obs.imbalance) >= 1.0
+
+    # bf16 wire: payload bytes halve, counts leg stays int32
+    m, hlo = run(env, fmoe.DistConfig(mesh, axes, wire_dtype="bf16"))
+    b = E * C * d * 2 * 2 + E * 4
+    assert float(m.obs.wire_bytes) == b, (float(m.obs.wire_bytes), b)
+    assert float(m.obs.wire_bytes) == hlo, (float(m.obs.wire_bytes), hlo)
+
+    # ppermute-decomposed pipeline: a rank's own slice never moves, so only
+    # (mp-1)/mp of every leg (payloads AND counts) crosses the wire
+    m, hlo = run(env, fmoe.DistConfig(mesh, axes, overlap_chunks=2))
+    b = 0.75 * 4 * (E * C * d * 2 + E)
+    assert float(m.obs.wire_bytes) == b, (float(m.obs.wire_bytes), b)
+    assert float(m.obs.wire_bytes) == hlo, (float(m.obs.wire_bytes), hlo)
+
+    # ragged (dropless): pad-to-max-per-peer shards, B = t*k rows per peer
+    env_r = du.moe_env(dispatch="ragged")
+    B = t * k
+    m, hlo = run(env_r, fmoe.DistConfig(mesh, axes))
+    elems = mp * B * d * 2 + E
+    assert float(m.obs.wire_elems) == elems, (float(m.obs.wire_elems), elems)
+    assert float(m.obs.wire_bytes) == 4 * elems
+    assert float(m.obs.wire_bytes) == hlo, (float(m.obs.wire_bytes), hlo)
+    assert float(m.obs.dropped) == 0.0
+
+    # shadowed hot experts: skewed router sends every assignment to the two
+    # shadowed experts -> shadow_hits counts ALL global (token, slot) pairs
+    from repro.placement import from_logical
+    envh = du.skew_router(du.moe_env())
+    pl = du.hot_shadow_plan(np.array([10, 5, 3, 3, 2, 2, 1, 1], float), 4, 4)
+    m, hlo = run(envh, fmoe.DistConfig(mesh, axes, placement=pl),
+                 params=from_logical(envh.params, pl))
+    assert float(m.obs.shadow_hits) == 128 * k, float(m.obs.shadow_hits)
+    assert float(m.obs.dropped) == 0.0
+
+    # psum (decode) mode: tokens sharded over data only -> one (t, d)
+    # all-reduce is the entire wire traffic (no counts leg)
+    m, _ = run(env, fmoe.DistConfig(mesh, ("data",)))
+    t_ps = 128 // 2
+    assert float(m.obs.wire_elems) == t_ps * d, float(m.obs.wire_elems)
+    assert float(m.obs.wire_bytes) == t_ps * d * 4
+    assert float(m.obs.imbalance) >= 1.0
+    print("wire counters ok")
+    """, devices=8)
+    assert "wire counters ok" in out
+
+
+@pytest.mark.tier1
+def test_obs_off_leaves_collectives_byte_identical():
+    """DistConfig.obs gates the counters; the HLO regression locking in
+    'telemetry is free': obs=True vs obs=False programs have identical
+    collective ops, byte for byte."""
+    out = du.run("""
+    import re
+    import jax
+    import dist_utils as du
+    from repro.core import fmoe
+    from repro.launch.roofline import collective_bytes
+
+    # op DEFINITIONS only (result names recur as operand references, so a
+    # raw substring count is meaningless); -start counted once, -done not
+    OPRE = re.compile(r"=\\s*[^=]*?(all-reduce|all-gather|reduce-scatter"
+                      r"|all-to-all|collective-permute)(-start)?\\(")
+
+    def op_counts(txt):
+        c = {}
+        for m in OPRE.finditer(txt):
+            c[m.group(1)] = c.get(m.group(1), 0) + 1
+        return c
+
+    mesh = du.make_mesh(1, 4)
+    for dispatch, kw in (("capacity", {}), ("capacity",
+                         dict(overlap_chunks=2, wire_dtype="bf16")),
+                        ("ragged", {})):
+        env = du.moe_env(dispatch=dispatch)
+        txts = {}
+        for obs in (True, False):
+            dist = fmoe.DistConfig(mesh, ("data", "model"), obs=obs, **kw)
+            with mesh:
+                fn = jax.jit(lambda p, x: fmoe.fmoe_apply(p, x, env.cfg,
+                                                          dist=dist))
+                txts[obs] = fn.lower(env.params, env.x).compile().as_text()
+        cb_on, cb_off = (collective_bytes(txts[o]) for o in (True, False))
+        assert cb_on == cb_off, (dispatch, kw, cb_on, cb_off)
+        assert op_counts(txts[True]) == op_counts(txts[False]), (
+            dispatch, kw, op_counts(txts[True]), op_counts(txts[False]))
+    print("obs off identical")
+    """, devices=4)
+    assert "obs off identical" in out
+
+
+# ---------------------------------------------------------------------------
+# Span tracer
+# ---------------------------------------------------------------------------
+
+
+def test_tracer_nesting_and_export_roundtrip(tmp_path):
+    tr = obs_trace.Tracer(enabled=True)
+    with tr.span("outer", step=1) as s:
+        assert isinstance(s, dict)
+        with tr.span("inner"):
+            pass
+        s["tokens"] = 7  # body can attach results to the span args
+    evs = tr.events
+    assert [e["name"] for e in evs] == ["inner", "outer"]  # close order
+    inner, outer = evs
+    assert outer["args"]["depth"] == 0 and inner["args"]["depth"] == 1
+    assert outer["args"]["tokens"] == 7 and outer["args"]["step"] == 1
+    assert outer["dur"] >= inner["dur"] >= 0
+
+    path = tr.export(str(tmp_path / "trace.json"))
+    back = obs_trace.load_trace(path)
+    assert back["traceEvents"] == evs
+    assert all(e["ph"] == "X" for e in back["traceEvents"])
+
+
+def test_tracer_disabled_is_noop_and_ring_bounded(tmp_path):
+    tr = obs_trace.Tracer(enabled=False)
+    with tr.span("x") as s:
+        assert s is None
+    assert tr.events == []
+
+    tr = obs_trace.Tracer(enabled=True, max_events=3)
+    for i in range(10):
+        with tr.span(f"s{i}"):
+            pass
+    assert [e["name"] for e in tr.events] == ["s7", "s8", "s9"]
+
+    # module-level singleton: disabled by default, one configure() lights it
+    assert not obs_trace.enabled()
+    try:
+        obs_trace.configure(enabled=True, max_events=16)
+        with obs_trace.span("global"):
+            pass
+        assert [e["name"] for e in obs_trace.get().events] == ["global"]
+    finally:
+        obs_trace.configure(enabled=False)
+
+
+# ---------------------------------------------------------------------------
+# Metrics sinks
+# ---------------------------------------------------------------------------
+
+
+def test_jsonl_sink_roundtrip_and_append(tmp_path):
+    p = str(tmp_path / "m.jsonl")
+    with obs_sink.JsonlSink(p) as s:
+        s.emit({"kind": "a", "v": jnp.float32(1.5), "arr": np.arange(3)})
+    with obs_sink.JsonlSink(p, append=True) as s:
+        s.emit({"kind": "b", "v": 2})
+    recs = obs_sink.jsonl_records(p)
+    assert recs == [{"kind": "a", "v": 1.5, "arr": [0, 1, 2]},
+                    {"kind": "b", "v": 2}]  # device values coerced to Python
+
+
+def test_csv_sink_locks_columns(tmp_path):
+    p = str(tmp_path / "m.csv")
+    with obs_sink.CsvSink(p) as s:
+        s.emit({"a": 1, "b": 2})
+        s.emit({"a": 3, "b": 4, "c": 5})  # extra key dropped
+        s.emit({"a": 6})  # missing key left empty
+    lines = open(p).read().strip().splitlines()
+    assert lines[0] == "a,b"
+    assert lines[1:] == ["1,2", "3,4", "6,"]
+
+
+def test_memory_and_multi_sink():
+    mem = obs_sink.MemorySink(capacity=2)
+    for i in range(5):
+        mem.emit({"i": i})
+    assert [r["i"] for r in mem.records] == [3, 4]  # bounded ring
+
+    a, b = obs_sink.MemorySink(), obs_sink.MemorySink()
+    multi = obs_sink.MultiSink(a, None, b)  # None sinks are skipped
+    multi.emit({"x": jnp.float32(2.0)})
+    assert a.records == b.records == [{"x": 2.0}]
+
+
+# ---------------------------------------------------------------------------
+# LoadMonitor: bounded history + sink emission
+# ---------------------------------------------------------------------------
+
+
+def _fake_metrics(E=8, drop=0.25):
+    load = np.ones(E)
+    load[0] = 2.0
+    return SimpleNamespace(load=load, drop_frac=drop)
+
+
+def test_load_monitor_history_bounded_and_sink_fed():
+    sink = obs_sink.MemorySink()
+    mon = LoadMonitor(8, history_cap=4, record_every=1, sink=sink)
+    for _ in range(10):
+        mon.update(_fake_metrics())
+    assert len(mon.history) == 4  # ring: old snapshots evicted
+    assert mon.history[-1]["step"] == 10
+    assert len(sink.records) == 10  # sink saw every recorded snapshot
+    assert all(r["kind"] == "load_monitor" for r in sink.records)
+    assert sink.records[-1]["imbalance"] > 1.0
+
+
+def test_load_monitor_record_every_default_and_override():
+    mon = LoadMonitor(8, record_every=2)
+    for _ in range(6):
+        mon.update(_fake_metrics())  # instance default cadence
+    assert [r["step"] for r in mon.history] == [2, 4, 6]
+    mon.update(_fake_metrics(), record_every=7)
+    assert [r["step"] for r in mon.history] == [2, 4, 6, 7]
+    mon2 = LoadMonitor(8)  # record_every=0: never records, never grows
+    for _ in range(5):
+        mon2.update(_fake_metrics())
+    assert len(mon2.history) == 0
+
+
+# ---------------------------------------------------------------------------
+# StepStats: measured counters vs modeled HLO bytes
+# ---------------------------------------------------------------------------
+
+
+def test_step_stats_record_and_wire_ratio():
+    st = StepStats("train_step", 3, 0.5,
+                   counters={"wire_bytes": 50.0, "loss": 1.25},
+                   modeled={"all-to-all": 80, "collective-permute": 20,
+                            "all-reduce": 999})
+    assert st.measured_wire_bytes == 50.0
+    assert st.modeled_wire_bytes == 100.0  # a2a + cp only; all-reduce is not wire
+    assert st.wire_ratio == 0.5
+    rec = st.record()
+    assert rec["kind"] == "train_step" and rec["step"] == 3
+    assert rec["wall_s"] == 0.5 and rec["loss"] == 1.25
+    assert rec["modeled_all_to_all_bytes"] == 80
+    assert rec["modeled_all_reduce_bytes"] == 999
+    assert rec["wire_measured_over_modeled"] == 0.5
+
+    empty = StepStats("s", 0, 0.1)
+    assert empty.measured_wire_bytes is None and empty.wire_ratio is None
+    assert "wire_measured_over_modeled" not in empty.record()
+
+
+def test_modeled_collective_bytes_parses_hlo_text():
+    txt = ("%a = f32[128,32]{1,0} all-to-all(%x), dimensions={0}\n"
+           "%b = bf16[64]{0} collective-permute-start(%y)\n")
+    cb = modeled_collective_bytes(txt)
+    assert cb == {"all-to-all": 128 * 32 * 4, "collective-permute": 64 * 2}
+
+
+# ---------------------------------------------------------------------------
+# Serve + train integration
+# ---------------------------------------------------------------------------
+
+
+def test_serve_step_with_metrics_single_device():
+    import dataclasses
+
+    from repro.configs import get_config, reduced
+    from repro.launch.serve import make_serve_step
+    from repro.models import lm
+
+    cfg = reduced(get_config("fastmoe-gpt"))
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    cache = lm.init_cache(cfg, 1, cache_len=8)
+    tok = jnp.zeros((1, 1), jnp.int32)
+
+    step = make_serve_step(cfg, with_metrics=True)
+    logits, cache, md = step(params, tok, jnp.int32(0), cache)
+    assert set(md) >= {"drop_frac", "wire_elems", "wire_bytes", "dropped",
+                       "shadow_hits", "imbalance"}
+    assert float(md["wire_bytes"]) == 0.0  # single device: no wire
+    assert float(md["imbalance"]) == 1.0
+
+    plain = make_serve_step(cfg, with_metrics=False)
+    assert len(plain(params, tok, jnp.int32(0),
+                     lm.init_cache(cfg, 1, cache_len=8))) == 2
+
+
+@pytest.mark.tier1
+def test_train_cli_metrics_out_and_trace(tmp_path):
+    """--metrics_out/--trace end to end on a 1x2 mesh: per-step JSONL
+    records carrying the device wire counters + a loadable Chrome trace."""
+    mpath = str(tmp_path / "metrics.jsonl")
+    tpath = str(tmp_path / "trace.json")
+    out = du.run_cli(
+        ["repro.launch.train", "--arch", "fastmoe-gpt", "--reduced",
+         "--steps", "2", "--batch", "4", "--seq", "32", "--mesh", "1x2",
+         "--log_every", "1", "--metrics_out", mpath, "--trace", tpath],
+        devices=2)
+    assert "done: 2 steps" in out, out
+
+    recs = obs_sink.jsonl_records(mpath)
+    steps = [r for r in recs if r.get("kind") == "train_step"]
+    assert [r["step"] for r in steps] == [0, 1]
+    for r in steps:
+        assert r["wall_s"] > 0
+        assert r["wire_bytes"] > 0  # distributed a2a: wire traffic measured
+        assert r["wire_elems"] > 0
+        assert "loss" in r and "imbalance" in r
+        # modeled HLO bytes rode along (AOT-lowered step)
+        assert any(k.startswith("modeled_") for k in r)
+
+    trace = obs_trace.load_trace(tpath)
+    names = {e["name"] for e in trace["traceEvents"]}
+    assert "train_step" in names
+    assert all(e["ph"] == "X" and e["dur"] >= 0
+               for e in trace["traceEvents"])

@@ -83,7 +83,52 @@ for dispatch in ("capacity", "ragged"):
                       "wire_bytes": meas, "hlo_fwd_bytes": hlo_wire,
                       "dropped": float(m.obs.dropped),
                       "imbalance": float(m.obs.imbalance)}})
-for d in ("capacity", "ragged"):
+
+# two-level ragged exchange on the (data, node, model) mesh: same fwd+bwd
+# step, wire counter split intra/inter and checked against the fwd HLO
+mesh_h = jax.make_mesh((1, 2, w // 2), ("data", "node", "model"))
+cfg = MoEConfig(num_experts=E, top_k=K, d_expert_hidden=DH,
+                dispatch="ragged", capacity_factor=2.0)
+params = fmoe.fmoe_init(jax.random.PRNGKey(0), DM, cfg)
+for wire in (None, "bf16"):
+    dist = fmoe.DistConfig(mesh_h, ("data", "node", "model"),
+                           expert_axis=("node", "model"), node_axis="node",
+                           wire_dtype=wire)
+
+    def fwd(p, x_):
+        return fmoe.fmoe_apply(p, x_, cfg, dist=dist)
+
+    def loss(p, x_):
+        y, m = fwd(p, x_)
+        return (y ** 2).mean(), m
+
+    step = jax.jit(jax.value_and_grad(loss, has_aux=True))
+    with mesh_h:
+        import time
+        for _ in range(2):
+            jax.block_until_ready(step(params, x)[0][0])
+        ts = []
+        for _ in range(8):
+            t0 = time.perf_counter()
+            (l, m), g = step(params, x)
+            jax.block_until_ready(l)
+            ts.append(time.perf_counter() - t0)
+        ftxt = jax.jit(fwd).lower(params, x).compile().as_text()
+    cb = collective_bytes(ftxt)
+    hlo_wire = float(cb.get("all-to-all", 0)
+                     + cb.get("collective-permute", 0))
+    meas = float(m.obs.wire_bytes)
+    assert abs(meas - hlo_wire) <= 0.10 * max(hlo_wire, 1.0), (
+        f"hier/{{wire}}: counter {{meas}} vs fwd HLO {{hlo_wire}}")
+    rows.append({{"dispatch": "ragged-2lvl", "wire_dtype": wire or "f32",
+                  "us": float(np.median(ts) * 1e6),
+                  "wire_bytes": meas, "hlo_fwd_bytes": hlo_wire,
+                  "wire_bytes_intra": float(m.obs.wire_bytes_intra),
+                  "wire_bytes_inter": float(m.obs.wire_bytes_inter),
+                  "dropped": float(m.obs.dropped),
+                  "imbalance": float(m.obs.imbalance)}})
+
+for d in ("capacity", "ragged", "ragged-2lvl"):
     f32 = next(r for r in rows if r["dispatch"] == d
                and r["wire_dtype"] == "f32")
     b16 = next(r for r in rows if r["dispatch"] == d
@@ -153,8 +198,11 @@ def _run_dist(quick: bool) -> list[dict]:
     for r in rows:
         r.update(impl="einsum", distributed=True, ranks=W,
                  backend=jax.default_backend())
+        split = ("" if "wire_bytes_inter" not in r else
+                 f" intra={r['wire_bytes_intra']:.0f}"
+                 f" inter={r['wire_bytes_inter']:.0f}")
         emit(f"fig10_dist_{r['dispatch']}_{r['wire_dtype']}", r["us"],
              f"wire_bytes={r['wire_bytes']:.0f} "
              f"hlo_fwd_bytes={r['hlo_fwd_bytes']:.0f} "
-             f"imbalance={r['imbalance']:.2f}")
+             f"imbalance={r['imbalance']:.2f}" + split)
     return rows

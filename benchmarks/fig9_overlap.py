@@ -102,6 +102,67 @@ a2a0 = hlo0.count("all-to-all")
 cp1 = hlo1.count("collective-permute")
 cap = expert_capacity(NB // w, E, K, cfg.capacity_factor)
 chunk_elems = (E * (cap // CH)) * DM  # per-chunk payload per rank, one way
+
+# ---- two-level (hierarchical) ragged exchange under Zipf skew ----
+# Same cluster construction, but the Zipf ranks interleave across the two
+# nodes (hot experts alternate), so the *actual* per-node load sits well
+# below the dropless worst case — the adaptive bounds turn that measured
+# headroom into fewer inter-node wire bytes.
+from types import SimpleNamespace
+from repro.core.monitor import LoadMonitor
+
+cfg_r = MoEConfig(num_experts=E, top_k=K, d_expert_hidden=DH,
+                  dispatch="ragged", capacity_factor=2.0)
+n_nodes, n_inner = 2, w // 2
+mesh_h = jax.make_mesh((1, n_nodes, n_inner), ("data", "node", "model"))
+AXH = ("data", "node", "model")
+zr = np.empty(E, np.int64)  # expert -> interleaved Zipf rank
+zr[:E // 2], zr[E // 2:] = 2 * np.arange(E // 2), 2 * np.arange(E // 2) + 1
+ph = (1.0 / (zr + 1) ** {zipf_a}); ph /= ph.sum()
+zh = rng.choice(E, size=NB, p=ph)
+xh = jnp.asarray(centers[zh]
+                 + 0.3 * rng.normal(size=(NB, DM)).astype(np.float32))
+
+def bench_h(dist):
+    fn = jax.jit(lambda p_, x_: fmoe.fmoe_apply(p_, x_, cfg_r, dist=dist))
+    with mesh_h:
+        for _ in range(3):
+            jax.block_until_ready(fn(params, xh))
+        ts = []
+        for _ in range(16):
+            t0 = time.perf_counter()
+            y, m = fn(params, xh)
+            jax.block_until_ready(y)
+            ts.append(time.perf_counter() - t0)
+        txt = fn.lower(params, xh).compile().as_text()
+    return float(np.median(ts) * 1e6), np.asarray(y), m, txt
+
+flat_r = fmoe.DistConfig(mesh_h, AXH, expert_axis=("node", "model"))
+us_f, y_f, m_f, hlo_f = bench_h(flat_r)
+us_h, y_h, m_h, hlo_h = bench_h(flat_r._replace(node_axis="node"))
+assert (y_f == y_h).all(), "two-level exchange must be bit-exact vs flat"
+
+# --ragged_bound auto, by hand: calibrate both bounds from the measured
+# per-expert load (one exact-load update; ema=0 keeps it undamped)
+mon = LoadMonitor(E, ema=0.0)
+mon.update(SimpleNamespace(load=np.asarray(m_f.load), drop_frac=0.0))
+mp_h, t_local = n_nodes * n_inner, NB // w
+rb = mon.suggest_ragged_bound(t_local, K, mp_h)
+ib = mon.suggest_ragged_bound(t_local * n_inner, K, mp_h)
+assert rb < t_local * K and ib < n_inner * t_local * K, (
+    "adaptive bounds must sit below the dropless worst case")
+us_s, y_s, m_s, hlo_s = bench_h(flat_r._replace(
+    node_axis="node", ragged_bound=rb, inter_bound=ib))
+assert float(m_s.drop_frac) <= 0.01, float(m_s.drop_frac)
+assert float(m_s.obs.wire_bytes_inter) < float(m_h.obs.wire_bytes_inter)
+assert float(m_s.obs.wire_bytes_inter) < float(m_f.obs.wire_bytes_inter)
+hier_pairs = {{"hier_flat": (float(m_f.obs.wire_bytes), hlo_wire(hlo_f)),
+               "hier": (float(m_h.obs.wire_bytes), hlo_wire(hlo_h)),
+               "hier_auto": (float(m_s.obs.wire_bytes), hlo_wire(hlo_s))}}
+for name, (meas, model) in hier_pairs.items():
+    assert abs(meas - model) <= 0.10 * max(model, 1.0), (
+        f"{{name}}: counter {{meas}} vs HLO {{model}}")
+
 import json
 print("RESULTJSON " + json.dumps({{
     "us0": us0, "us1": us1, "ch": CH, "a2a0": a2a0, "cp1": cp1,
@@ -111,7 +172,24 @@ print("RESULTJSON " + json.dumps({{
     "wire_bytes_pipelined": pairs["pipelined"][0],
     "hlo_bytes_pipelined": pairs["pipelined"][1],
     "wire_bytes_bf16": pairs["bf16"][0],
-    "hlo_bytes_bf16": pairs["bf16"][1]}}))
+    "hlo_bytes_bf16": pairs["bf16"][1],
+    "hier": {{
+        "us_flat": us_f, "us_hier": us_h, "us_hier_auto": us_s,
+        "ragged_bound_auto": rb, "inter_bound_auto": ib,
+        "dropless_bound": t_local * K,
+        "dropless_inter_bound": n_inner * t_local * K,
+        "drop_frac_auto": float(m_s.drop_frac), "bit_exact": True,
+        "wire_bytes_flat_inter": float(m_f.obs.wire_bytes_inter),
+        "wire_bytes_hier_intra": float(m_h.obs.wire_bytes_intra),
+        "wire_bytes_hier_inter": float(m_h.obs.wire_bytes_inter),
+        "wire_bytes_auto_intra": float(m_s.obs.wire_bytes_intra),
+        "wire_bytes_auto_inter": float(m_s.obs.wire_bytes_inter),
+        "wire_bytes_flat": hier_pairs["hier_flat"][0],
+        "hlo_bytes_flat": hier_pairs["hier_flat"][1],
+        "wire_bytes_hier": hier_pairs["hier"][0],
+        "hlo_bytes_hier": hier_pairs["hier"][1],
+        "wire_bytes_auto": hier_pairs["hier_auto"][0],
+        "hlo_bytes_auto": hier_pairs["hier_auto"][1]}}}}))
 """
 
 
@@ -144,6 +222,9 @@ def run(quick: bool = False) -> list[dict]:
         "hlo_bytes_pipelined": vals["hlo_bytes_pipelined"],
         "wire_bytes_bf16": vals["wire_bytes_bf16"],
         "hlo_bytes_bf16": vals["hlo_bytes_bf16"],
+        # two-level ragged exchange on the (1, 2, 2) node mesh under the
+        # interleaved Zipf skew, with LoadMonitor-calibrated bounds
+        "hier": vals["hier"],
         "backend": jax.default_backend(),
     }
     emit("fig9_serial", row["us_serial"],
@@ -154,4 +235,15 @@ def run(quick: bool = False) -> list[dict]:
          f"collective_permutes={row['hlo_collective_permute_pipelined']} "
          f"chunk_elems={row['chunk_elems']} bit_exact=True "
          f"wire_bytes={row['wire_bytes_pipelined']:.0f}")
+    h = vals["hier"]
+    emit("fig9_hier_flat", h["us_flat"],
+         f"inter_bytes={h['wire_bytes_flat_inter']:.0f} (flat: all inter)")
+    emit("fig9_hier", h["us_hier"],
+         f"bit_exact=True intra={h['wire_bytes_hier_intra']:.0f} "
+         f"inter={h['wire_bytes_hier_inter']:.0f}")
+    emit("fig9_hier_auto", h["us_hier_auto"],
+         f"bound={h['ragged_bound_auto']}/{h['dropless_bound']} "
+         f"inter_bound={h['inter_bound_auto']}/{h['dropless_inter_bound']} "
+         f"inter={h['wire_bytes_auto_inter']:.0f} "
+         f"drop={h['drop_frac_auto']:.3f}")
     return [row]

@@ -83,12 +83,25 @@ def _wire_summary(results: dict) -> dict:
                   "wire_bytes_bf16", "hlo_bytes_bf16"):
             if k in row:
                 out.setdefault("fig9", {})[k] = row[k]
+        # two-level ragged exchange: flat / dropless / auto-calibrated
+        # bounds, with the inter-node (slow-link) share broken out
+        h = row.get("hier") or {}
+        for k in ("wire_bytes_flat", "hlo_bytes_flat", "wire_bytes_hier",
+                  "hlo_bytes_hier", "wire_bytes_auto", "hlo_bytes_auto",
+                  "wire_bytes_flat_inter", "wire_bytes_hier_intra",
+                  "wire_bytes_hier_inter", "wire_bytes_auto_intra",
+                  "wire_bytes_auto_inter"):
+            if k in h:
+                out.setdefault("fig9_hier", {})[k] = h[k]
     for row in results.get("fig10", []):
         if row.get("distributed") and "wire_bytes" in row:
             key = f"{row['dispatch']}_{row['wire_dtype']}"
-            out.setdefault("fig10", {})[key] = {
-                "wire_bytes": row["wire_bytes"],
-                "hlo_fwd_bytes": row["hlo_fwd_bytes"]}
+            entry = {"wire_bytes": row["wire_bytes"],
+                     "hlo_fwd_bytes": row["hlo_fwd_bytes"]}
+            if "wire_bytes_inter" in row:
+                entry["wire_bytes_intra"] = row["wire_bytes_intra"]
+                entry["wire_bytes_inter"] = row["wire_bytes_inter"]
+            out.setdefault("fig10", {})[key] = entry
     return out
 
 

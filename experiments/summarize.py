@@ -107,13 +107,31 @@ def moe_bench_table():
               f"collective_permutes={r['hlo_collective_permute_pipelined']} "
               f"chunk_elems={r['chunk_elems']} "
               f"bit_exact={r['bit_exact']}{wire1} |")
+        h = r.get("hier")
+        if h:
+            print(f"| fig9 | 2-level flat | {h['us_flat']:.0f} | "
+                  f"inter_bytes={h['wire_bytes_flat_inter']:.0f} "
+                  f"(flat: all bytes cross nodes) |")
+            print(f"| fig9 | 2-level dropless | {h['us_hier']:.0f} | "
+                  f"bit_exact={h['bit_exact']} "
+                  f"intra={h['wire_bytes_hier_intra']:.0f} "
+                  f"inter={h['wire_bytes_hier_inter']:.0f} |")
+            print(f"| fig9 | 2-level auto bounds | {h['us_hier_auto']:.0f} | "
+                  f"bound={h['ragged_bound_auto']}/{h['dropless_bound']} "
+                  f"inter_bound={h['inter_bound_auto']}/"
+                  f"{h['dropless_inter_bound']} "
+                  f"inter={h['wire_bytes_auto_inter']:.0f} "
+                  f"drop={h['drop_frac_auto']:.3f} |")
     for r in res.get("fig10", []):
         if r.get("distributed"):
+            split = ("" if "wire_bytes_inter" not in r else
+                     f" intra={r['wire_bytes_intra']:.0f}"
+                     f" inter={r['wire_bytes_inter']:.0f}")
             print(f"| fig10 | dist {r['dispatch']}/{r['wire_dtype']} "
                   f"x{r['ranks']} | {r['us']:.0f} | "
                   f"wire_bytes={r['wire_bytes']:.0f} "
                   f"hlo_fwd_bytes={r['hlo_fwd_bytes']:.0f} "
-                  f"imbalance={r['imbalance']:.2f} |")
+                  f"imbalance={r['imbalance']:.2f}{split} |")
         else:
             print(f"| fig10 | {r['dispatch']}/{r['impl']} | {r['us']:.0f} | "
                   f"fwd+bwd tokens={r['tokens']} "
@@ -135,9 +153,20 @@ def _wire_evidence(res):
         m, h = f9.get(f"wire_bytes_{key}"), f9.get(f"hlo_bytes_{key}")
         if m is not None and h is not None:
             print(f"| fig9 | {key} | {m:.0f} | {h:.0f} |")
+    f9h = ws.get("fig9_hier", {})
+    for key in ("flat", "hier", "auto"):
+        m, h = f9h.get(f"wire_bytes_{key}"), f9h.get(f"hlo_bytes_{key}")
+        if m is not None and h is not None:
+            inter = f9h.get(f"wire_bytes_{key}_inter",
+                            f9h.get("wire_bytes_flat_inter")
+                            if key == "flat" else None)
+            tail = f" (inter={inter:.0f})" if inter is not None else ""
+            print(f"| fig9 | 2-level {key} | {m:.0f} | {h:.0f}{tail} |")
     for key, v in sorted(ws.get("fig10", {}).items()):
+        split = ("" if "wire_bytes_inter" not in v else
+                 f" (inter={v['wire_bytes_inter']:.0f})")
         print(f"| fig10 | {key} | {v['wire_bytes']:.0f} | "
-              f"{v['hlo_fwd_bytes']:.0f} |")
+              f"{v['hlo_fwd_bytes']:.0f}{split} |")
 
 
 if __name__ == "__main__":

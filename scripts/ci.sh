@@ -8,8 +8,10 @@
 #                              are set up by the tests themselves): expert
 #                              parallelism, per-layer placement + decode
 #                              shadowing, pipelined exchange, the ragged
-#                              (dropless) a2a, and the shadowed serve step
-#                              (tests/dist_utils.py is the shared harness)
+#                              (dropless) a2a flat AND two-level on the
+#                              2-node x 4-inner fake mesh, and the shadowed
+#                              serve step (tests/dist_utils.py is the shared
+#                              harness)
 #
 # Extra args pass through to pytest.  Full verify stays:
 #   PYTHONPATH=src python -m pytest -x -q
@@ -24,6 +26,7 @@ if [ "$1" = "--dist" ]; then
     shift
     exec python -m pytest -q tests/test_distributed.py tests/test_pipeline.py \
         tests/test_placement_dist.py tests/test_ragged_a2a.py \
+        tests/test_hier_a2a.py \
         tests/test_serve.py::test_serve_step_shadowed_decode_bit_exact "$@"
 fi
 

@@ -9,7 +9,10 @@ between jax 0.4.x and newer releases so the same source runs on both:
   ``AxisType`` enum) only exist on newer jax; old ``AbstractMesh`` takes a
   ``((name, size), ...)`` shape tuple;
 * ``tpu_compiler_params`` — ``pltpu.CompilerParams`` was spelled
-  ``pltpu.TPUCompilerParams`` before the rename.
+  ``pltpu.TPUCompilerParams`` before the rename;
+* ``ragged_all_to_all_shards`` — ``jax.lax.ragged_all_to_all`` as the wire
+  transport for valid-prefix per-peer shards where the jax version has it,
+  dense bounded-shard all-to-all elsewhere (bit-identical results).
 
 Keep every fallback import lazy so importing this module never touches jax
 device state (the dry-run contract of launch/mesh.py).
@@ -80,6 +83,46 @@ def axis_size(axis) -> int:
         frame = _core.axis_frame(a)
         n *= int(getattr(frame, "size", frame))
     return n
+
+
+def has_ragged_all_to_all() -> bool:
+    """True when this jax exposes the native ``lax.ragged_all_to_all``."""
+    return hasattr(jax.lax, "ragged_all_to_all")
+
+
+def ragged_all_to_all_shards(send, send_sizes, recv_sizes, axis, *,
+                             force_fallback: bool = False):
+    """Exchange ``(mp, bound, ...)`` per-peer shards, valid-prefix ragged.
+
+    ``send[p, :send_sizes[p]]`` are the rows for peer ``p`` (zero padding
+    after); the result holds ``recv[s, :recv_sizes[s]]`` rows from source
+    ``s`` (zero padding after) — i.e. exactly what a dense tiled dim-0
+    all-to-all of the padded shards returns when padding is zeros.
+
+    On jax versions with ``lax.ragged_all_to_all`` the native primitive is
+    the wire transport, so only the valid prefixes cross the wire; elsewhere
+    (and under ``force_fallback``) the dense bounded-shard all-to-all moves
+    the full static buffer.  Both branches return bit-identical arrays
+    (tests/test_hier_a2a.py compares them), so callers never see which
+    transport ran.
+    """
+    import jax.numpy as jnp
+    mp, bound = send.shape[0], send.shape[1]
+    if has_ragged_all_to_all() and not force_fallback:
+        flat = send.reshape(mp * bound, *send.shape[2:])
+        out = jnp.zeros_like(flat)
+        offs = (jnp.arange(mp, dtype=jnp.int32) * bound)
+        # my segment for peer p starts at p*bound locally and must land at
+        # slot (my_rank * bound) on peer p — the same place the dense
+        # exchange concatenates it
+        my = jax.lax.axis_index(axis).astype(jnp.int32) * bound
+        out = jax.lax.ragged_all_to_all(
+            flat, out, offs, jnp.asarray(send_sizes, jnp.int32),
+            jnp.full((mp,), my, jnp.int32),
+            jnp.asarray(recv_sizes, jnp.int32), axis_name=axis)
+        return out.reshape(send.shape)
+    del send_sizes, recv_sizes  # fallback moves the full static shards
+    return jax.lax.all_to_all(send, axis, 0, 0, tiled=True)
 
 
 def tpu_compiler_params(**kwargs):

@@ -72,6 +72,93 @@ def return_ragged(out: jax.Array, axis, mp: int, *, n_chunks: int = 1,
                                        decompose=n_chunks > 1)
 
 
+def exchange_ragged_intra(send: jax.Array, counts: jax.Array, inner_axis,
+                          n_inner: int, *, decompose: bool = False,
+                          wire_dtype=None):
+    """Hop 1 of the two-level ragged exchange: aggregate within the node.
+
+    send: (n_nodes, n_inner, bound, d) per-peer shards, peers node-major
+    (rank = node * n_inner + inner); counts: (n_nodes, n_inner, E_local) the
+    matching kept-row counts.  Both run a dim-1 all-to-all over the fast
+    node-local axis, after which this rank is its node's *forwarding agent*
+    for its own inner slot: entry ``[o, s]`` is sibling ``s``'s shard (and
+    counts) destined for rank ``(o, my_inner)`` of every node ``o`` — ready
+    for the node-level compaction (core/dispatch.make_hier_agg) that strips
+    per-source padding off the slow inter-node leg.
+    """
+    from repro.core import pipeline
+
+    shards = pipeline.all_to_all_dim1(send, inner_axis, n_inner,
+                                      decompose=decompose,
+                                      wire_dtype=wire_dtype)
+    cnt = pipeline.all_to_all_dim1(counts, inner_axis, n_inner,
+                                   decompose=decompose)
+    return shards, cnt
+
+
+def return_ragged_intra(out: jax.Array, inner_axis, n_inner: int, *,
+                        decompose: bool = False, wire_dtype=None) -> jax.Array:
+    """Inverse of :func:`exchange_ragged_intra`'s payload hop: de-aggregated
+    (n_nodes, n_inner, bound, d_out) outputs travel back to their source
+    siblings (the dim-1 tiled a2a is its own inverse)."""
+    from repro.core import pipeline
+
+    return pipeline.all_to_all_dim1(out, inner_axis, n_inner,
+                                    decompose=decompose, wire_dtype=wire_dtype)
+
+
+def exchange_ragged_inter(slim: jax.Array, kept_counts: jax.Array, node_axis,
+                          n_nodes: int, *, n_chunks: int = 1, wire_dtype=None,
+                          fill_fn=None):
+    """Hop 2 of the two-level ragged exchange: the slim inter-node leg.
+
+    slim: (n_nodes, inter_bound, d) aggregated per-node shards (only
+    truly-needed rows + tail padding); kept_counts: (n_nodes, n_inner,
+    E_local) full per-source-rank granularity, so the receiver can rebuild
+    the exact flat-path compaction.  When the installed jax has the native
+    ``lax.ragged_all_to_all`` and the leg is not ppermute-decomposed, the
+    payload travels through it (only valid prefixes cross the wire);
+    otherwise the bounded-shard exchange moves the static buffer.  Returns
+    ``(recv, incoming, fill_out)`` like :func:`exchange_ragged`.
+    """
+    from repro.core import pipeline
+
+    incoming = pipeline.counts_all_to_all(
+        kept_counts.reshape(n_nodes, -1), node_axis, n_nodes,
+        decompose=n_chunks > 1).reshape(kept_counts.shape)
+    if n_chunks <= 1 and compat.has_ragged_all_to_all():
+        orig = slim.dtype
+        w, wd = pipeline._to_wire(slim, orig, wire_dtype)
+        recv = pipeline._from_wire(
+            compat.ragged_all_to_all_shards(
+                w, kept_counts.sum(axis=(1, 2)), incoming.sum(axis=(1, 2)),
+                node_axis), orig, wd)
+        return recv, incoming, (fill_fn() if fill_fn is not None else None)
+    recv, fill_out = pipeline.ragged_pipelined_exchange(
+        slim, node_axis, n_nodes, n_chunks, fill_fn=fill_fn,
+        wire_dtype=wire_dtype)
+    return recv, incoming, fill_out
+
+
+def return_ragged_inter(out: jax.Array, kept_counts: jax.Array,
+                        incoming: jax.Array, node_axis, n_nodes: int, *,
+                        n_chunks: int = 1, wire_dtype=None) -> jax.Array:
+    """Inverse of :func:`exchange_ragged_inter`'s payload leg (sizes swap
+    roles: each rank returns what it received, gets back what it sent)."""
+    from repro.core import pipeline
+
+    if n_chunks <= 1 and compat.has_ragged_all_to_all():
+        orig = out.dtype
+        w, wd = pipeline._to_wire(out, orig, wire_dtype)
+        return pipeline._from_wire(
+            compat.ragged_all_to_all_shards(
+                w, incoming.sum(axis=(1, 2)), kept_counts.sum(axis=(1, 2)),
+                node_axis), orig, wd)
+    return pipeline.chunked_all_to_all(out, node_axis, n_nodes, n_chunks,
+                                       wire_dtype=wire_dtype,
+                                       decompose=n_chunks > 1)
+
+
 def hierarchical_all_to_all(buf: jax.Array, inner_axis: str,
                             outer_axis: str) -> jax.Array:
     """Beyond-paper: 2-hop all-to-all for multi-pod meshes.

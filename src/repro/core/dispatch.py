@@ -259,6 +259,140 @@ def ragged_recv_compact(incoming: jax.Array, bound: int):
 
 
 # ---------------------------------------------------------------------------
+# Two-level (hierarchical) ragged exchange — node-level aggregation (ISSUE 7)
+# ---------------------------------------------------------------------------
+#
+# On a mesh with a node axis (DistConfig.node_axis), the flat per-peer shards
+# first exchange within the node (fast links, dim-1 a2a): afterwards each
+# rank is its node's *forwarding agent* for its own inner slot, holding every
+# sibling's shard destined for rank (o, my_inner) of every node o.  The agent
+# compacts the n_inner valid prefixes into ONE slim shard per destination
+# node (width ``inter_bound``), so the slow inter-node exchange carries only
+# truly-needed rows — per-source padding never crosses a node boundary, and
+# an adaptive ``inter_bound`` (LoadMonitor-calibrated) shrinks the wire with
+# actual load.  The receiver rebuilds the exact expert-sorted compact array
+# of the flat path (source-rank-major within an expert), so the two paths
+# are bit-exact when nothing drops.
+
+
+class HierAggPlan(NamedTuple):
+    """Forwarding-agent geometry: n_inner padded shards -> one slim shard."""
+
+    agg_dest: jax.Array  # (n_nodes*n_inner*bound,) int32 — slot in the flat
+    # (n_nodes*inter_bound) slim buffer; == n_nodes*inter_bound when invalid
+    kept_counts: jax.Array  # (n_nodes, n_inner, E_local) int32 — rows that
+    # fit the inter bound, per (dest node, source sibling, expert); the
+    # inter-node counts-leg payload
+    dropped: jax.Array  # () f32 — rows this agent dropped at the inter bound
+
+
+def make_hier_agg(cnt_agg: jax.Array, bound: int,
+                  inter_bound: int) -> HierAggPlan:
+    """Compact per-sibling padded shards into slim per-node shards.
+
+    cnt_agg: (n_nodes, n_inner, E_local) — after the intra counts hop, the
+    kept-row counts of sibling ``s``'s shard for destination node ``o``
+    (each shard a valid prefix of ``cnt_agg[o, s].sum()`` rows padded to
+    ``bound``).  Sibling prefixes concatenate in sibling order inside the
+    slim shard; ``inter_bound`` truncates the trailing rows of an over-full
+    node shard (tracked in ``dropped`` — never silent).
+    """
+    n_nodes, n_inner, e_local = cnt_agg.shape
+    seg = cnt_agg.sum(-1)  # (n_nodes, n_inner) valid prefix lengths
+    off = jnp.cumsum(seg, axis=1) - seg  # sibling offsets in the slim shard
+    idx = jnp.arange(n_nodes * n_inner * bound, dtype=jnp.int32)
+    o = idx // (n_inner * bound)
+    s = (idx // bound) % n_inner
+    b = idx % bound
+    pos = off[o, s] + b
+    valid = (b < seg[o, s]) & (pos < inter_bound)
+    agg_dest = jnp.where(valid, o * inter_bound + pos,
+                         n_nodes * inter_bound).astype(jnp.int32)
+    # kept rows per (o, s, e): experts fill each sibling run in order, so the
+    # inter bound truncates trailing (sibling, expert) segments — the same
+    # clip pattern as make_ragged_xplan's peer_counts
+    e_off = off[..., None] + (jnp.cumsum(cnt_agg, axis=-1) - cnt_agg)
+    kept = jnp.clip(inter_bound - e_off, 0, cnt_agg).astype(jnp.int32)
+    dropped = (cnt_agg.sum() - kept.sum()).astype(jnp.float32)
+    return HierAggPlan(agg_dest, kept, dropped)
+
+
+def _hier_slots(incoming: jax.Array, inter_bound: int):
+    """Per-slot structure of the received slim shards.
+
+    incoming: (n_nodes, n_inner, E_local) kept counts from every source rank
+    (node-major).  Shard ``i`` holds compacted sibling-major runs, each run
+    expert-sorted with lengths ``incoming[i, s]``.  Returns per flat slot
+    (n_nodes*inter_bound,): source sibling ``s``, within-sibling row ``r``,
+    expert ``e``, and validity.
+    """
+    n_nodes, n_inner, e_local = incoming.shape
+    seg = incoming.sum(-1)  # (n_nodes, n_inner)
+    soff = jnp.cumsum(seg, axis=1) - seg
+    cum_sib = jnp.cumsum(seg, axis=1)  # inclusive
+    cum_e = jnp.cumsum(incoming, axis=-1)  # inclusive, within sibling
+    idx = jnp.arange(n_nodes * inter_bound, dtype=jnp.int32)
+    i, q = idx // inter_bound, idx % inter_bound
+    s = jnp.clip((q[:, None] >= cum_sib[i]).sum(axis=1),
+                 0, n_inner - 1).astype(jnp.int32)
+    r = q - soff[i, s]
+    e = jnp.clip((r[:, None] >= cum_e[i, s]).sum(axis=1),
+                 0, e_local - 1).astype(jnp.int32)
+    valid = q < cum_sib[i, n_inner - 1]
+    return i, s, r, e, valid
+
+
+def ragged_recv_compact_hier(incoming: jax.Array, inter_bound: int):
+    """Two-level analogue of :func:`ragged_recv_compact`.
+
+    Maps each received slim slot to its row in the SAME expert-sorted
+    compact array the flat path builds (source-rank-major within an expert,
+    ranks node-major) — the bit-exactness anchor of the hierarchical path.
+    Returns ``(dest (n_nodes*inter_bound,), group_sizes (E_local,))``;
+    invalid slots map to ``n_nodes*inter_bound``.
+    """
+    n_nodes, n_inner, e_local = incoming.shape
+    flat_cnt = incoming.reshape(n_nodes * n_inner, e_local)  # src-rank major
+    gs = flat_cnt.sum(axis=0)
+    e_off = jnp.cumsum(gs) - gs
+    prior = jnp.cumsum(flat_cnt, axis=0) - flat_cnt  # earlier-src rows per e
+    in_off = jnp.cumsum(incoming, axis=-1) - incoming  # within-sib expert offs
+    i, s, r, e, valid = _hier_slots(incoming, inter_bound)
+    dest = e_off[e] + prior[i * n_inner + s, e] + (r - in_off[i, s, e])
+    return (jnp.where(valid, dest, n_nodes * inter_bound).astype(jnp.int32),
+            gs.astype(jnp.int32))
+
+
+def hier_chunk_plans(incoming: jax.Array, inter_bound: int, n_chunks: int):
+    """Per-chunk mini-compaction maps for per-received-chunk expert compute.
+
+    Chunk ``c`` of the inter-node exchange delivers slots ``[c*w, (c+1)*w)``
+    of every source node's slim shard (``w = inter_bound // n_chunks``).
+    Each chunk's valid rows form their own expert-sorted mini array so the
+    grouped kernels can run on chunk ``c`` while chunk ``c+1`` is still in
+    flight — the per-chunk dynamic group slicing of the §5.2 follow-on.
+    Returns ``(dest (n_chunks, n_nodes*w), gs (n_chunks, E_local))``; ``dest``
+    maps chunk slots (node-major) into the mini array (invalid → n_nodes*w).
+    """
+    n_nodes, n_inner, e_local = incoming.shape
+    w = inter_bound // n_chunks
+    _, _, _, e, valid = _hier_slots(incoming, inter_bound)
+    # regroup flat slots (i, q) -> (chunk c, node i, within-chunk q')
+    e_c = e.reshape(n_nodes, n_chunks, w).transpose(1, 0, 2).reshape(
+        n_chunks, n_nodes * w)
+    v_c = valid.reshape(n_nodes, n_chunks, w).transpose(1, 0, 2).reshape(
+        n_chunks, n_nodes * w)
+    onehot = jax.nn.one_hot(e_c, e_local, dtype=jnp.int32) * v_c[..., None]
+    gs = onehot.sum(axis=1)  # (n_chunks, E_local)
+    g_off = jnp.cumsum(gs, axis=-1) - gs
+    before = jnp.cumsum(onehot, axis=1) - onehot  # earlier chunk slots per e
+    dest = (jnp.take_along_axis(g_off, e_c, axis=1)
+            + jnp.take_along_axis(before, e_c[..., None], axis=2)[..., 0])
+    dest = jnp.where(v_c, dest, n_nodes * w).astype(jnp.int32)
+    return dest, gs.astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
 # Tile padding for the Pallas grouped GEMM (groups aligned to row tiles)
 # ---------------------------------------------------------------------------
 

@@ -19,6 +19,7 @@ from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
@@ -64,6 +65,20 @@ class DistConfig(NamedTuple):
         0 = T_local*k, which provably never drops; a smaller bound shrinks
         wire bytes toward actual load at the price of GShard-style drops
         when one peer's shard overflows (tracked in metrics.drop_frac).
+      node_axis — hierarchical two-level ragged exchange: the name of the
+        *inter-node* mesh axis (launch/mesh make_local_mesh(node=...)).
+        When set and leading ``expert_axes`` (ranks node-major), the ragged
+        a2a splits into an intra-node aggregation hop over the remaining
+        (fast) expert axes and a slim inter-node hop over this (slow) axis
+        that carries only truly-needed rows — per-source padding never
+        crosses a node boundary.  Bit-exact vs. the flat exchange.  None, or
+        a mesh without the axis, keeps the flat single-level exchange.
+      inter_bound — rows per slim per-node shard of the inter-node hop
+        (0 = n_inner * ragged_bound, which never drops at this stage); a
+        smaller value shrinks inter-node wire bytes toward actual load, with
+        overflow rows dropped by the forwarding agent (also in drop_frac).
+        launch/train's ``ragged_bound=auto`` calibrates both bounds from the
+        LoadMonitor's EMAs.
     """
 
     mesh: Any
@@ -85,6 +100,9 @@ class DistConfig(NamedTuple):
     # False pins them to zeros, which is what that regression test compares
     # against.
     obs: bool = True
+    node_axis: Optional[str] = None  # inter-node axis of the two-level
+    # ragged exchange (must lead expert_axes); None = flat exchange
+    inter_bound: int = 0  # slim inter-node shard rows (0 = n_inner * bound)
 
     @property
     def expert_axes(self) -> tuple:
@@ -553,22 +571,137 @@ def _moe_a2a_ragged(x, router, experts, extra, shadow, l2p, cfg: MoEConfig,
         fill_fn = lambda: RAGGED_FNS[impl](shadow, xs_sh,
                                            plan.group_sizes[E_ns:], act)
 
-    n_chunks = pipeline.resolve_chunks(dist.overlap_chunks or 1, B)
     wire = dist.wire_jnp_dtype
-    recv, incoming, fill_out = comm.exchange_ragged(
-        send, xplan.peer_counts, ax, mp, n_chunks=n_chunks, wire_dtype=wire,
-        fill_fn=fill_fn)
+    node_ax = dist.node_axis
+    n_nodes = int(dist.mesh.shape[node_ax]) if node_ax in dist.expert_axes \
+        else 1
+    hier = 1 < n_nodes < mp
+    agg_dropped = None
+    if not hier:
+        n_chunks = pipeline.resolve_chunks(dist.overlap_chunks or 1, B)
+        recv, incoming, fill_out = comm.exchange_ragged(
+            send, xplan.peer_counts, ax, mp, n_chunks=n_chunks,
+            wire_dtype=wire, fill_fn=fill_fn)
 
-    # compact the valid shard prefixes into expert-sorted rows (src-major
-    # within an expert = global token order for contiguous token shards)
-    cplan, gs_local = D.ragged_recv_compact(incoming, B)
-    xs = (jnp.zeros((mp * B, d), x.dtype)
-          .at[cplan].set(recv.reshape(mp * B, d), mode="drop"))
-    ys = RAGGED_FNS[impl](experts, xs, gs_local, act)
-    out = ys.at[cplan].get(mode="fill", fill_value=0)  # back to shard slots
+        # compact the valid shard prefixes into expert-sorted rows (src-major
+        # within an expert = global token order for contiguous token shards)
+        cplan, gs_local = D.ragged_recv_compact(incoming, B)
+        xs = (jnp.zeros((mp * B, d), x.dtype)
+              .at[cplan].set(recv.reshape(mp * B, d), mode="drop"))
+        ys = RAGGED_FNS[impl](experts, xs, gs_local, act)
+        out = ys.at[cplan].get(mode="fill", fill_value=0)  # to shard slots
 
-    ret = comm.return_ragged(out.reshape(mp, B, -1), ax, mp,
-                             n_chunks=n_chunks, wire_dtype=wire)
+        ret = comm.return_ragged(out.reshape(mp, B, -1), ax, mp,
+                                 n_chunks=n_chunks, wire_dtype=wire)
+    else:
+        # ---- two-level exchange: aggregate on the node, slim across it ----
+        if dist.expert_axes[0] != node_ax:
+            raise ValueError(
+                f"node_axis {node_ax!r} must lead expert_axes "
+                f"{dist.expert_axes!r} (ranks are node-major)")
+        inner_axes = tuple(a for a in dist.expert_axes if a != node_ax)
+        inner_ax = inner_axes[0] if len(inner_axes) == 1 else inner_axes
+        n_inner = mp // n_nodes
+        IB = dist.inter_bound or n_inner * B  # slim shard rows (0 = no-drop)
+        # only the slow inter-node leg is chunked/pipelined; the node-local
+        # hops ride the fast links serially (and decomposed alongside)
+        n_chunks = pipeline.resolve_chunks(dist.overlap_chunks or 1, IB)
+        decomp = n_chunks > 1
+        shards, cnt_agg = comm.exchange_ragged_intra(
+            send.reshape(n_nodes, n_inner, B, d),
+            xplan.peer_counts.reshape(n_nodes, n_inner, E_local),
+            inner_ax, n_inner, decompose=decomp, wire_dtype=wire)
+        aplan = D.make_hier_agg(cnt_agg, B, IB)
+        agg_dropped = aplan.dropped
+        slim = (jnp.zeros((n_nodes * IB, d), x.dtype)
+                .at[aplan.agg_dest].set(
+                    shards.reshape(n_nodes * n_inner * B, d), mode="drop")
+                .reshape(n_nodes, IB, d))
+        if decomp and impl in ("pallas", "fused"):
+            # per-received-chunk expert compute: each inter chunk's counts
+            # are known before its payload lands, so the grouped kernels run
+            # on chunk c while chunk c+1 is in flight.  Gated to the Pallas
+            # kernels: they accumulate group-relative and stay bitwise under
+            # regrouping, XLA's ragged einsum does not (see _moe_psum).
+            # Forward values are bitwise-identical to the serial compute;
+            # the backward would NOT be (splitting the grouped-GEMM weight
+            # -grad accumulation across chunks reassociates the f32 sums),
+            # so a custom_vjp pins the backward to the serial leg's VJP —
+            # both directions stay bit-exact vs. the flat exchange.
+            w_rows = IB // n_chunks
+            dt = x.dtype
+            incoming = pipeline.counts_all_to_all(
+                aplan.kept_counts.reshape(n_nodes, n_inner * E_local),
+                node_ax, n_nodes, decompose=True).reshape(cnt_agg.shape)
+            cplan, gs_local = D.ragged_recv_compact_hier(incoming, IB)
+            cdest, cgs = D.hier_chunk_plans(incoming, IB, n_chunks)
+
+            def _serial_leg(ex, slim_, cplan_, gs_):
+                recv = pipeline.chunked_all_to_all(
+                    slim_, node_ax, n_nodes, n_chunks, wire_dtype=wire,
+                    decompose=True)
+                xs = (jnp.zeros((n_nodes * IB, d), dt)
+                      .at[cplan_].set(recv.reshape(n_nodes * IB, d),
+                                      mode="drop"))
+                ys_ = RAGGED_FNS[impl](ex, xs, gs_, act)
+                out_ = ys_.at[cplan_].get(mode="fill", fill_value=0)
+                return pipeline.chunked_all_to_all(
+                    out_.reshape(n_nodes, IB, -1), node_ax, n_nodes,
+                    n_chunks, wire_dtype=wire, decompose=True)
+
+            # plan arrays ride as explicit primals (jax 0.4.x custom_vjp
+            # rejects closed-over tracers); their cotangents are float0
+            @jax.custom_vjp
+            def _inter_leg(ex, slim_, cplan_, gs_, cdest_, cgs_):
+                def chunk_fn(rc, c):
+                    mini = (jnp.zeros((n_nodes * w_rows, d), dt)
+                            .at[cdest_[c]].set(
+                                rc.reshape(n_nodes * w_rows, d), mode="drop"))
+                    ys_c = RAGGED_FNS[impl](ex, mini, cgs_[c], act)
+                    return (ys_c.at[cdest_[c]].get(mode="fill", fill_value=0)
+                            .reshape(n_nodes, w_rows, -1))
+                ret_, _ = pipeline.hier_ragged_pipeline(
+                    slim_, node_ax, n_nodes, n_chunks, chunk_fn,
+                    wire_dtype=wire)
+                return ret_
+
+            def _inter_fwd(ex, slim_, cplan_, gs_, cdest_, cgs_):
+                return (_inter_leg(ex, slim_, cplan_, gs_, cdest_, cgs_),
+                        (ex, slim_, cplan_, gs_, cdest_, cgs_))
+
+            def _inter_bwd(res, g):
+                ex, slim_, cplan_, gs_, cdest_, cgs_ = res
+                _, vjp = jax.vjp(
+                    lambda e, s: _serial_leg(e, s, cplan_, gs_), ex, slim_)
+                d_ex, d_slim = vjp(g)
+                f0 = lambda a: np.zeros(a.shape, jax.dtypes.float0)
+                return (d_ex, d_slim, f0(cplan_), f0(gs_), f0(cdest_),
+                        f0(cgs_))
+
+            _inter_leg.defvjp(_inter_fwd, _inter_bwd)
+            fill_out = fill_fn() if fill_fn is not None else None
+            ret_slim = _inter_leg(experts, slim, cplan, gs_local, cdest, cgs)
+        else:
+            recv, incoming, fill_out = comm.exchange_ragged_inter(
+                slim, aplan.kept_counts, node_ax, n_nodes, n_chunks=n_chunks,
+                wire_dtype=wire, fill_fn=fill_fn)
+            cplan, gs_local = D.ragged_recv_compact_hier(incoming, IB)
+            xs = (jnp.zeros((n_nodes * IB, d), x.dtype)
+                  .at[cplan].set(recv.reshape(n_nodes * IB, d), mode="drop"))
+            ys = RAGGED_FNS[impl](experts, xs, gs_local, act)
+            out = ys.at[cplan].get(mode="fill", fill_value=0)
+            ret_slim = comm.return_ragged_inter(
+                out.reshape(n_nodes, IB, -1), aplan.kept_counts, incoming,
+                node_ax, n_nodes, n_chunks=n_chunks, wire_dtype=wire)
+        # de-aggregate (outputs back to padded sibling shards), then invert
+        # the intra hop — ret lands in the flat (mp, B) shard layout
+        d_out = ret_slim.shape[-1]
+        padded = (ret_slim.reshape(n_nodes * IB, d_out)
+                  .at[aplan.agg_dest].get(mode="fill", fill_value=0)
+                  .reshape(n_nodes, n_inner, B, d_out))
+        ret = comm.return_ragged_intra(
+            padded, inner_ax, n_inner, decompose=decomp,
+            wire_dtype=wire).reshape(mp, B, d_out)
     y_sorted = (ret.reshape(mp * B, -1)
                 .at[xplan.send_dest].get(mode="fill", fill_value=0))
     if shadow:
@@ -594,14 +727,30 @@ def _moe_a2a_ragged(x, router, experts, extra, shadow, l2p, cfg: MoEConfig,
                            jnp.maximum(load_global.sum(), 1))
     dropped = (xplan.num_owned_rows - xplan.keep.sum()).astype(jnp.float32)
     drop_pm = jax.lax.pmean(dropped / n, axes)
+    if agg_dropped is not None:
+        # rows the forwarding agents truncated at the inter bound — summed
+        # over agents (= ranks), normalized to the same global fraction
+        drop_pm = drop_pm + (jax.lax.psum(agg_dropped, axes)
+                             / (n * _axes_size(dist, axes)))
     if dist.obs:
-        obs = obs_counters.exchange_counters(
-            frac=pipeline.wire_fraction(mp, decompose=n_chunks > 1),
-            fwd_rows=mp * B, d_in=d, in_dtype=x.dtype,
-            ret_rows=mp * B, d_out=ret.shape[-1], out_dtype=ret.dtype,
-            counts_elems=E_ns, wire_dtype=wire,
-            dropped=drop_pm * (n * _axes_size(dist, axes)),
-            shadow_hits=shadow_hits, imbalance=imbalance)
+        dropped_global = drop_pm * (n * _axes_size(dist, axes))
+        if hier:
+            obs = obs_counters.hier_exchange_counters(
+                intra_frac=pipeline.wire_fraction(n_inner, decompose=decomp),
+                inter_frac=pipeline.wire_fraction(n_nodes, decompose=decomp),
+                intra_rows=mp * B, inter_rows=n_nodes * IB,
+                d_in=d, in_dtype=x.dtype, d_out=ret.shape[-1],
+                out_dtype=ret.dtype, counts_elems=E_ns, wire_dtype=wire,
+                dropped=dropped_global, shadow_hits=shadow_hits,
+                imbalance=imbalance)
+        else:
+            obs = obs_counters.exchange_counters(
+                frac=pipeline.wire_fraction(mp, decompose=n_chunks > 1),
+                fwd_rows=mp * B, d_in=d, in_dtype=x.dtype,
+                ret_rows=mp * B, d_out=ret.shape[-1], out_dtype=ret.dtype,
+                counts_elems=E_ns, wire_dtype=wire,
+                dropped=dropped_global,
+                shadow_hits=shadow_hits, imbalance=imbalance)
     else:
         obs = ObsCounters.zero()
     metrics = MoEMetrics(
@@ -914,7 +1063,7 @@ def fmoe_apply(params: dict, x: jax.Array, cfg: MoEConfig, *, act: str = "swiglu
         fn = functools.partial(local, cfg=cfg, act=act, expert_fn=expert_fn,
                                dist=dist, impl=impl)
         mspec = MoEMetrics(P(), P(), P(None), P(),
-                           ObsCounters(P(), P(), P(), P(), P()))
+                           ObsCounters(P(), P(), P(), P(), P(), P(), P()))
         in_specs = [tok_spec, jax.tree.map(lambda _: P(None, None), router),
                     espec, xspec, sspec]
         operands = [xf, router, experts, extra, shadow]

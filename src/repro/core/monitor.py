@@ -83,6 +83,34 @@ class LoadMonitor:
     def imbalance(self) -> float:
         return self.snapshot()["imbalance"]
 
+    def suggest_ragged_bound(self, num_tokens_local: int, top_k: int,
+                             num_peers: int, *, headroom: float = 1.25,
+                             multiple: int = 8,
+                             drop_guard: float = 1e-3) -> int:
+        """Adaptive bound for the ragged exchange's per-peer shards.
+
+        The dropless default (``T_local * k``) sizes every shard for the
+        worst case — all local assignments landing on one peer.  The EMAs
+        already know the *actual* peak peer share (experts partition into
+        ``num_peers`` contiguous physical blocks), so size the shard to
+        peak share × ``headroom`` instead and let wire bytes shrink with
+        measured load.  Guard rails: an un-warmed monitor (``steps == 0``)
+        or a drop EMA above ``drop_guard`` — evidence the current bounds
+        are already clipping — falls back to the never-drop bound; results
+        round up to ``multiple`` (lane-friendly) and clamp to [multiple, n].
+        """
+        n = int(num_tokens_local) * int(top_k)
+        e_pp = self.num_experts // max(1, int(num_peers))
+        if (self.steps == 0 or e_pp == 0
+                or float(self.drop_ema) > drop_guard):
+            return n
+        l = self.load_ema / max(self.load_ema.sum(), 1e-12)
+        peak = max(float(l[p * e_pp:(p + 1) * e_pp].sum())
+                   for p in range(int(num_peers)))
+        bound = int(np.ceil(n * peak * headroom))
+        bound = -(-bound // multiple) * multiple  # round up to multiple
+        return int(min(max(bound, multiple), n))
+
     def dump(self, path: str) -> None:
         with open(path, "w") as f:
             json.dump({"num_experts": self.num_experts, "steps": self.steps,

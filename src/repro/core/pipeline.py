@@ -184,6 +184,62 @@ def ragged_pipelined_exchange(send: jnp.ndarray, axis, mp: int, n_chunks: int,
     return jnp.concatenate(recvs, axis=1), fill_out
 
 
+def all_to_all_dim1(x: jnp.ndarray, axis, mp: int, *, decompose: bool = False,
+                    wire_dtype=None) -> jnp.ndarray:
+    """Tiled all-to-all splitting/concatenating on dim 1 (dim1 size == mp).
+
+    The intra-node hop of the two-level ragged exchange: buffers are laid out
+    ``(n_nodes, n_inner, ...)`` and the node-local exchange moves dim 1 while
+    dim 0 (destination node) stays put.  Implemented as a transpose around
+    the dim-0 helpers so the ppermute decomposition and wire-dtype bitcast
+    behave identically to every other exchange in this module.
+    """
+    perm = (1, 0) + tuple(range(2, x.ndim))
+    fn = ppermute_all_to_all if decompose else _plain_all_to_all
+    return fn(x.transpose(perm), axis=axis, mp=mp,
+              wire_dtype=wire_dtype).transpose(perm)
+
+
+def hier_ragged_pipeline(send: jnp.ndarray, axis, mp: int, n_chunks: int,
+                         chunk_fn: Callable[[jnp.ndarray, int], jnp.ndarray],
+                         *, fill_fn: Optional[Callable[[], jnp.ndarray]] = None,
+                         wire_dtype=None):
+    """Inter-node leg of the two-level ragged exchange, with per-chunk compute.
+
+    send: (mp, inter_bound, d) slim per-node shards (mp = n_nodes here).
+    ``chunk_fn(recv_chunk, c) -> out_chunk`` runs the expert compute on chunk
+    ``c``'s received rows — (mp, w, d) -> (mp, w, d_out) with
+    ``w = inter_bound // n_chunks`` — using its own mini-compaction
+    (core/dispatch.hier_chunk_plans).  The §5.2 smart schedule applies to
+    this leg alone: S_{c+1} is issued before C_c and R_c right after, so at
+    steady state one send, one grouped-GEMM and one receive are in flight —
+    unlike the flat ragged path, the hierarchical receiver CAN compute per
+    chunk, because each chunk's counts are known before its payload lands.
+    ``fill_fn`` (shadowed experts) issues in S0's wire bubble.  Returns
+    ``(ret (mp, inter_bound, d_out), fill_out | None)``.
+    """
+    decompose = n_chunks > 1
+    a2a = functools.partial(
+        ppermute_all_to_all if decompose else _plain_all_to_all,
+        axis=axis, mp=mp, wire_dtype=wire_dtype)
+    if n_chunks <= 1:
+        recv = a2a(send)
+        fill_out = fill_fn() if fill_fn is not None else None
+        return a2a(chunk_fn(recv, 0)), fill_out
+    chunks = jnp.split(send, n_chunks, axis=1)
+    recv: list = [None] * n_chunks
+    outs: list = [None] * n_chunks
+    fill_out = None
+    recv[0] = a2a(chunks[0])  # S0: warm the pipeline
+    for c in range(n_chunks):
+        if c + 1 < n_chunks:
+            recv[c + 1] = a2a(chunks[c + 1])  # S_{c+1} before C_c
+        if c == 0 and fill_fn is not None:
+            fill_out = fill_fn()  # shadow compute fills the S0 bubble
+        outs[c] = a2a(chunk_fn(recv[c], c))  # C_c then R_c
+    return jnp.concatenate(outs, axis=1), fill_out
+
+
 def pipelined_expert_exchange(
         buf: jnp.ndarray, axis, mp: int, n_chunks: int,
         compute_fn: Callable[[jnp.ndarray], jnp.ndarray], *,

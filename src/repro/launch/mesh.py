@@ -20,9 +20,22 @@ def make_production_mesh(*, multi_pod: bool = False):
     return compat.make_mesh(shape, axes)
 
 
-def make_local_mesh(data: int = 1, model: int = 1):
-    """Small mesh over however many (fake) devices a test process has."""
+def make_local_mesh(data: int = 1, model: int = 1, node: int = 1):
+    """Small mesh over however many (fake) devices a test process has.
+
+    ``node > 1`` inserts a "node" axis between data and model: expert
+    parallelism then spans ("node", "model") and the ragged exchange runs
+    two-level — aggregate within the node-local "model" axis, slim exchange
+    over the inter-node "node" axis (core/fmoe DistConfig.node_axis).
+    """
+    if node > 1:
+        return compat.make_mesh((data, node, model), ("data", "node", "model"))
     return compat.make_mesh((data, model), ("data", "model"))
+
+
+def node_axis(mesh):
+    """The inter-node mesh axis name, or None for a single-level mesh."""
+    return "node" if "node" in mesh.axis_names else None
 
 
 def data_axes(mesh) -> tuple:

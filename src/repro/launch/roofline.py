@@ -32,6 +32,10 @@ _COLL_RE = re.compile(
     r"=\s*(\(?[a-z0-9_\[\],{}/ ]+?\)?)\s*"
     r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
     r"(-start)?\(", re.IGNORECASE)
+# XLA writes /*index=N*/ comments inside wide tuple shapes (e.g. the
+# tuple-form all-to-all a multi-axis exchange lowers to); the '=' inside
+# would cut the shape group short, so strip them before matching
+_TUPLE_COMMENT_RE = re.compile(r"/\*index=\d+\*/")
 _SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
 
 _HOPS = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
@@ -54,7 +58,7 @@ def _shape_bytes(shapes_str: str) -> int:
 def collective_bytes(hlo_text: str) -> dict:
     """Per-collective-type output bytes (per device) from optimized HLO."""
     out: dict = {}
-    for m in _COLL_RE.finditer(hlo_text):
+    for m in _COLL_RE.finditer(_TUPLE_COMMENT_RE.sub("", hlo_text)):
         shapes, op = m.group(1), m.group(2).lower()
         out[op] = out.get(op, 0) + _shape_bytes(shapes)
     return out

@@ -53,6 +53,8 @@ def make_serve_step(cfg: ModelConfig, *, dist=None, with_metrics: bool = False):
         md = {"drop_frac": m.drop_frac / L}
         if m.obs is not None:
             md.update(wire_elems=m.obs.wire_elems, wire_bytes=m.obs.wire_bytes,
+                      wire_bytes_intra=m.obs.wire_bytes_intra,
+                      wire_bytes_inter=m.obs.wire_bytes_inter,
                       dropped=m.obs.dropped, shadow_hits=m.obs.shadow_hits,
                       imbalance=m.obs.imbalance / L)
         return logits, new_cache, md

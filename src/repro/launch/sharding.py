@@ -125,6 +125,10 @@ def option_overrides(opts: dict, mesh):
     opts = opts or {}
     if opts.get("expert_pod") and "pod" in getattr(mesh, "axis_names", ()):
         stack.enter_context(expert_axes_override(("pod", "model")))
+    if "node" in getattr(mesh, "axis_names", ()):
+        # hierarchical mesh: the expert dim spans (node, model), node-major —
+        # the rank order DistConfig.node_axis's two-level exchange assumes
+        stack.enter_context(expert_axes_override(("node", "model")))
     if opts.get("mla_replicate"):
         stack.enter_context(_cell_override(MLA_REPLICATE, True))
     return stack

@@ -51,11 +51,43 @@ def moe_dist(cfg: ModelConfig, mesh, num_tokens: int, *,
         # §Perf multi-pod: expert parallelism spans pods (no cross-pod
         # expert-gradient sync; the a2a crosses pods instead)
         expert_axis = ("pod", "model")
+    node_ax = None
+    if ("node" in mesh.axis_names
+            and cfg.moe.num_experts
+            % (mesh.shape["node"] * mesh.shape["model"]) == 0):
+        # hierarchical mesh (launch/mesh make_local_mesh(node=...)): expert
+        # parallelism spans (node, model) node-major, and the ragged a2a
+        # runs two-level — aggregate intra-node, slim inter-node exchange
+        expert_axis = ("node", "model")
+        node_ax = "node"
     ep = 1
     for a in (expert_axis if isinstance(expert_axis, tuple) else (expert_axis,)):
         ep *= mesh.shape[a]
     if cfg.moe.num_experts % ep:
         return None
+    total = 1
+    for a in mesh.axis_names:
+        total *= mesh.shape[a]
+    rb = opts.get("ragged_bound") or 0
+    ib = int(opts.get("inter_bound") or 0)
+    if rb == "auto":
+        # adaptive bounds: size the static shards to the LoadMonitor's
+        # measured peak peer share (drop-guarded; core/monitor
+        # suggest_ragged_bound).  A cold monitor resolves to the dropless
+        # default; ReplanHook re-jits through here, so every replan
+        # re-calibrates the bounds to the current load EMAs.
+        mon = opts.get("load_monitor")
+        t_local = num_tokens // total if num_tokens % total == 0 else 0
+        rb = 0
+        if mon is not None and t_local:
+            rb = mon.suggest_ragged_bound(t_local, cfg.moe.top_k, ep)
+            if rb >= t_local * cfg.moe.top_k:
+                rb = 0  # dropless: keep the canonical 0 spelling
+            if node_ax and rb and not ib:
+                # slim inter-node shards aggregate n_inner source ranks; the
+                # peak is still one rank block's share of the pooled rows
+                ib = mon.suggest_ragged_bound(
+                    t_local * (ep // mesh.shape["node"]), cfg.moe.top_k, ep)
     extra = dict(
         expert_axis=expert_axis,
         tp_axis="data" if opts.get("expert_tp") and "data" in mesh.axis_names else None,
@@ -64,11 +96,10 @@ def moe_dist(cfg: ModelConfig, mesh, num_tokens: int, *,
                              and "data" in mesh.axis_names) else None,
         overlap_chunks=int(opts.get("overlap_chunks") or 0),
         wire_dtype=opts.get("wire_dtype") or None,
-        ragged_bound=int(opts.get("ragged_bound") or 0),
+        ragged_bound=int(rb),
+        node_axis=node_ax,
+        inter_bound=ib,
     )
-    total = 1
-    for a in mesh.axis_names:
-        total *= mesh.shape[a]
     if num_tokens % total == 0:
         return DistConfig(mesh, all_axes(mesh), placement=opts.get("placement"),
                           **extra)
@@ -124,6 +155,8 @@ def make_train_step(cfg: ModelConfig, opt: AdamW, *, dist=None,
                     "load_layers": jnp.zeros((cfg.num_layers, n_e)),
                     # obs counters (repro.obs) emitted by loss_fn's aux
                     "wire_elems": jnp.zeros(()), "wire_bytes": jnp.zeros(()),
+                    "wire_bytes_intra": jnp.zeros(()),
+                    "wire_bytes_inter": jnp.zeros(()),
                     "dropped": jnp.zeros(()), "shadow_hits": jnp.zeros(()),
                     "imbalance": jnp.zeros(())}
             (grads, loss, aux), _ = jax.lax.scan(
@@ -313,9 +346,10 @@ def main() -> None:
     ap.add_argument("--log_every", type=int, default=10)
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--mesh", default="",
-                    help="DATAxMODEL mesh, e.g. 1x4 (requires that many "
-                         "devices; on CPU set XLA_FLAGS="
-                         "--xla_force_host_platform_device_count=N)")
+                    help="DATAxMODEL mesh, e.g. 1x4, or DATAxNODExMODEL, "
+                         "e.g. 1x2x4, for the hierarchical two-level ragged "
+                         "exchange (requires that many devices; on CPU set "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=N)")
     ap.add_argument("--replan_every", type=int, default=0,
                     help="steps between expert-placement replans "
                          "(0 = off; needs --mesh and an MoE arch)")
@@ -338,10 +372,16 @@ def main() -> None:
                     help="override the MoE dispatch mode (ragged = dropless "
                          "sorted tokens; with --mesh it runs the ragged "
                          "load-sized all-to-all exchange)")
-    ap.add_argument("--ragged_bound", type=int, default=0,
+    ap.add_argument("--ragged_bound", default="0",
                     help="ragged exchange: rows per peer shard (static "
                          "pad-to-max-per-peer width; 0 = local tokens * "
-                         "top_k, which never drops)")
+                         "top_k, which never drops; 'auto' = calibrate from "
+                         "the load monitor's EMAs at every replan re-jit — "
+                         "needs --replan_every)")
+    ap.add_argument("--inter_bound", type=int, default=0,
+                    help="hierarchical exchange: rows per slim inter-node "
+                         "shard (0 = n_inner * ragged_bound, never drops at "
+                         "the aggregation stage; only with a node mesh)")
     ap.add_argument("--metrics_out", default="",
                     help="write per-step telemetry records (JSONL): wall "
                          "time, device-side wire/drop/shadow counters, "
@@ -368,12 +408,19 @@ def main() -> None:
 
     opts = {"overlap_chunks": args.overlap_chunks,
             "wire_dtype": args.wire_dtype or None,
-            "ragged_bound": args.ragged_bound,
+            "ragged_bound": ("auto" if args.ragged_bound == "auto"
+                             else int(args.ragged_bound)),
+            "inter_bound": args.inter_bound,
             "impl": args.impl}
     hook = None
     if args.mesh:
-        d, m = (int(v) for v in args.mesh.split("x"))
-        mesh = make_local_mesh(d, m)
+        dims = [int(v) for v in args.mesh.split("x")]
+        if len(dims) == 3:  # DATAxNODExMODEL: hierarchical two-level mesh
+            d, nn, m = dims
+            mesh = make_local_mesh(d, m, node=nn)
+        else:
+            d, m = dims
+            mesh = make_local_mesh(d, m)
         step_fn, pshard, oshard = jit_train_step(
             cfg, opt, mesh, args.batch, args.seq,
             num_microbatches=args.microbatches, opts=opts)
@@ -388,6 +435,11 @@ def main() -> None:
             if not hook.enabled:  # no a2a path here: skip the per-step sync
                 print("replan disabled: placement needs the a2a expert path")
                 hook = None
+            else:
+                # ragged_bound=auto: the hook's monitor feeds the bound
+                # calibration on every replan re-jit (opts dict is shared
+                # with hook.opts, so observe() re-resolves through moe_dist)
+                opts["load_monitor"] = hook.monitor
     else:
         params = lm.init_params(jax.random.PRNGKey(0), cfg)
         opt_state = opt.init(params)
@@ -424,8 +476,9 @@ def main() -> None:
         if sink is not None:
             counters = {k: float(metrics[k])
                         for k in ("loss", "drop_frac", "wire_elems",
-                                  "wire_bytes", "dropped", "shadow_hits",
-                                  "imbalance") if k in metrics}
+                                  "wire_bytes", "wire_bytes_intra",
+                                  "wire_bytes_inter", "dropped",
+                                  "shadow_hits", "imbalance") if k in metrics}
             sink.emit(StepStats("train_step", step, time.time() - ts,
                                 counters=counters, modeled=modeled).record())
         if hook is not None:

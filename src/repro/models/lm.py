@@ -212,6 +212,8 @@ def loss_fn(params: dict, cfg: ModelConfig, batch: dict, *,
         # device-side telemetry (repro.obs.counters), summed over layers —
         # rides the same device->host transfer as the loss
         aux.update(wire_elems=obs.wire_elems, wire_bytes=obs.wire_bytes,
+                   wire_bytes_intra=obs.wire_bytes_intra,
+                   wire_bytes_inter=obs.wire_bytes_inter,
                    dropped=obs.dropped, shadow_hits=obs.shadow_hits,
                    imbalance=obs.imbalance / L)  # per-layer avg
     return loss, aux

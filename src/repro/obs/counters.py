@@ -28,6 +28,13 @@ Semantics (per train/decode step, summed over MoE layers):
   imbalance — max/mean of per-expert-rank received load (1.0 = perfectly
     balanced).  Summed over layers like the rest; divide by num_layers for
     the per-layer average (models/lm.loss_fn does).
+  wire_bytes_intra / wire_bytes_inter — ``wire_bytes`` split by mesh level:
+    ``inter`` is what crosses the node boundary (the slow links the
+    hierarchical exchange slims), ``intra`` what stays on the node-local
+    axis.  Flat (single-level) exchanges count everything as ``inter`` —
+    every rank pair talks directly, so every byte potentially crosses a
+    node boundary; the two-level ragged path splits its legs.  Always
+    ``wire_bytes == wire_bytes_intra + wire_bytes_inter``.
 """
 from __future__ import annotations
 
@@ -45,11 +52,13 @@ class ObsCounters(NamedTuple):
     dropped: jax.Array  # global dropped (token, slot) assignments
     shadow_hits: jax.Array  # global assignments served by shadowed experts
     imbalance: jax.Array  # max/mean per-rank received load (1.0 = balanced)
+    wire_bytes_intra: jax.Array  # node-local share of wire_bytes
+    wire_bytes_inter: jax.Array  # cross-node share (== wire_bytes when flat)
 
     @staticmethod
     def zero() -> "ObsCounters":
         z = jnp.zeros(())
-        return ObsCounters(z, z, z, z, z)
+        return ObsCounters(z, z, z, z, z, z, z)
 
     def __add__(self, other: "ObsCounters") -> "ObsCounters":
         return ObsCounters(*(a + b for a, b in zip(self, other)))
@@ -75,10 +84,42 @@ def exchange_counters(*, frac: float, fwd_rows: int, d_in: int, in_dtype,
     elems = frac * (fwd_rows * d_in + ret_rows * d_out + counts_elems)
     byts = frac * (fwd_rows * d_in * bi + ret_rows * d_out * bo
                    + counts_elems * 4)
+    # a flat exchange has every rank pair talking directly: all bytes are
+    # accounted as crossing the node boundary (wire_bytes_inter)
     return ObsCounters(jnp.float32(elems), jnp.float32(byts),
                        jnp.asarray(dropped, jnp.float32),
                        jnp.asarray(shadow_hits, jnp.float32),
-                       jnp.asarray(imbalance, jnp.float32))
+                       jnp.asarray(imbalance, jnp.float32),
+                       jnp.zeros(()), jnp.float32(byts))
+
+
+def hier_exchange_counters(*, intra_frac: float, inter_frac: float,
+                           intra_rows: int, inter_rows: int, d_in: int,
+                           in_dtype, d_out: int, out_dtype, counts_elems: int,
+                           wire_dtype=None, dropped, shadow_hits,
+                           imbalance) -> ObsCounters:
+    """Counters for the two-level (hierarchical) ragged exchange.
+
+    Each level runs a forward + return payload leg plus a counts leg:
+    the intra-node hops move ``intra_rows`` rows each way over the fast
+    node-local axis, the inter-node hops ``inter_rows`` rows over the slow
+    axis (the slimmed buffers).  The counts buffer keeps full per-source-rank
+    granularity on both levels (``counts_elems`` int32 each).  ``intra_frac``
+    / ``inter_frac`` are each level's own ppermute wire fractions.
+    """
+    bi = jnp.dtype(wire_dtype if wire_dtype is not None else in_dtype).itemsize
+    bo = jnp.dtype(wire_dtype if wire_dtype is not None else out_dtype).itemsize
+    elems = (intra_frac * (intra_rows * (d_in + d_out) + counts_elems)
+             + inter_frac * (inter_rows * (d_in + d_out) + counts_elems))
+    b_intra = intra_frac * (intra_rows * (d_in * bi + d_out * bo)
+                            + counts_elems * 4)
+    b_inter = inter_frac * (inter_rows * (d_in * bi + d_out * bo)
+                            + counts_elems * 4)
+    return ObsCounters(jnp.float32(elems), jnp.float32(b_intra + b_inter),
+                       jnp.asarray(dropped, jnp.float32),
+                       jnp.asarray(shadow_hits, jnp.float32),
+                       jnp.asarray(imbalance, jnp.float32),
+                       jnp.float32(b_intra), jnp.float32(b_inter))
 
 
 def reduction_counters(*, payload_elems: int, payload_dtype, dropped,
@@ -90,11 +131,12 @@ def reduction_counters(*, payload_elems: int, payload_dtype, dropped,
                        jnp.float32(payload_elems * b),
                        jnp.asarray(dropped, jnp.float32),
                        jnp.asarray(shadow_hits, jnp.float32),
-                       jnp.asarray(imbalance, jnp.float32))
+                       jnp.asarray(imbalance, jnp.float32),
+                       jnp.zeros(()), jnp.float32(payload_elems * b))
 
 
 def local_counters(*, dropped) -> ObsCounters:
     """Single-worker path: nothing crosses any wire."""
     z = jnp.zeros(())
     return ObsCounters(z, z, jnp.asarray(dropped, jnp.float32), z,
-                       jnp.float32(1.0))
+                       jnp.float32(1.0), z, z)

@@ -62,7 +62,11 @@ def run_cli(argv: list, devices: int = 4, timeout: int = 560):
 # ---------------------------------------------------------------------------
 
 
-def make_mesh(data: int = 2, model: int = 4):
+def make_mesh(data: int = 2, model: int = 4, node: int = 0):
+    """Flat (data, model) mesh, or the (data, node, model) node-major mesh
+    of the two-level hierarchy when ``node`` is given."""
+    if node:
+        return jax.make_mesh((data, node, model), ("data", "node", "model"))
     return jax.make_mesh((data, model), ("data", "model"))
 
 

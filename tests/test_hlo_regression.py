@@ -183,6 +183,58 @@ def test_pipelined_hlo_collectives_bracket_expert_gemms():
     assert "BRACKET_OK" in out
 
 
+def test_hier_inter_node_collective_only_on_node_axis():
+    """ISSUE 7 tentpole property, at the HLO level: on the (data, node,
+    model) mesh the two-level ragged exchange must keep the full-size
+    payload on the node-local axis — the only collectives whose replica
+    groups cross the node boundary are the slim inter legs, and their
+    bytes are exactly the counter's wire_bytes_inter.  The flat exchange
+    on the same mesh is the oracle: one 8-wide group, everything crosses.
+    """
+    import dist_utils as du
+
+    out = du.run("""
+    import re
+    import jax
+    import dist_utils as du
+    from repro.core import fmoe
+    from repro.launch.roofline import collective_bytes
+    env = du.moe_env(dispatch="ragged", capacity_factor=1.25)
+    mesh = du.make_mesh(1, 4, node=2)  # ranks node-major: node = rank // 4
+    flat = fmoe.DistConfig(mesh, ("data", "node", "model"),
+                           expert_axis=("node", "model"))
+    hier = flat._replace(node_axis="node", inter_bound=24)
+
+    def wire_defs(dist):
+        with mesh:
+            fn = jax.jit(lambda p, x: fmoe.fmoe_apply(p, x, env.cfg,
+                                                      dist=dist))
+            txt = fn.lower(env.params, env.x).compile().as_text()
+        return [l for l in txt.splitlines()
+                if re.search(r" (all-to-all|collective-permute)\\(", l)]
+
+    INNER = "replica_groups={{0,1,2,3},{4,5,6,7}}"   # node-local axis
+    NODE = "replica_groups={{0,4},{1,5},{2,6},{3,7}}"  # crosses nodes
+    lines = wire_defs(hier)
+    assert lines and all((INNER in l) or (NODE in l) for l in lines), (
+        "exchange collective on neither mesh axis:\\n" + "\\n".join(lines))
+    cross = [l for l in lines if NODE in l]
+    got = sum(collective_bytes(l).get("all-to-all", 0) for l in cross)
+    # slim legs only: 2 payload legs x n_nodes*IB rows x d f32 + the
+    # 8-int32 counts leg == the device counter's wire_bytes_inter
+    with mesh:
+        _, m = jax.jit(lambda p, x: fmoe.fmoe_apply(
+            p, x, env.cfg, dist=hier))(env.params, env.x)
+    want = 4 * (2 * 2 * 24 * 32 + 8)
+    assert got == want == float(m.obs.wire_bytes_inter), (got, want)
+    # oracle: the flat exchange's every payload crosses in one 8-wide group
+    fl = wire_defs(flat)
+    assert fl and all("replica_groups={{0,1,2,3,4,5,6,7}}" in l for l in fl)
+    print("HIER_HLO_OK")
+    """, devices=8)
+    assert "HIER_HLO_OK" in out
+
+
 def test_pipelined_moe_hlo_has_no_blocking_all_to_all():
     script = """
         import jax

@@ -48,15 +48,15 @@ def test_local_counters_single_device():
 
 def test_counters_accumulate_like_metrics():
     """ObsCounters is '+'-accumulable (the layer scan sums it)."""
-    a = ObsCounters(*(jnp.float32(v) for v in (1, 2, 3, 4, 1.5)))
-    b = ObsCounters(*(jnp.float32(v) for v in (10, 20, 30, 40, 0.5)))
+    a = ObsCounters(*(jnp.float32(v) for v in (1, 2, 3, 4, 1.5, 0.25, 0.75)))
+    b = ObsCounters(*(jnp.float32(v) for v in (10, 20, 30, 40, 0.5, 1, 19)))
     s = a + b
-    assert [float(v) for v in s] == [11, 22, 33, 44, 2.0]
+    assert [float(v) for v in s] == [11, 22, 33, 44, 2.0, 1.25, 19.75]
     z = ObsCounters.zero()
     assert [float(v) for v in (z + a)] == [float(v) for v in a]
     d = a.as_dict()
     assert set(d) == {"wire_elems", "wire_bytes", "dropped", "shadow_hits",
-                      "imbalance"}
+                      "imbalance", "wire_bytes_intra", "wire_bytes_inter"}
 
 
 # ---------------------------------------------------------------------------
@@ -103,6 +103,11 @@ def test_wire_counters_match_hand_math_and_hlo():
     assert float(m.obs.dropped) == 0.0
     assert float(m.obs.shadow_hits) == 0.0
     assert float(m.obs.imbalance) >= 1.0
+    # flat (single-level) exchange: the split counters attribute every
+    # byte to the inter-node share (tests/test_hier_a2a.py locks the
+    # two-level split)
+    assert float(m.obs.wire_bytes_intra) == 0.0
+    assert float(m.obs.wire_bytes_inter) == float(m.obs.wire_bytes)
 
     # bf16 wire: payload bytes halve, counts leg stays int32
     m, hlo = run(env, fmoe.DistConfig(mesh, axes, wire_dtype="bf16"))

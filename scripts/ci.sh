@@ -12,6 +12,10 @@
 #                              2-node x 4-inner fake mesh, and the shadowed
 #                              serve step (tests/dist_utils.py is the shared
 #                              harness)
+#   ./scripts/ci.sh --faults   the fault drills only: SIGKILL mid-save +
+#                              --resume, injected-NaN skip/retry, resume
+#                              equivalence, drop-spike fallback, replan
+#                              rollback (tests/test_resilience.py end to end)
 #
 # Extra args pass through to pytest.  Full verify stays:
 #   PYTHONPATH=src python -m pytest -x -q
@@ -28,6 +32,11 @@ if [ "$1" = "--dist" ]; then
         tests/test_placement_dist.py tests/test_ragged_a2a.py \
         tests/test_hier_a2a.py \
         tests/test_serve.py::test_serve_step_shadowed_decode_bit_exact "$@"
+fi
+
+if [ "$1" = "--faults" ]; then
+    shift
+    exec python -m pytest -q tests/test_resilience.py "$@"
 fi
 
 python scripts/check_tier1.py

@@ -1,3 +1,7 @@
-from repro.checkpoint.ckpt import latest_step, restore, save
+from repro.checkpoint.ckpt import (CheckpointError, complete_steps,
+                                   gc_checkpoints, is_complete, latest_step,
+                                   load_manifest, restore, save, step_path)
 
-__all__ = ["latest_step", "restore", "save"]
+__all__ = ["CheckpointError", "complete_steps", "gc_checkpoints",
+           "is_complete", "latest_step", "load_manifest", "restore", "save",
+           "step_path"]

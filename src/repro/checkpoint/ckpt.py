@@ -1,21 +1,51 @@
 """Sharding-aware checkpointing (paper §6 lists MoE save/load as future work).
 
 Layout: one ``.npz``-style directory per step with a JSON manifest mapping
-flat param paths -> file names + dtypes + shapes.  Expert-parallel params are
-gathered to host before save (addressable shards concatenated), so a
-checkpoint written on any mesh restores on any other mesh — the property
-FastMoE's tag system makes hard and sharding-by-spec makes trivial.
+flat param paths -> file names + dtypes + shapes + sha256 checksums.
+Expert-parallel params are gathered to host before save (addressable shards
+concatenated), so a checkpoint written on any mesh restores on any other
+mesh — the property FastMoE's tag system makes hard and sharding-by-spec
+makes trivial.
+
+Durability contract (ISSUE 8):
+
+* **Atomic commit** — arrays and manifest are written to a hidden temp
+  directory (``.tmp-<name>.<pid>``), fsynced, and published with a single
+  ``os.replace``.  A crash (even SIGKILL) mid-save leaves only the temp
+  dir, which :func:`latest_step` / :func:`complete_steps` never consider.
+* **Verified restore** — the manifest carries a ``"complete": true``
+  marker (written last, inside the atomic unit) and a per-array sha256;
+  :func:`restore` refuses incomplete manifests and checksum mismatches
+  with :class:`CheckpointError`, so bit-rot or a torn write can never be
+  silently loaded.  Caller-contract violations (structure/shape/dtype
+  mismatch vs ``like``) stay ``ValueError``.
+* **Retention GC** — :func:`gc_checkpoints` keeps the newest N complete
+  checkpoints and sweeps stale temp dirs.
+
+Fault-injection points (``ckpt_save_file``, ``ckpt_save_arrays``,
+``ckpt_save_pre_commit``) let :mod:`repro.resilience.faults` drill
+crash-mid-save and corrupt-array scenarios deterministically.
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
-from typing import Any
+import re
+import shutil
+from typing import Any, Optional
 
 import jax
 import numpy as np
 
 from repro.obs import trace as obs_trace
+
+MANIFEST = "manifest.json"
+_STEP_RE = re.compile(r"^step_(\d+)$")
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint on disk is missing, incomplete, or fails verification."""
 
 
 def _flatten(tree: Any, prefix: str = "") -> dict:
@@ -34,42 +64,122 @@ def _flatten(tree: Any, prefix: str = "") -> dict:
     return out
 
 
+def _sha256(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
+
+
+def _fsync_file(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
 def save(path: str, tree: Any, *, step: int | None = None,
          placement=None) -> None:
     """``placement`` (ExpertPlacement or PerLayerPlacement): the live tree's
     physical expert layout.  It is undone before writing (per-layer plans
     un-permute each layer's slice), so checkpoints are always in logical
-    expert order — layout-free, restorable under any future placement."""
+    expert order — layout-free, restorable under any future placement.
+
+    The write is atomic: everything lands in a sibling temp dir that is
+    fsynced and then ``os.replace``d over ``path`` — readers see either
+    the old checkpoint or the complete new one, never a torn mix.
+    """
+    from repro.resilience import faults  # lazy: avoids a package cycle
     with obs_trace.span("ckpt_save", path=path, step=step):
         if placement is not None:
             from repro.placement.migrate import to_logical
             tree = to_logical(tree, placement)
-        os.makedirs(path, exist_ok=True)
+        path = os.path.abspath(path)
+        parent, base = os.path.split(path)
+        os.makedirs(parent, exist_ok=True)
+        tmp = os.path.join(parent, f".tmp-{base}.{os.getpid()}")
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
         flat = _flatten(tree)
-        manifest = {"step": step, "params": {}}
+        manifest = {"format": 2, "step": step, "complete": True, "params": {}}
         for i, (key, val) in enumerate(flat.items()):
             arr = np.asarray(jax.device_get(val))
             dtype = str(arr.dtype)
             if dtype == "bfloat16":  # np.save can't serialize ml_dtypes
                 arr = arr.astype(np.float32)
             fname = f"arr_{i:05d}.npy"
-            np.save(os.path.join(path, fname), arr)
+            fpath = os.path.join(tmp, fname)
+            np.save(fpath, arr)
+            _fsync_file(fpath)
+            digest = _sha256(fpath)
+            # post-checksum injection point: models bit-rot after the write
+            # (restore must catch the checksum mismatch)
+            faults.fire("ckpt_save_file", file=fpath, key=key)
             manifest["params"][key] = {"file": fname, "dtype": dtype,
-                                       "shape": list(arr.shape)}
-        with open(os.path.join(path, "manifest.json"), "w") as f:
+                                       "shape": list(arr.shape),
+                                       "sha256": digest}
+        # crash here == SIGKILL mid-save: arrays on disk, no manifest — the
+        # temp dir is invisible to latest_step/complete_steps
+        faults.fire("ckpt_save_arrays", step=step, path=path)
+        mpath = os.path.join(tmp, MANIFEST)
+        with open(mpath, "w") as f:
             json.dump(manifest, f, indent=1)
+            f.flush()
+            os.fsync(f.fileno())
+        _fsync_file(tmp)
+        # crash here == SIGKILL after a fully written temp dir but before
+        # the atomic publish: still invisible, still recoverable
+        faults.fire("ckpt_save_pre_commit", step=step, path=path)
+        if os.path.isdir(path):  # re-save of the same step: replace wholesale
+            shutil.rmtree(path)
+        os.replace(tmp, path)
+        _fsync_file(parent)
 
 
-def restore(path: str, like: Any, *, placement=None) -> Any:
+def load_manifest(path: str) -> dict:
+    """The checkpoint's manifest; :class:`CheckpointError` when missing or
+    unreadable (a torn legacy write, not a caller bug)."""
+    mpath = os.path.join(path, MANIFEST)
+    try:
+        with open(mpath) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        raise CheckpointError(f"{path}: unreadable manifest ({e})") from e
+
+
+def is_complete(path: str) -> bool:
+    """True iff ``path`` holds a committed checkpoint (manifest present and
+    carrying the ``"complete"`` marker)."""
+    try:
+        return bool(load_manifest(path).get("complete"))
+    except CheckpointError:
+        return False
+
+
+def restore(path: str, like: Any, *, placement=None, verify: bool = True) -> Any:
     """Restore into the structure of ``like`` (shapes/dtypes validated).
+
+    Refuses incomplete checkpoints and (with ``verify``, the default)
+    arrays whose sha256 no longer matches the manifest — both
+    :class:`CheckpointError`.  Dtypes must match the ``like`` tree exactly;
+    the one allowed coercion is the documented bf16<->f32 *storage*
+    round-trip (bf16 leaves are stored as f32 files and cast back), which
+    stays within the manifest's declared dtype.
 
     ``placement`` re-applies a physical expert layout to the logical-order
     checkpoint (the inverse of :func:`save`'s ``placement``) — restoring
     under a *different* plan than the one saved under is fine, which is the
-    point: checkpoints don't know layouts."""
+    point: checkpoints don't know layouts.
+    """
     with obs_trace.span("ckpt_restore", path=path):
-        with open(os.path.join(path, "manifest.json")) as f:
-            manifest = json.load(f)
+        manifest = load_manifest(path)
+        if not manifest.get("complete"):
+            raise CheckpointError(
+                f"{path}: incomplete checkpoint (manifest lacks the "
+                f"'complete' marker — interrupted legacy save?)")
         flat_like = _flatten(like)
         missing = set(flat_like) - set(manifest["params"])
         extra = set(manifest["params"]) - set(flat_like)
@@ -79,12 +189,29 @@ def restore(path: str, like: Any, *, placement=None) -> Any:
                 f"extra={sorted(extra)[:5]}")
         loaded = {}
         for key, meta in manifest["params"].items():
-            arr = np.load(os.path.join(path, meta["file"]))
+            fpath = os.path.join(path, meta["file"])
+            if verify and "sha256" in meta:
+                digest = _sha256(fpath)
+                if digest != meta["sha256"]:
+                    raise CheckpointError(
+                        f"{path}: checksum mismatch for {key} "
+                        f"({meta['file']}): {digest[:12]} != "
+                        f"{meta['sha256'][:12]}")
+            arr = np.load(fpath)
             want = flat_like[key]
             if tuple(arr.shape) != tuple(want.shape):
                 raise ValueError(
                     f"{key}: shape {arr.shape} != {tuple(want.shape)}")
-            loaded[key] = arr.astype(want.dtype)
+            if meta["dtype"] != str(want.dtype):
+                raise ValueError(
+                    f"{key}: manifest dtype {meta['dtype']} != "
+                    f"{want.dtype} in the restore target — refusing the "
+                    f"silent cast (only the internal bf16<->f32 storage "
+                    f"round-trip is coerced)")
+            # bf16 leaves were stored as f32 files: cast back (the one
+            # allowed coercion; dtype equality above already held)
+            loaded[key] = (arr if str(arr.dtype) == meta["dtype"]
+                           else arr.astype(want.dtype))
         tree = _unflatten_like(like, loaded, "")
         if placement is not None:
             from repro.placement.migrate import from_logical
@@ -104,8 +231,47 @@ def _unflatten_like(like: Any, flat: dict, prefix: str) -> Any:
     return flat[prefix[:-1]]
 
 
-def latest_step(root: str) -> str | None:
+def step_path(root: str, step: int) -> str:
+    return os.path.join(root, f"step_{step:08d}")
+
+
+def complete_steps(root: str) -> list:
+    """``[(step, path)]`` of *complete* checkpoints under ``root``, sorted
+    numerically (``step_9`` < ``step_10000`` — no lexicographic trap).
+    Directories with a missing/unreadable manifest or without the
+    ``"complete"`` marker are skipped: a torn write never wins."""
     if not os.path.isdir(root):
-        return None
-    steps = sorted(d for d in os.listdir(root) if d.startswith("step_"))
-    return os.path.join(root, steps[-1]) if steps else None
+        return []
+    out = []
+    for d in os.listdir(root):
+        m = _STEP_RE.match(d)
+        p = os.path.join(root, d)
+        if m is None or not os.path.isdir(p) or not is_complete(p):
+            continue
+        out.append((int(m.group(1)), p))
+    return sorted(out)
+
+
+def latest_step(root: str) -> str | None:
+    """Path of the newest *complete* checkpoint under ``root`` (or None)."""
+    steps = complete_steps(root)
+    return steps[-1][1] if steps else None
+
+
+def gc_checkpoints(root: str, *, keep: int = 3) -> list:
+    """Remove all but the newest ``keep`` complete checkpoints, plus any
+    stale ``.tmp-*`` dirs from crashed saves.  Returns removed paths."""
+    removed = []
+    if not os.path.isdir(root) or keep < 1:
+        return removed
+    for n, p in complete_steps(root)[:-keep]:
+        shutil.rmtree(p)
+        removed.append(p)
+    pid_suffix = f".{os.getpid()}"
+    for d in os.listdir(root):
+        p = os.path.join(root, d)
+        if (d.startswith(".tmp-") and os.path.isdir(p)
+                and not d.endswith(pid_suffix)):  # not this process's live tmp
+            shutil.rmtree(p)
+            removed.append(p)
+    return removed

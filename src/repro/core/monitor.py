@@ -31,6 +31,11 @@ class LoadMonitor:
                                 if num_layers else None)
         self.drop_ema = 0.0
         self.steps = 0
+        # resilience latch (repro.resilience.guard): once the step guard has
+        # forced the dropless fallback, adaptive bound suggestions must not
+        # re-shrink the shards at the next replan re-jit — the spike already
+        # proved the EMAs untrustworthy for sizing
+        self.force_dropless = False
         # bounded ring: long runs must not grow host memory without limit
         self.history: deque = deque(maxlen=max(1, int(history_cap)))
         self.record_every = record_every  # default cadence for update()
@@ -101,7 +106,7 @@ class LoadMonitor:
         """
         n = int(num_tokens_local) * int(top_k)
         e_pp = self.num_experts // max(1, int(num_peers))
-        if (self.steps == 0 or e_pp == 0
+        if (self.force_dropless or self.steps == 0 or e_pp == 0
                 or float(self.drop_ema) > drop_guard):
             return n
         l = self.load_ema / max(self.load_ema.sum(), 1e-12)

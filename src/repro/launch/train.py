@@ -23,7 +23,10 @@ from repro.data import SyntheticLM
 from repro.launch.mesh import all_axes, data_axes, make_local_mesh
 from repro.launch.sharding import batch_spec, tree_shardings
 from repro.models import lm
+from repro.obs import events as obs_events
 from repro.optim import AdamW, warmup_cosine
+from repro.resilience import (CheckpointManager, StepGuard, TrainingAborted,
+                              faults)
 
 
 def moe_dist(cfg: ModelConfig, mesh, num_tokens: int, *,
@@ -223,12 +226,24 @@ class ReplanHook:
     controller decides a better placement pays for its migration, the hook
     permutes the live param/optimizer trees (checkpoint-compatible — see
     repro.placement.migrate.to_logical) and returns a freshly jitted step.
+
+    **Rollback** (ISSUE 8): every accepted replan opens a probation window
+    (:class:`repro.resilience.ReplanProbation`).  If the post-replan loss
+    or drop fraction regresses against the pre-replan EMA baselines, the
+    migration is *inverted* — params/opt state permute back to the prior
+    placement, the step re-jits under it, and the regressing plan is
+    blacklisted in the controller so the cost model can never propose it
+    again.  New replans are deferred while a probation is open (one
+    experiment at a time).  Pass ``rollback=False`` to opt out.
     """
 
     def __init__(self, cfg: ModelConfig, opt: AdamW, mesh, global_batch: int,
                  seq_len: int, *, every: int = 200,
                  num_microbatches: int = 1, opts: Optional[dict] = None,
-                 per_layer: bool = False, sink=None):
+                 per_layer: bool = False, sink=None, rollback: bool = True,
+                 probation: Optional[int] = None,
+                 probation_loss_tol: float = 1.05,
+                 probation_drop_tol: float = 0.05):
         from repro.core.dispatch import expert_capacity
         from repro.core.monitor import LoadMonitor
         from repro.placement import (PlacementController, identity_placement,
@@ -278,15 +293,49 @@ class ReplanHook:
         # fetch load to host only on sampled steps: a per-step device_get
         # would serialize host and device for a decision made every `every`
         self.sync_every = max(1, every // 16)
+        from repro.resilience import ReplanProbation
+        self.probation = (ReplanProbation(
+            window=probation if probation else max(4, min(64, every // 4)),
+            loss_tol=probation_loss_tol, drop_tol=probation_drop_tol,
+            sink=sink) if rollback else None)
+        # host-side loss/drop EMAs: the pre-replan baselines probation
+        # judges against (fed by observe()'s loss=/drop= kwargs — the train
+        # loop already holds those host floats for the step guard)
+        self._loss_ema: Optional[float] = None
+        self._drop_ema: Optional[float] = None
 
     @property
     def placement(self):
         return self.controller.current
 
-    def observe(self, step: int, metrics: dict, params, opt_state):
-        """Returns (params, opt_state, new_step_fn | None)."""
-        from repro.core.balance import MoEMetrics
+    def _switch(self, step: int, old, new, params, opt_state, *,
+                span: str = "replan"):
+        """Re-jit under ``new`` and permute live state from ``old``'s
+        physical order into ``new``'s (shared replan/rollback machinery)."""
+        from repro.obs import trace as obs_trace
         from repro.placement import migrate
+
+        with obs_trace.span(span, step=step):
+            step_fn, pshard, oshard = jit_train_step(
+                self.cfg, self.opt, self.mesh, self.global_batch, self.seq_len,
+                num_microbatches=self.num_microbatches, opts=self.opts,
+                placement=new)
+            with obs_trace.span("migrate", step=step):
+                params = jax.device_put(migrate(params, old, new), pshard)
+                opt_state = jax.device_put(migrate(opt_state, old, new),
+                                           oshard)
+        return params, opt_state, step_fn
+
+    def observe(self, step: int, metrics: dict, params, opt_state, *,
+                loss: Optional[float] = None, drop: Optional[float] = None):
+        """Returns (params, opt_state, new_step_fn | None).
+
+        ``loss``/``drop`` are the step's host-side scalars when the caller
+        already has them (the guarded train loop does); otherwise they are
+        pulled from ``metrics`` where present.  They feed the probation
+        baselines — without them rollback judges on whichever metric it has.
+        """
+        from repro.core.balance import MoEMetrics
 
         if (self.per_layer and self.controller.every
                 and "load_layers" not in metrics and "load" in metrics):
@@ -296,6 +345,15 @@ class ReplanHook:
             raise ValueError(
                 "ReplanHook(per_layer=True) needs metrics['load_layers'] "
                 "(the (L, E) stack loss_fn emits); got only 'load'")
+        if loss is None and "loss" in metrics:
+            loss = float(metrics["loss"])
+        if drop is None and "drop_frac" in metrics:
+            drop = float(metrics["drop_frac"])
+        ema = lambda old, v: v if old is None else 0.9 * old + 0.1 * v
+        if loss is not None:
+            self._loss_ema = ema(self._loss_ema, loss)
+        if drop is not None:
+            self._drop_ema = ema(self._drop_ema, drop)
         load_key = "load_layers" if self.per_layer else "load"
         if (load_key in metrics and self.controller.every
                 and step % self.sync_every == 0):
@@ -307,20 +365,31 @@ class ReplanHook:
                            jax.device_get(metrics[load_key]),
                            jax.device_get(metrics.get("drop_frac", 0.0)))
             self.monitor.update(m)
+        if self.probation is not None and self.probation.active:
+            decision = self.probation.observe(step, loss=loss, drop=drop)
+            if decision.rollback:
+                params, opt_state, step_fn = self._switch(
+                    step, decision.new_plan, decision.old_plan, params,
+                    opt_state, span="replan_rollback")
+                self.controller.rollback(decision.old_plan, decision.new_plan)
+                print(f"step {step:5d} replan ROLLBACK: {decision.reason} "
+                      f"(plan blacklisted)")
+                return params, opt_state, step_fn
+            if self.probation.active:  # still on probation: defer replans
+                return params, opt_state, None
         old = self.controller.current
         new = self.controller.maybe_replan(step)
         if new is None:
             return params, opt_state, None
-        from repro.obs import trace as obs_trace
-        with obs_trace.span("replan", step=step):
-            step_fn, pshard, oshard = jit_train_step(
-                self.cfg, self.opt, self.mesh, self.global_batch, self.seq_len,
-                num_microbatches=self.num_microbatches, opts=self.opts,
-                placement=new)
-            with obs_trace.span("migrate", step=step):
-                params = jax.device_put(migrate(params, old, new), pshard)
-                opt_state = jax.device_put(migrate(opt_state, old, new),
-                                           oshard)
+        params, opt_state, step_fn = self._switch(step, old, new, params,
+                                                  opt_state)
+        if self.probation is not None:
+            # drop baseline defaults to 0: a replan must not *introduce*
+            # drops even if the run never measured any before it
+            self.probation.start(
+                step, old, new, baseline_loss=self._loss_ema,
+                baseline_drop=self._drop_ema if self._drop_ema is not None
+                else 0.0)
         if self.sink is not None:
             self.sink.emit({"kind": "replan", "step": step,
                             "num_shadow": int(new.num_shadow),
@@ -382,11 +451,43 @@ def main() -> None:
                     help="hierarchical exchange: rows per slim inter-node "
                          "shard (0 = n_inner * ragged_bound, never drops at "
                          "the aggregation stage; only with a node mesh)")
+    ap.add_argument("--ckpt_dir", default="",
+                    help="checkpoint root: atomic verified checkpoints land "
+                         "in step_<N>/ dirs (state after completing step N, "
+                         "always in logical expert order regardless of the "
+                         "live placement)")
+    ap.add_argument("--save_every", type=int, default=0,
+                    help="checkpoint every N completed steps (0 = only the "
+                         "final save; needs --ckpt_dir)")
+    ap.add_argument("--keep_ckpts", type=int, default=3,
+                    help="retention: newest complete checkpoints kept by GC")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the newest checkpoint under --ckpt_dir "
+                         "that passes verification (corrupt ones are "
+                         "skipped) and continue from its step; the data "
+                         "stream fast-forwards so the trajectory matches an "
+                         "uninterrupted run")
+    ap.add_argument("--max_bad_steps", type=int, default=3,
+                    help="step guard: tolerated consecutive non-finite "
+                         "steps (each is skipped and retried from the last "
+                         "good snapshot; exceeding aborts; 0 disables the "
+                         "guard and its per-step host sync)")
+    ap.add_argument("--snapshot_every", type=int, default=1,
+                    help="guard snapshot cadence (1 = copy params/opt state "
+                         "after every good step; higher amortizes the copy "
+                         "at the cost of replaying more on restore)")
+    ap.add_argument("--drop_spike", type=float, default=0.25,
+                    help="guard: drop_frac above this for --drop_patience "
+                         "consecutive steps forces the dropless ragged "
+                         "bound (re-jit with ragged_bound=0)")
+    ap.add_argument("--drop_patience", type=int, default=4)
     ap.add_argument("--metrics_out", default="",
                     help="write per-step telemetry records (JSONL): wall "
                          "time, device-side wire/drop/shadow counters, "
-                         "HLO-modeled collective bytes, monitor snapshots "
-                         "and replan events (repro.obs)")
+                         "HLO-modeled collective bytes, monitor snapshots, "
+                         "replan events, and the resilience incident "
+                         "timeline — faults, guard skips/restores, "
+                         "checkpoint saves, resumes, rollbacks (repro.obs)")
     ap.add_argument("--trace", default="",
                     help="write a Chrome trace (chrome://tracing / perfetto) "
                          "of host-side spans: train_step, replan, migrate")
@@ -397,6 +498,10 @@ def main() -> None:
     sink = JsonlSink(args.metrics_out) if args.metrics_out else None
     if args.trace:
         obs_trace.configure(enabled=True)
+    # fault drills: REPRO_FAULTS='[{"point": "train_step", ...}]' arms the
+    # registry for this process; every fired fault lands in the sink
+    faults.arm_from_env()
+    faults.set_sink(sink)
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -454,49 +559,167 @@ def main() -> None:
         try:
             return modeled_collective_bytes(
                 fn.lower(p, o, b, jnp.int32(s)).compile())
-        except Exception:
+        except Exception as e:  # missing column must be explainable, not mute
+            print(f"warning: modeled collective bytes unavailable: {e}")
+            obs_events.emit(sink, obs_events.MODELED_ERROR, step=int(s),
+                            error=str(e))
             return {}
+
+    # -- resilience: checkpointing + auto-resume + the step guard ----------
+    manager = None
+    if args.ckpt_dir:
+        manager = CheckpointManager(args.ckpt_dir, save_every=args.save_every,
+                                    keep=args.keep_ckpts, sink=sink)
+    start_step = 0
+    if args.resume and manager is not None:
+        # checkpoints are logical-order; the fresh run starts on the
+        # identity placement, so no placement kwarg on the restore side
+        res = manager.restore_latest({"params": params, "opt": opt_state})
+        if res is not None:
+            tree, last = res
+            start_step = last + 1
+            if args.mesh:
+                params = jax.device_put(tree["params"], pshard)
+                opt_state = jax.device_put(tree["opt"], oshard)
+            else:
+                params, opt_state = tree["params"], tree["opt"]
+            print(f"resumed from step {last} "
+                  f"({manager.step_dir(last)}); continuing at {start_step}")
+        else:
+            print(f"no restorable checkpoint under {args.ckpt_dir}; "
+                  f"starting fresh")
+    guard = None
+    if args.max_bad_steps > 0:
+        guard = StepGuard(max_bad_steps=args.max_bad_steps,
+                          drop_threshold=args.drop_spike,
+                          drop_patience=args.drop_patience,
+                          snapshot_every=args.snapshot_every, sink=sink)
 
     telemetry = sink is not None or obs_trace.enabled()
     modeled: dict = {}
     data = SyntheticLM(cfg.vocab_size, args.seq)
+    batch_iter = data.batches(args.batch)
+    for _ in range(start_step):  # deterministic resume: replay the stream
+        next(batch_iter)         # position an uninterrupted run would have
     t0 = time.time()
-    for step, batch in enumerate(data.batches(args.batch)):
-        if step >= args.steps:
-            break
-        batch = {k: jnp.asarray(v) for k, v in batch.items()}
-        if step == 0 and sink is not None:
-            modeled = modeled_of(step_fn, params, opt_state, batch, step)
-        ts = time.time()
-        with obs_trace.span("train_step", step=step):
-            params, opt_state, metrics = step_fn(params, opt_state, batch,
-                                                 jnp.int32(step))
-            if telemetry:  # real wall times: don't let dispatch run ahead
-                jax.block_until_ready(metrics)
+    step = start_step
+    if guard is not None:  # seed snapshot: step 0 itself may go non-finite
+        guard.commit(start_step - 1, params, opt_state)
+    try:
+        while step < args.steps:
+            batch = {k: jnp.asarray(v) for k, v in next(batch_iter).items()}
+            if step == start_step and sink is not None:
+                modeled = modeled_of(step_fn, params, opt_state, batch, step)
+            while True:  # retry loop, bounded by the guard's max_bad_steps
+                ts = time.time()
+                with obs_trace.span("train_step", step=step):
+                    params, opt_state, metrics = step_fn(params, opt_state,
+                                                         batch,
+                                                         jnp.int32(step))
+                    if telemetry:  # real wall times: don't run ahead
+                        jax.block_until_ready(metrics)
+                params, opt_state, metrics = faults.apply_step(
+                    params, opt_state, metrics, step=step)
+                if guard is None:
+                    verdict = None
+                    break
+                loss = float(metrics["loss"])
+                gnorm = float(metrics["grad_norm"])
+                drop = float(metrics.get("drop_frac", 0.0))
+                verdict = guard.check(step, loss=loss, grad_norm=gnorm,
+                                      drop=drop)
+                if verdict.ok:
+                    break
+                # non-finite step: the just-written state is poisoned —
+                # reinstate the last good snapshot and retry this batch
+                params, opt_state = guard.restore()
+                if args.mesh:
+                    params = jax.device_put(params, pshard)
+                    opt_state = jax.device_put(opt_state, oshard)
+                print(f"step {step:5d} non-finite ({verdict.reason}); "
+                      f"restored step-{guard.snapshot_step} state, retrying")
+            if verdict is not None and verdict.fallback_dropless:
+                applied = False
+                if args.mesh and opts.get("ragged_bound") not in (0, None):
+                    opts["ragged_bound"] = 0  # provably dropless shards
+                    mon = opts.get("load_monitor")
+                    if mon is not None:  # keep auto mode from re-shrinking
+                        mon.force_dropless = True
+                    step_fn, pshard, oshard = jit_train_step(
+                        cfg, opt, mesh, args.batch, args.seq,
+                        num_microbatches=args.microbatches, opts=opts,
+                        placement=hook.placement if hook is not None
+                        else None)
+                    applied = True
+                    if sink is not None:
+                        modeled = modeled_of(step_fn, params, opt_state,
+                                             batch, step)
+                obs_events.emit(sink, obs_events.DROP_FALLBACK, step=step,
+                                applied=applied)
+                print(f"step {step:5d} sustained drop spike: "
+                      + ("forced dropless ragged bound" if applied else
+                         "no bounded ragged exchange active (event only)"))
+            if sink is not None:
+                counters = {k: float(metrics[k])
+                            for k in ("loss", "drop_frac", "wire_elems",
+                                      "wire_bytes", "wire_bytes_intra",
+                                      "wire_bytes_inter", "dropped",
+                                      "shadow_hits", "imbalance")
+                            if k in metrics}
+                sink.emit(StepStats("train_step", step, time.time() - ts,
+                                    counters=counters,
+                                    modeled=modeled).record())
+            new_fn = None
+            if hook is not None:
+                params, opt_state, new_fn = hook.observe(
+                    step, metrics, params, opt_state,
+                    loss=loss if guard is not None else None,
+                    drop=drop if guard is not None else None)
+                if new_fn is not None:
+                    step_fn = new_fn
+                    if sink is not None:  # new layout -> new profile
+                        modeled = modeled_of(step_fn, params, opt_state,
+                                             batch, step)
+                    p = hook.placement
+                    print(f"step {step:5d} replan: shadow={p.num_shadow} "
+                          f"cap_scale={p.capacity_scale:.2f} "
+                          f"imbalance={hook.monitor.imbalance:.2f}")
+            if guard is not None:
+                # post-observe so the snapshot is in the live physical
+                # layout; force after a migration for the same reason
+                guard.commit(step, params, opt_state,
+                             force=new_fn is not None)
+            if manager is not None:
+                manager.maybe_save(
+                    step, {"params": params, "opt": opt_state},
+                    placement=hook.placement if hook is not None else None)
+            if step % args.log_every == 0:
+                print(f"step {step:5d} loss {float(metrics['loss']):.4f} "
+                      f"gnorm {float(metrics['grad_norm']):.3f} "
+                      f"({time.time() - t0:.1f}s)")
+            step += 1
+    except TrainingAborted as e:
+        # persist the last good state so --resume can pick the run back up
+        # (snapshot_step < start_step means only the seed exists — nothing
+        # was accomplished, and labeling the init as a completed step would
+        # skew a later resume's data fast-forward)
+        if (manager is not None and guard is not None
+                and guard.snapshot is not None
+                and guard.snapshot_step >= start_step):
+            p_good, o_good = guard.snapshot
+            manager.save(guard.snapshot_step,
+                         {"params": p_good, "opt": o_good},
+                         placement=hook.placement if hook is not None
+                         else None)
+        print(f"aborted: {e}")
         if sink is not None:
-            counters = {k: float(metrics[k])
-                        for k in ("loss", "drop_frac", "wire_elems",
-                                  "wire_bytes", "wire_bytes_intra",
-                                  "wire_bytes_inter", "dropped",
-                                  "shadow_hits", "imbalance") if k in metrics}
-            sink.emit(StepStats("train_step", step, time.time() - ts,
-                                counters=counters, modeled=modeled).record())
-        if hook is not None:
-            params, opt_state, new_fn = hook.observe(step, metrics, params,
-                                                     opt_state)
-            if new_fn is not None:
-                step_fn = new_fn
-                if sink is not None:  # new layout -> new collective profile
-                    modeled = modeled_of(step_fn, params, opt_state, batch,
-                                         step)
-                p = hook.placement
-                print(f"step {step:5d} replan: shadow={p.num_shadow} "
-                      f"cap_scale={p.capacity_scale:.2f} "
-                      f"imbalance={hook.monitor.imbalance:.2f}")
-        if step % args.log_every == 0:
-            print(f"step {step:5d} loss {float(metrics['loss']):.4f} "
-                  f"gnorm {float(metrics['grad_norm']):.3f} "
-                  f"({time.time() - t0:.1f}s)")
+            sink.close()
+        raise SystemExit(1)
+    if manager is not None and step > start_step:
+        # final save so a completed run is always resumable/extendable
+        manager.maybe_save(step - 1, {"params": params, "opt": opt_state},
+                           placement=hook.placement if hook is not None
+                           else None, force=True)
     print(f"done: {args.steps} steps in {time.time() - t0:.1f}s")
     if sink is not None:
         sink.close()

@@ -1,12 +1,14 @@
 """Unified telemetry (ISSUE 6): device-side wire/drop/shadow counters
 (:mod:`counters`), the host-side span tracer with Chrome-trace export
-(:mod:`trace`), pluggable metrics sinks (:mod:`sink`), and the
-modeled-vs-measured StepStats record (:mod:`stats`).
+(:mod:`trace`), pluggable metrics sinks (:mod:`sink`), the
+modeled-vs-measured StepStats record (:mod:`stats`), and the resilience
+layer's incident-event vocabulary (:mod:`events`).
 
 Import discipline: :mod:`counters` depends only on jax, :mod:`trace` and
 :mod:`sink` only on the stdlib (+numpy), so ``repro.core`` may import them
 without cycles; :mod:`stats` pulls ``repro.launch.roofline`` lazily.
 """
+from repro.obs import events  # noqa: F401
 from repro.obs import trace  # noqa: F401
 from repro.obs.counters import ObsCounters  # noqa: F401
 from repro.obs.sink import (CsvSink, JsonlSink, MemorySink,  # noqa: F401

@@ -457,12 +457,28 @@ class PlacementController:
         else:
             self.current = identity_placement(monitor.num_experts, num_ranks)
         self.replans = 0
+        self.rollbacks = 0
+        # plans that regressed post-migration and were rolled back
+        # (launch.train.ReplanHook probation): never propose them again
+        self._blacklist: set = set()
 
     def _cost(self, plan, load) -> float:
         ckw = {k: v for k, v in self.kw.items() if k != "shrink_capacity"}
         if self.num_layers:
             return per_layer_cost(plan, load, **ckw).total_s
         return placement_cost(plan, load, **ckw).total_s
+
+    def blacklist(self, plan) -> None:
+        """Bar a plan from ever being proposed again (post-rollback).  Plans
+        are NamedTuples of hashables, so the plan itself is the key."""
+        self._blacklist.add(plan)
+
+    def rollback(self, to_plan, bad_plan) -> None:
+        """Record a probation rollback: the live layout returns to
+        ``to_plan`` and ``bad_plan`` joins the blacklist."""
+        self.current = to_plan
+        self.blacklist(bad_plan)
+        self.rollbacks += 1
 
     def maybe_replan(self, step: int):
         """New plan to migrate to, or None to keep the current layout."""
@@ -474,6 +490,8 @@ class PlacementController:
         else:
             load = self.monitor.load_ema
             cand = plan_placement(load, self.num_ranks, **self.kw)
+        if cand in self._blacklist:
+            return None
         now = self._cost(self.current, load)
         new = self._cost(cand, load)
         if new < now * (1.0 - self.min_gain) and cand != self.current:

@@ -1,0 +1,24 @@
+"""Resilience layer (ISSUE 8): fault-tolerant training for a system that
+replans placement and re-jits mid-run.
+
+* :mod:`faults` — deterministic fault-injection registry (crash-at-point,
+  corrupt-array, inject-nonfinite, drop-spike), armable from the
+  ``REPRO_FAULTS`` env var for subprocess drills.
+* :mod:`guard` — the per-step guard: non-finite loss/grad detection with
+  bounded retry from a last-good snapshot, sustained-drop-spike fallback
+  to the dropless bound, and the post-replan probation window.
+* :mod:`recovery` — :class:`CheckpointManager`: periodic atomic verified
+  saves with retention GC and newest-complete-wins auto-resume.
+
+Import order matters for the lazy cycle with :mod:`repro.checkpoint`
+(ckpt fires fault points): ``faults`` first, then ``guard``, then
+``recovery`` (which imports checkpoint).
+"""
+from repro.resilience import faults  # noqa: F401  (must import first)
+from repro.resilience.guard import (GuardVerdict, ProbationDecision,  # noqa: F401
+                                    ReplanProbation, StepGuard,
+                                    TrainingAborted)
+from repro.resilience.recovery import CheckpointManager  # noqa: F401
+
+__all__ = ["CheckpointManager", "GuardVerdict", "ProbationDecision",
+           "ReplanProbation", "StepGuard", "TrainingAborted", "faults"]

@@ -1,0 +1,242 @@
+"""Step guard: non-finite detection, last-good snapshots, drop-spike
+fallback, and the post-replan probation window (ISSUE 8 tentpole).
+
+A single NaN step silently corrupts the weights forever — the loss keeps
+"training" on poisoned params long after the incident.  The guard breaks
+that failure mode at the train loop:
+
+* :meth:`StepGuard.commit` keeps a *copy* of (params, opt_state) after each
+  verified-finite step (every ``snapshot_every``-th to amortize the copy).
+  Copies are mandatory — the jitted step donates its input buffers, so a
+  bare reference would be invalidated one step later.
+* :meth:`StepGuard.check` inspects the step's host-side loss/grad_norm:
+  non-finite means the just-written state is discarded and
+  :meth:`StepGuard.restore` hands back a fresh copy of the last good
+  snapshot for a bounded retry (``max_bad_steps`` consecutive failures
+  raise :class:`TrainingAborted` — a persistent NaN is a bug, not a
+  transient).
+* A sustained ``drop_frac`` above ``drop_threshold`` for ``drop_patience``
+  consecutive steps signals the dropless-bound fallback exactly once
+  (``GuardVerdict.fallback_dropless``); the train loop re-jits with
+  ``ragged_bound=0`` — the provably-dropless shard width.
+
+:class:`ReplanProbation` applies the same skepticism to placement replans:
+a freshly migrated plan is on probation for a window of steps, judged
+against the pre-replan loss/drop baseline; regression means the migration
+is inverted and the plan blacklisted (see launch.train.ReplanHook).
+
+Every skip/restore/abort/spike emits a :mod:`repro.obs.events` record.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.obs import events as obs_events
+
+
+class TrainingAborted(RuntimeError):
+    """Raised when more than ``max_bad_steps`` consecutive steps go bad."""
+
+
+class GuardVerdict(NamedTuple):
+    ok: bool
+    reason: str = ""
+    fallback_dropless: bool = False  # only ever True on an ok verdict
+
+
+def _copy_tree(tree):
+    return jax.tree.map(jnp.copy, tree)
+
+
+class StepGuard:
+    def __init__(self, *, max_bad_steps: int = 3, drop_threshold: float = 0.25,
+                 drop_patience: int = 4, snapshot_every: int = 1, sink=None):
+        self.max_bad_steps = int(max_bad_steps)
+        self.drop_threshold = float(drop_threshold)
+        self.drop_patience = int(drop_patience)
+        self.snapshot_every = max(1, int(snapshot_every))
+        self.sink = sink
+        self._snap = None  # (params, opt_state) copies
+        self._snap_step = None
+        self.bad_streak = 0
+        self.bad_total = 0
+        self._drop_streak = 0
+        self._fallback_signalled = False
+
+    # -- snapshots ----------------------------------------------------------
+
+    def commit(self, step: int, params, opt_state, *,
+               force: bool = False) -> None:
+        """Record a verified-good state (copied; survives buffer donation).
+
+        Resets the consecutive-bad counter; snapshots every
+        ``snapshot_every``-th committed step (the first always).  ``force``
+        snapshots regardless of cadence — the train loop forces one after
+        every placement migration so a later restore never reinstates
+        params in a stale physical layout under a re-jitted step.
+        """
+        self.bad_streak = 0
+        due = (force or self._snap is None or self.snapshot_every == 1
+               or step - self._snap_step >= self.snapshot_every)
+        if due:
+            self._snap = _copy_tree((params, opt_state))
+            self._snap_step = step
+
+    def restore(self):
+        """Fresh copies of the last good (params, opt_state).
+
+        Copies again so the caller can feed them into a donating step
+        function while the snapshot stays intact for repeated retries.
+        """
+        if self._snap is None:
+            raise TrainingAborted("no good state to restore from")
+        obs_events.emit(self.sink, obs_events.GUARD_RESTORE,
+                        step=self._snap_step)
+        return _copy_tree(self._snap)
+
+    @property
+    def snapshot_step(self) -> Optional[int]:
+        return self._snap_step
+
+    @property
+    def snapshot(self):
+        """The raw last-good (params, opt_state) — no copy, no event (for
+        crash-consistent final saves on abort; do not train on these)."""
+        return self._snap
+
+    # -- per-step verdict ---------------------------------------------------
+
+    def check(self, step: int, *, loss: float, grad_norm: Optional[float] = None,
+              drop: float = 0.0) -> GuardVerdict:
+        bad = not math.isfinite(loss)
+        if grad_norm is not None and not math.isfinite(grad_norm):
+            bad = True
+        if bad:
+            self.bad_streak += 1
+            self.bad_total += 1
+            obs_events.emit(self.sink, obs_events.GUARD_SKIP, step=step,
+                            loss=float(loss),
+                            grad_norm=(None if grad_norm is None
+                                       else float(grad_norm)),
+                            bad_streak=self.bad_streak)
+            if self.bad_streak > self.max_bad_steps:
+                obs_events.emit(self.sink, obs_events.GUARD_ABORT, step=step,
+                                bad_streak=self.bad_streak)
+                raise TrainingAborted(
+                    f"step {step}: {self.bad_streak} consecutive non-finite "
+                    f"steps (> max_bad_steps={self.max_bad_steps})")
+            return GuardVerdict(False, "nonfinite")
+        # drop spikes only tick on finite steps (a NaN step's drop counter
+        # is as poisoned as its loss)
+        if drop > self.drop_threshold:
+            self._drop_streak += 1
+        else:
+            self._drop_streak = 0
+        fb = False
+        if (self._drop_streak >= self.drop_patience
+                and not self._fallback_signalled):
+            fb = True
+            self._fallback_signalled = True  # one fallback per run
+            self._drop_streak = 0
+            obs_events.emit(self.sink, obs_events.DROP_SPIKE, step=step,
+                            drop_frac=float(drop),
+                            patience=self.drop_patience,
+                            threshold=self.drop_threshold)
+        return GuardVerdict(True, fallback_dropless=fb)
+
+
+# ---------------------------------------------------------------------------
+# Replan probation (the rollback brain; ReplanHook executes the migration)
+# ---------------------------------------------------------------------------
+
+
+class ProbationDecision(NamedTuple):
+    rollback: bool
+    reason: str = ""
+    old_plan: object = None  # the plan to roll back to (rollback=True only)
+    new_plan: object = None  # the regressing plan (for blacklisting)
+
+
+class ReplanProbation:
+    """Judge a freshly applied placement plan against pre-replan baselines.
+
+    ``start`` opens a ``window``-step probation carrying the old plan and
+    the baseline loss/drop EMAs; ``observe`` feeds post-replan per-step
+    metrics.  Once ``min_samples`` have accrued, a post-replan mean loss
+    above ``baseline * loss_tol`` or mean drop above
+    ``baseline + drop_tol`` returns a rollback decision immediately;
+    surviving the window commits the plan.  Missing metrics (None) simply
+    don't participate — a drop-only caller still gets drop protection.
+    """
+
+    def __init__(self, *, window: int = 16, loss_tol: float = 1.05,
+                 drop_tol: float = 0.05, min_samples: int = 3, sink=None):
+        self.window = int(window)
+        self.loss_tol = float(loss_tol)
+        self.drop_tol = float(drop_tol)
+        self.min_samples = int(min_samples)
+        self.sink = sink
+        self._active = None
+
+    @property
+    def active(self) -> bool:
+        return self._active is not None
+
+    @property
+    def old_plan(self):
+        return self._active["old"] if self._active else None
+
+    @property
+    def new_plan(self):
+        return self._active["new"] if self._active else None
+
+    def start(self, step: int, old_plan, new_plan, *,
+              baseline_loss: Optional[float] = None,
+              baseline_drop: Optional[float] = None) -> None:
+        self._active = {"start": step, "old": old_plan, "new": new_plan,
+                        "baseline_loss": baseline_loss,
+                        "baseline_drop": baseline_drop,
+                        "losses": [], "drops": []}
+
+    def _finish(self, step: int, kind: str, **fields) -> None:
+        obs_events.emit(self.sink, kind, step=step,
+                        start=self._active["start"], **fields)
+        self._active = None
+
+    def observe(self, step: int, *, loss: Optional[float] = None,
+                drop: Optional[float] = None) -> ProbationDecision:
+        """Feed one post-replan step; decides rollback/commit/keep-watching."""
+        a = self._active
+        if a is None:
+            return ProbationDecision(False)
+        if loss is not None and math.isfinite(loss):
+            a["losses"].append(float(loss))
+        if drop is not None and math.isfinite(drop):
+            a["drops"].append(float(drop))
+        n = max(len(a["losses"]), len(a["drops"]))
+        if n >= self.min_samples:
+            bl, bd = a["baseline_loss"], a["baseline_drop"]
+            old, new = a["old"], a["new"]
+            if (bl is not None and a["losses"]
+                    and sum(a["losses"]) / len(a["losses"]) > bl * self.loss_tol):
+                mean = sum(a["losses"]) / len(a["losses"])
+                self._finish(step, obs_events.REPLAN_ROLLBACK, metric="loss",
+                             mean=mean, baseline=bl)
+                return ProbationDecision(True,
+                                         f"loss {mean:.4f} > {bl:.4f}"
+                                         f" * {self.loss_tol}", old, new)
+            if (bd is not None and a["drops"]
+                    and sum(a["drops"]) / len(a["drops"]) > bd + self.drop_tol):
+                mean = sum(a["drops"]) / len(a["drops"])
+                self._finish(step, obs_events.REPLAN_ROLLBACK, metric="drop",
+                             mean=mean, baseline=bd)
+                return ProbationDecision(True,
+                                         f"drop {mean:.4f} > {bd:.4f}"
+                                         f" + {self.drop_tol}", old, new)
+        if step - a["start"] >= self.window:
+            self._finish(step, obs_events.REPLAN_COMMIT)
+        return ProbationDecision(False)

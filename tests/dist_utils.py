@@ -46,13 +46,23 @@ def run(script: str, devices: int = 8, timeout: int = 560) -> str:
     return out.stdout
 
 
-def run_cli(argv: list, devices: int = 4, timeout: int = 560):
-    """Run a ``python -m`` CLI (e.g. repro.launch.train) on fake devices."""
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
-    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+def run_cli(argv: list, devices: int = 4, timeout: int = 560, env=None,
+            check: bool = True):
+    """Run a ``python -m`` CLI (e.g. repro.launch.train) on fake devices.
+
+    ``env`` adds/overrides child environment vars (e.g. ``REPRO_FAULTS``
+    for the resilience drills).  ``check=False`` returns the
+    CompletedProcess instead of asserting exit 0 — crash drills assert a
+    *specific* non-zero code (faults.CRASH_EXIT_CODE)."""
+    child = dict(os.environ)
+    child["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    child["PYTHONPATH"] = os.path.join(ROOT, "src")
+    if env:
+        child.update(env)
     out = subprocess.run([sys.executable, "-m"] + argv, capture_output=True,
-                         text=True, env=env, timeout=timeout, cwd=ROOT)
+                         text=True, env=child, timeout=timeout, cwd=ROOT)
+    if not check:
+        return out
     assert out.returncode == 0, out.stderr[-3000:]
     return out.stdout
 

@@ -1,0 +1,459 @@
+"""Fault-tolerance tests (ISSUE 8 acceptance).
+
+Unit layer: atomic verified checkpoints (checksums, the ``complete``
+marker, numeric step ordering, strict dtypes, GC), the step guard
+(non-finite skip/restore/abort, drop-spike fallback), replan probation,
+and the deterministic fault registry.
+
+Drill layer (subprocess, via tests/dist_utils.py): the CLI drills the
+issue names — SIGKILL mid-save then ``--resume`` restores the last
+complete checkpoint; an injected NaN step is skipped and retried from the
+last good state; resume reproduces the uninterrupted run bitwise; a
+post-replan loss regression rolls the migration back and blacklists the
+plan — each leaving its obs event trail.
+"""
+import json
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import dist_utils as du
+from repro.checkpoint import ckpt
+from repro.obs import events as obs_events
+from repro.resilience import (CheckpointManager, ReplanProbation, StepGuard,
+                              TrainingAborted, faults)
+
+
+class ListSink:
+    def __init__(self):
+        self.records = []
+
+    def emit(self, rec):
+        self.records.append(rec)
+
+    def kinds(self):
+        return [r.get("kind") for r in self.records]
+
+
+@pytest.fixture(autouse=True)
+def _clean_faults():
+    faults.clear()
+    faults.set_sink(None)
+    yield
+    faults.clear()
+    faults.set_sink(None)
+
+
+def _tree():
+    return {"w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+            "inner": {"b": jnp.ones((5,), jnp.bfloat16),
+                      "step": jnp.int32(7)}}
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint durability units
+# ---------------------------------------------------------------------------
+
+
+def test_save_restore_roundtrip_bitwise(tmp_path):
+    tree = _tree()
+    path = str(tmp_path / "step_00000003")
+    ckpt.save(path, tree, step=3)
+    out = ckpt.restore(path, tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        assert a.dtype == np.asarray(b).dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+    m = ckpt.load_manifest(path)
+    assert m["complete"] and m["step"] == 3
+    # bf16 leaves declare bf16 in the manifest even though the file is f32
+    assert m["params"]["inner/b"]["dtype"] == "bfloat16"
+
+
+def test_incomplete_and_tmp_dirs_are_invisible(tmp_path):
+    """Satellite 1: latest_step skips torn writes and temp dirs, and sorts
+    steps numerically (step_9 < step_10000 — the lexicographic trap)."""
+    root = str(tmp_path)
+    tree = _tree()
+    for s in (9, 10000):
+        ckpt.save(ckpt.step_path(root, s), tree, step=s)
+    # a torn legacy write: arrays but no manifest
+    torn = ckpt.step_path(root, 20000)
+    os.makedirs(torn)
+    np.save(os.path.join(torn, "arr_00000.npy"), np.zeros(3))
+    # an interrupted save: manifest present but no complete marker
+    unmarked = ckpt.step_path(root, 30000)
+    shutil.copytree(ckpt.step_path(root, 9), unmarked)
+    m = ckpt.load_manifest(unmarked)
+    del m["complete"]
+    with open(os.path.join(unmarked, ckpt.MANIFEST), "w") as f:
+        json.dump(m, f)
+    # a crashed save's temp dir
+    os.makedirs(os.path.join(root, ".tmp-step_99999999.12345"))
+    assert ckpt.latest_step(root) == ckpt.step_path(root, 10000)
+    assert [s for s, _ in ckpt.complete_steps(root)] == [9, 10000]
+    with pytest.raises(ckpt.CheckpointError):
+        ckpt.restore(unmarked, tree)
+
+
+def test_crash_mid_save_leaves_prior_checkpoint_intact(tmp_path):
+    """In-process analogue of the SIGKILL drill: a save that dies before
+    the atomic publish leaves only the temp dir; the prior checkpoint and
+    latest_step are untouched."""
+    root = str(tmp_path)
+    tree = _tree()
+    ckpt.save(ckpt.step_path(root, 1), tree, step=1)
+
+    class Boom(Exception):
+        pass
+
+    real_replace = os.replace
+
+    def no_publish(src, dst):
+        raise Boom  # everything before the publish already happened
+
+    os.replace = no_publish
+    try:
+        with pytest.raises(Boom):
+            ckpt.save(ckpt.step_path(root, 2), tree, step=2)
+    finally:
+        os.replace = real_replace
+    assert ckpt.latest_step(root) == ckpt.step_path(root, 1)
+    assert any(d.startswith(".tmp-") for d in os.listdir(root))
+    # GC (from another pid's perspective) sweeps the stale temp dir
+    stale = [d for d in os.listdir(root) if d.startswith(".tmp-")][0]
+    os.rename(os.path.join(root, stale),
+              os.path.join(root, ".tmp-step_00000002.99999"))
+    removed = ckpt.gc_checkpoints(root, keep=3)
+    assert len(removed) == 1
+    assert not any(d.startswith(".tmp-") for d in os.listdir(root))
+
+
+def test_restore_catches_bit_rot(tmp_path):
+    tree = _tree()
+    path = str(tmp_path / "step_00000001")
+    ckpt.save(path, tree, step=1)
+    victim = os.path.join(path, ckpt.load_manifest(path)["params"]["w"]["file"])
+    faults.corrupt_file(victim)
+    with pytest.raises(ckpt.CheckpointError, match="checksum"):
+        ckpt.restore(path, tree)
+    ckpt.restore(path, tree, verify=False)  # opt-out still loads
+
+
+def test_restore_dtype_strict(tmp_path):
+    """Satellite 2: manifest dtype must match the restore target; the only
+    coercion is the internal bf16<->f32 storage round-trip."""
+    tree = {"w": jnp.ones((2, 2), jnp.float32)}
+    path = str(tmp_path / "step_00000001")
+    ckpt.save(path, tree, step=1)
+    with pytest.raises(ValueError, match="dtype"):
+        ckpt.restore(path, {"w": jnp.ones((2, 2), jnp.bfloat16)})
+    with pytest.raises(ValueError, match="shape"):
+        ckpt.restore(path, {"w": jnp.ones((2, 3), jnp.float32)})
+    with pytest.raises(ValueError, match="mismatch"):
+        ckpt.restore(path, {"v": jnp.ones((2, 2), jnp.float32)})
+
+
+def test_corrupt_array_fault_is_caught_by_restore(tmp_path):
+    """The registry's post-checksum corrupt_array fault models bit-rot the
+    manifest checksum must catch (match filters by flat key)."""
+    faults.arm({"kind": "corrupt_array", "point": "ckpt_save_file",
+                "match": "inner/b", "at": 1})
+    tree = _tree()
+    path = str(tmp_path / "step_00000001")
+    ckpt.save(path, tree, step=1)
+    assert faults.fired and faults.fired[0]["fault_kind"] == "corrupt_array"
+    with pytest.raises(ckpt.CheckpointError, match="inner/b"):
+        ckpt.restore(path, tree)
+
+
+def test_manager_cadence_gc_and_corrupt_fallback(tmp_path):
+    sink = ListSink()
+    mgr = CheckpointManager(str(tmp_path), save_every=2, keep=2, sink=sink)
+    tree = _tree()
+    for s in range(6):
+        mgr.maybe_save(s, tree)
+    # cadence counts completed steps: saves after 1, 3, 5; keep=2 GCs step 1
+    assert [s for s, _ in ckpt.complete_steps(str(tmp_path))] == [3, 5]
+    assert obs_events.of_kind(sink.records, obs_events.CKPT_GC)
+    # corrupt the newest: restore_latest falls back to step 3 with events
+    newest = ckpt.step_path(str(tmp_path), 5)
+    faults.corrupt_file(os.path.join(
+        newest, ckpt.load_manifest(newest)["params"]["w"]["file"]))
+    out = mgr.restore_latest(tree)
+    assert out is not None and out[1] == 3
+    assert [r["step"] for r in
+            obs_events.of_kind(sink.records, obs_events.CKPT_CORRUPT)] == [5]
+    assert [r["step"] for r in
+            obs_events.of_kind(sink.records, obs_events.RESUME)] == [3]
+
+
+# ---------------------------------------------------------------------------
+# Step guard units
+# ---------------------------------------------------------------------------
+
+
+def test_guard_skip_restore_then_abort():
+    sink = ListSink()
+    g = StepGuard(max_bad_steps=2, sink=sink)
+    p, o = {"w": jnp.ones((3,))}, {"m": jnp.zeros((3,))}
+    g.commit(0, p, o)
+    assert not g.check(1, loss=float("nan")).ok
+    rp, ro = g.restore()
+    np.testing.assert_array_equal(np.asarray(rp["w"]), np.ones(3))
+    assert rp["w"] is not p["w"]  # fresh copy: safe to donate
+    assert not g.check(1, loss=1.0, grad_norm=float("inf")).ok
+    with pytest.raises(TrainingAborted):
+        g.check(1, loss=float("nan"))
+    ks = sink.kinds()
+    assert ks.count(obs_events.GUARD_SKIP) == 3
+    assert ks[-1] == obs_events.GUARD_ABORT
+    # a good step resets the streak
+    g2 = StepGuard(max_bad_steps=1)
+    g2.commit(0, p, o)
+    for s in range(1, 5):  # alternating bad/good never aborts
+        assert not g2.check(s, loss=float("nan")).ok
+        g2.commit(s, p, o)
+        assert g2.check(s, loss=0.5).ok
+
+
+def test_guard_snapshot_cadence_and_force():
+    g = StepGuard(snapshot_every=4)
+    p = {"w": jnp.zeros((2,))}
+    g.commit(0, p, p)
+    g.commit(1, {"w": jnp.ones((2,))}, p)  # within cadence: not snapshotted
+    assert g.snapshot_step == 0
+    g.commit(2, {"w": jnp.full((2,), 2.0)}, p, force=True)  # post-migration
+    assert g.snapshot_step == 2
+    np.testing.assert_array_equal(np.asarray(g.restore()[0]["w"]),
+                                  np.full(2, 2.0))
+
+
+def test_guard_drop_fallback_is_one_shot():
+    sink = ListSink()
+    g = StepGuard(drop_threshold=0.2, drop_patience=3, sink=sink)
+    g.commit(0, {}, {})
+    hits = [g.check(s, loss=1.0, drop=0.5).fallback_dropless
+            for s in range(1, 10)]
+    assert hits == [False, False, True] + [False] * 6
+    assert sink.kinds().count(obs_events.DROP_SPIKE) == 1
+    # sub-threshold steps reset the streak
+    g2 = StepGuard(drop_threshold=0.2, drop_patience=3)
+    g2.commit(0, {}, {})
+    seq = [0.5, 0.5, 0.1, 0.5, 0.5, 0.5]
+    assert [g2.check(i, loss=1.0, drop=d).fallback_dropless
+            for i, d in enumerate(seq)] == [False] * 5 + [True]
+
+
+# ---------------------------------------------------------------------------
+# Probation + fault registry units
+# ---------------------------------------------------------------------------
+
+
+def test_probation_rollback_and_commit():
+    sink = ListSink()
+    pr = ReplanProbation(window=8, loss_tol=1.05, min_samples=3, sink=sink)
+    pr.start(10, "OLD", "NEW", baseline_loss=1.0, baseline_drop=0.0)
+    assert not pr.observe(11, loss=2.0).rollback  # min_samples not reached
+    assert not pr.observe(12, loss=2.0).rollback
+    d = pr.observe(13, loss=2.0)
+    assert d.rollback and d.old_plan == "OLD" and d.new_plan == "NEW"
+    assert not pr.active
+    assert sink.kinds() == [obs_events.REPLAN_ROLLBACK]
+    # surviving the window commits
+    pr.start(20, "OLD", "NEW2", baseline_loss=1.0, baseline_drop=0.0)
+    for s in range(21, 29):
+        assert not pr.observe(s, loss=1.0).rollback
+    assert not pr.active
+    assert sink.kinds()[-1] == obs_events.REPLAN_COMMIT
+    # drop regression judges even without a loss baseline
+    pr.start(30, "OLD", "NEW3", baseline_drop=0.0)
+    for _ in range(3):
+        d = pr.observe(31, drop=0.2)
+    assert d.rollback
+
+
+def test_fault_hit_count_and_nonfinite_one_shot():
+    faults.arm({"kind": "nonfinite", "point": "train_step", "step": 3,
+                "until": 100})
+    p = {"w": jnp.ones((2,), jnp.bfloat16), "i": jnp.int32(1)}
+    m = {"loss": jnp.float32(1.0), "grad_norm": jnp.float32(1.0)}
+    p1, _, m1 = faults.apply_step(p, {}, m, step=2)
+    assert np.isfinite(float(m1["loss"]))  # before the step range
+    p2, _, m2 = faults.apply_step(p, {}, m, step=3)
+    assert not np.isfinite(float(m2["loss"]))
+    assert not np.isfinite(np.asarray(p2["w"], np.float32)).any()
+    assert p2["w"].dtype == jnp.bfloat16 and int(p2["i"]) == 1
+    # one-shot even though the step range extends: the retry must succeed
+    p3, _, m3 = faults.apply_step(p, {}, m, step=3)
+    assert np.isfinite(float(m3["loss"]))
+    assert not faults.armed()
+    # drop_spike overrides metrics only
+    faults.arm({"kind": "drop_spike", "point": "train_step", "step": 5,
+                "value": 0.9})
+    _, _, m4 = faults.apply_step(p, {}, m, step=5)
+    assert float(m4["drop_frac"]) == pytest.approx(0.9)
+
+
+# ---------------------------------------------------------------------------
+# CLI drills (subprocess; the acceptance scenarios the issue names)
+# ---------------------------------------------------------------------------
+
+
+_CLI = ["repro.launch.train", "--arch", "fastmoe-gpt", "--reduced",
+        "--batch", "2", "--seq", "32", "--log_every", "1"]
+
+
+def _losses(out: str) -> dict:
+    """step -> printed loss (4 decimals: the bitwise-equality fingerprint)."""
+    res = {}
+    for line in out.splitlines():
+        parts = line.split()
+        if len(parts) >= 4 and parts[0] == "step" and parts[2] == "loss":
+            res[int(parts[1])] = parts[3]
+    return res
+
+
+@pytest.fixture(scope="module")
+def reference_run():
+    """One uninterrupted 6-step run; every drill must reproduce its losses."""
+    return _losses(du.run_cli(_CLI + ["--steps", "6"], devices=1))
+
+
+def test_cli_crash_mid_save_then_resume(tmp_path, reference_run):
+    """SIGKILL (os._exit) right before the atomic publish of the step-3
+    checkpoint: the partial save is invisible, --resume restores step 1 and
+    replays to the reference trajectory bitwise."""
+    ck = str(tmp_path / "ck")
+    spec = [{"kind": "crash", "point": "ckpt_save_pre_commit", "at": 2}]
+    out = du.run_cli(_CLI + ["--steps", "6", "--ckpt_dir", ck,
+                             "--save_every", "2"],
+                     devices=1, env={"REPRO_FAULTS": json.dumps(spec)},
+                     check=False)
+    assert out.returncode == faults.CRASH_EXIT_CODE, out.stderr[-2000:]
+    assert ckpt.latest_step(ck) == ckpt.step_path(ck, 1)
+    assert any(d.startswith(".tmp-") for d in os.listdir(ck))
+    metrics = str(tmp_path / "m.jsonl")
+    out2 = du.run_cli(_CLI + ["--steps", "6", "--ckpt_dir", ck,
+                              "--save_every", "2", "--resume",
+                              "--metrics_out", metrics], devices=1)
+    assert "resumed from step 1" in out2
+    got = _losses(out2)
+    assert all(got[s] == reference_run[s] for s in range(2, 6)), (
+        got, reference_run)
+    kinds = [json.loads(l).get("kind") for l in open(metrics)]
+    assert obs_events.RESUME in kinds and obs_events.CKPT_SAVE in kinds
+    assert not any(d.startswith(".tmp-") for d in os.listdir(ck))  # GC swept
+
+
+def test_cli_nan_step_skipped_and_retried(tmp_path, reference_run):
+    """An injected NaN at step 2 is skipped; the retry from the last good
+    snapshot lands on the uninterrupted trajectory, with the incident trail
+    (fault -> guard_skip -> guard_restore) in --metrics_out."""
+    metrics = str(tmp_path / "m.jsonl")
+    spec = [{"kind": "nonfinite", "point": "train_step", "step": 2}]
+    out = du.run_cli(_CLI + ["--steps", "4", "--metrics_out", metrics],
+                     devices=1, env={"REPRO_FAULTS": json.dumps(spec)})
+    assert "non-finite" in out and "retrying" in out
+    got = _losses(out)
+    assert all(got[s] == reference_run[s] for s in range(4)), (
+        got, reference_run)
+    kinds = [json.loads(l).get("kind") for l in open(metrics)]
+    i = kinds.index(obs_events.FAULT)
+    assert kinds[i:i + 3] == [obs_events.FAULT, obs_events.GUARD_SKIP,
+                              obs_events.GUARD_RESTORE]
+
+
+def test_cli_resume_equivalence(tmp_path, reference_run):
+    """Stop at 4, resume to 6: the resumed half matches the uninterrupted
+    run bitwise (the data stream fast-forwards deterministically)."""
+    ck = str(tmp_path / "ck")
+    du.run_cli(_CLI + ["--steps", "4", "--ckpt_dir", ck], devices=1)
+    out = du.run_cli(_CLI + ["--steps", "6", "--ckpt_dir", ck, "--resume"],
+                     devices=1)
+    assert "resumed from step 3" in out
+    got = _losses(out)
+    assert all(got[s] == reference_run[s] for s in (4, 5)), (
+        got, reference_run)
+
+
+def test_cli_sustained_drop_spike_emits_fallback(tmp_path):
+    """A sustained injected drop spike trips the guard's one-shot dropless
+    fallback (event-only off-mesh; the re-jit needs a bounded exchange)."""
+    metrics = str(tmp_path / "m.jsonl")
+    spec = [{"kind": "drop_spike", "point": "train_step", "step": 0,
+             "until": 6, "value": 0.9}]
+    out = du.run_cli(_CLI + ["--steps", "6", "--metrics_out", metrics,
+                             "--drop_patience", "3"],
+                     devices=1, env={"REPRO_FAULTS": json.dumps(spec)})
+    assert "sustained drop spike" in out
+    kinds = [json.loads(l).get("kind") for l in open(metrics)]
+    assert kinds.count(obs_events.DROP_SPIKE) == 1
+    assert kinds.count(obs_events.DROP_FALLBACK) == 1
+
+
+def test_replan_rollback_drill():
+    """Hook-level acceptance: a replan whose post-migration loss regresses
+    is inverted — params round-trip bitwise, the plan is blacklisted, and
+    the controller never proposes it again."""
+    print(du.run("""
+    import dataclasses
+    import numpy as np, jax, jax.numpy as jnp
+    from repro.configs import get_config, reduced
+    from repro.launch.mesh import make_local_mesh
+    from repro.launch.train import ReplanHook, jit_train_step
+    from repro.models import lm
+    from repro.optim import AdamW
+
+    class Sink:
+        def __init__(self): self.records = []
+        def emit(self, rec): self.records.append(rec)
+
+    cfg = reduced(get_config("fastmoe-gpt"), num_layers=2, d_model=64)
+    cfg = dataclasses.replace(cfg, moe=dataclasses.replace(cfg.moe,
+                                                           num_experts=16))
+    mesh = make_local_mesh(1, 4)
+    opt = AdamW()
+    B, S = 8, 32
+    sink = Sink()
+    hook = ReplanHook(cfg, opt, mesh, B, S, every=2, sink=sink)
+    hook.controller.min_gain = -10.0  # force accept to exercise rollback
+    _, pshard, oshard = jit_train_step(cfg, opt, mesh, B, S)
+    params = jax.device_put(lm.init_params(jax.random.PRNGKey(0), cfg),
+                            pshard)
+    opt_state = jax.device_put(opt.init(params), oshard)
+    p0 = jax.tree.map(np.asarray, jax.device_get(params))
+    skew = {"load": 1.0 / (np.arange(16) + 1) ** 1.5, "drop_frac": 0.0}
+    step, new_fn = 0, None
+    while new_fn is None:  # healthy baseline until the replan fires
+        params, opt_state, new_fn = hook.observe(step, skew, params,
+                                                 opt_state, loss=1.0)
+        step += 1
+    bad_plan = hook.placement
+    assert hook.probation.active
+    rolled = False
+    for _ in range(10):  # regressing stream: probation must invert it
+        params, opt_state, fn = hook.observe(step, skew, params, opt_state,
+                                             loss=5.0)
+        step += 1
+        if hook.controller.rollbacks:
+            rolled = fn is not None
+            break
+    assert rolled, "rollback never fired"
+    assert bad_plan in hook.controller._blacklist
+    p1 = jax.tree.map(np.asarray, jax.device_get(params))
+    for a, b in zip(jax.tree.leaves(p0), jax.tree.leaves(p1)):
+        np.testing.assert_array_equal(a, b)  # migration inverted bitwise
+    kinds = [r.get("kind") for r in sink.records]
+    assert "replan_rollback" in kinds
+    for _ in range(6):  # blacklisted: the same skew re-proposes nothing
+        params, opt_state, fn = hook.observe(step, skew, params, opt_state,
+                                             loss=1.0)
+        assert fn is None, "blacklisted plan re-proposed"
+        step += 1
+    print("rollback drill ok")
+    """, devices=4))

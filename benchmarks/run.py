@@ -27,7 +27,7 @@ def main() -> None:
 
     from benchmarks import (fig3_gemm, fig5_single_device, fig6_scaling,
                             fig7_end_to_end, fig8_imbalance, fig9_overlap,
-                            fig10_train_step, tab_capacity)
+                            fig10_train_step, fig11_serving, tab_capacity)
     suites = {
         "fig3": fig3_gemm.run,
         "fig5": fig5_single_device.run,
@@ -36,6 +36,7 @@ def main() -> None:
         "fig8": fig8_imbalance.run,
         "fig9": fig9_overlap.run,
         "fig10": fig10_train_step.run,
+        "fig11": fig11_serving.run,
         "tab_capacity": tab_capacity.run,
     }
     picked = args.only.split(",") if args.only else list(suites)

@@ -122,6 +122,12 @@ def moe_bench_table():
                   f"{h['dropless_inter_bound']} "
                   f"inter={h['wire_bytes_auto_inter']:.0f} "
                   f"drop={h['drop_frac_auto']:.3f} |")
+    for r in res.get("fig11", []):
+        print(f"| fig11 | serve {r['mode']} ({r['slots']} slots) | "
+              f"{1e6 / max(r['tok_s'], 1e-9):.0f} | "
+              f"tok_s={r['tok_s']:.1f} p50={r['p50_ms']:.1f}ms "
+              f"p99={r['p99_ms']:.1f}ms ticks={r['ticks']} "
+              f"replans={r['replans']} |")
     for r in res.get("fig10", []):
         if r.get("distributed"):
             split = ("" if "wire_bytes_inter" not in r else

@@ -16,6 +16,13 @@
 #                              --resume, injected-NaN skip/retry, resume
 #                              equivalence, drop-spike fallback, replan
 #                              rollback (tests/test_resilience.py end to end)
+#   ./scripts/ci.sh --serve    the serving loop: continuous batching +
+#                              paged KV cache tests (tier-1's
+#                              test_scheduler.py, including the mid-stream
+#                              replan differential on fake devices) and the
+#                              fig11 serving benchmark in smoke mode (all
+#                              three admission modes must run; continuous
+#                              must beat static tokens/sec)
 #
 # Extra args pass through to pytest.  Full verify stays:
 #   PYTHONPATH=src python -m pytest -x -q
@@ -37,6 +44,12 @@ fi
 if [ "$1" = "--faults" ]; then
     shift
     exec python -m pytest -q tests/test_resilience.py "$@"
+fi
+
+if [ "$1" = "--serve" ]; then
+    shift
+    python -m pytest -q tests/test_scheduler.py "$@"
+    exec python -m benchmarks.run --smoke --only fig11
 fi
 
 python scripts/check_tier1.py

@@ -104,6 +104,15 @@ class DistConfig(NamedTuple):
     # ragged exchange (must lead expert_axes); None = flat exchange
     inter_bound: int = 0  # slim inter-node shard rows (0 = n_inner * bound)
 
+    @classmethod
+    def local(cls, placement=None) -> "DistConfig":
+        """Single-worker carrier: no mesh, no collectives.  fmoe_apply routes
+        a ``mesh=None`` dist to the local §4 path, so this is how a placement
+        (index-table routing over physically reordered params) rides the one
+        distribution-config channel without a device mesh — the replacement
+        for the deprecated bare ``placement=`` kwarg."""
+        return cls(None, (), placement=placement)
+
     @property
     def expert_axes(self) -> tuple:
         return (self.expert_axis if isinstance(self.expert_axis, tuple)
@@ -967,15 +976,30 @@ def fmoe_apply(params: dict, x: jax.Array, cfg: MoEConfig, *, act: str = "swiglu
     single-worker §4 path, otherwise the §3.2 distributed path (mode picked
     by ``dist``).
 
-    ``placement`` (or ``dist.placement``) is an ExpertPlacement: ``params``
-    must already be in its physical order (repro.placement.migrate); routing
-    stays in logical expert space via the plan's index table.  ``l2p`` is
-    *this layer's* logical->physical gate-id table (a traced (E,) int32
-    array) when the plan is per-layer: the layer scan in models/lm.py splits
-    a ``PerLayerPlacement`` into the shared static geometry (riding on
-    ``dist.placement``) plus the stacked tables it threads here — a
+    ``dist.placement`` is an ExpertPlacement: ``params`` must already be in
+    its physical order (repro.placement.migrate); routing stays in logical
+    expert space via the plan's index table.  ``dist`` is the single
+    distribution-config channel — for the single-worker path pass
+    ``DistConfig.local(placement=plan)`` (mesh=None carrier).  The bare
+    ``placement=`` kwarg is deprecated: it warns and forwards onto ``dist``.
+    ``l2p`` is *this layer's* logical->physical gate-id table (a traced (E,)
+    int32 array) when the plan is per-layer: the layer scan in models/lm.py
+    splits a ``PerLayerPlacement`` into the shared static geometry (riding
+    on ``dist.placement``) plus the stacked tables it threads here — a
     PerLayerPlacement itself must not reach this function.
     """
+    if placement is not None:
+        import warnings
+        warnings.warn(
+            "fmoe_apply(placement=...) is deprecated; pass the plan on the "
+            "dist channel instead — DistConfig.local(placement=plan) for "
+            "the single-worker path, dist._replace(placement=plan) for a "
+            "meshed one", DeprecationWarning, stacklevel=2)
+    if dist is not None and dist.mesh is None:
+        # DistConfig.local carrier: unwrap to the single-worker path
+        if placement is None:
+            placement = dist.placement
+        dist = None
     expert_fn = EXPERT_FNS[impl]
     shape = x.shape
     xf = x.reshape(-1, shape[-1])

@@ -1,89 +1,454 @@
-"""Continuous batching scheduler (beyond-paper serving subsystem).
+"""Continuous batching engine (beyond-paper serving subsystem).
 
 A fixed-size decode batch whose slots are independently occupied by
-requests: new prompts prefill into a free slot (single-sequence prefill
-inserted into the batched cache), every decode step advances all active
-slots with PER-SEQUENCE positions, finished sequences free their slot
-immediately for the next queued request — no head-of-line blocking on the
-longest sequence (the vLLM-style serving pattern, sized down).
+requests: new prompts prefill into a free slot every tick, every decode
+step advances all active slots with PER-SEQUENCE positions, finished
+sequences free their slot immediately for the next queued request — no
+head-of-line blocking on the longest sequence (the vLLM-style serving
+pattern, sized down).  Host-side orchestration; the device work is one
+jitted batched decode step per tick regardless of occupancy.
 
-Host-side orchestration; the device work is one jitted batched decode_step
-per tick regardless of occupancy.
+Three pieces beyond the original slot loop:
+
+* **Paged KV cache** — slots read/write a shared block pool
+  (models/lm.init_paged_cache) through per-slot block tables instead of a
+  contiguous (B, W) ring.  A BlockAllocator free-lists the physical
+  blocks; admission reserves the request's full ceil((S+max_new)/bs)
+  blocks up front, so a decode step can never run out of cache mid-flight
+  (lazy growth is a ROADMAP follow-on).  Decode through the table view is
+  bitwise identical to the ring (tests/test_scheduler): the gathered view
+  index equals the absolute position when blocks are table-ordered, and
+  masked entries contribute exact zeros.
+
+* **Online replan** — ServeReplanHook mirrors launch.train.ReplanHook on
+  the serving side: the decode step's (L, E) expert-load feed
+  (make_serve_step(layer_loads=True)) drives a LoadMonitor EMA, a
+  PlacementController polls it every ``replan_every`` ticks, and accepted
+  plans migrate live params + re-jit between ticks under PR-8 probation
+  (drop-frac judged; regressing plans roll back and are blacklisted).
+  Safe mid-traffic because the decode dist is pinned to the psum mode
+  (serve.decode_dist), which is bitwise layout-invariant — a replan is
+  invisible in the token stream.
+
+* **Admission policy** — "continuous" admits into any free slot each
+  tick; "static" admits only when every slot is free, which reproduces
+  the static-batch baseline's head-of-line blocking on the identical
+  decode path (the fig11 comparison).
 """
 from __future__ import annotations
 
 import functools
+import time
+import warnings
 from dataclasses import dataclass, field
-from typing import Callable, Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.models import attention as A
 from repro.models import lm
+from repro.launch.serve_api import Completion, Request as _Request, ServeConfig
+
+
+def __getattr__(name):
+    if name == "Request":
+        warnings.warn(
+            "repro.launch.scheduler.Request moved to "
+            "repro.launch.serve_api.Request; import it from there "
+            "(this re-export will be removed)", DeprecationWarning,
+            stacklevel=2)
+        return _Request
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+class BlockAllocator:
+    """Free-list over the pool's non-reserved physical blocks.
+
+    Rows 0 (null) and 1 (scratch) are reserved by the paged cache layout
+    (models/attention.RESERVED_BLOCKS); everything above is handed out in
+    whole-request batches and returned on retire.  Pure host state — the
+    device only ever sees the resulting block tables.
+    """
+
+    def __init__(self, num_blocks: int):
+        if num_blocks <= A.RESERVED_BLOCKS:
+            raise ValueError(
+                f"pool needs more than the {A.RESERVED_BLOCKS} reserved "
+                f"blocks, got {num_blocks}")
+        self.num_blocks = num_blocks
+        self._free: List[int] = list(range(A.RESERVED_BLOCKS, num_blocks))
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """n physical block ids, or None when the pool can't cover them
+        (admission then blocks FIFO — no skip-ahead, no partial grants)."""
+        if n > len(self._free):
+            return None
+        out = self._free[:n]
+        del self._free[:n]
+        return out
+
+    def free(self, blocks: List[int]) -> None:
+        self._free.extend(blocks)
+
+
+def _insert_body(pool, ring, blocks):
+    """Scatter a single-sequence prefill ring (L, 1, nb*bs, ...) into pool
+    rows ``blocks``.  Ring tail entries beyond the prompt carry the fresh
+    init state (zeros, positions -1), which matches a clean pool block, so
+    partial tail blocks are safe to insert whole."""
+    def ins(pl, rl):
+        L, bs = pl.shape[0], pl.shape[2]
+        nb = blocks.shape[0]
+        r = rl[:, 0].reshape(L, nb, bs, *rl.shape[3:])
+        return pl.at[:, blocks].set(r.astype(pl.dtype))
+
+    new = [ins(p, r) for p, r in zip(jax.tree.leaves(pool),
+                                     jax.tree.leaves(ring))]
+    return jax.tree.unflatten(jax.tree.structure(pool), new)
+
+
+def _release_body(pool, blocks):
+    """Reset freed blocks' positions to -1 so later reads mask them.  The
+    stale k/v payload may remain: masked scores are exactly ``_NEG`` so
+    their softmax weight is 0.0 and the contribution cancels bitwise."""
+    return pool._replace(positions=pool.positions.at[:, blocks].set(-1))
+
+
+_insert_blocks = functools.partial(jax.jit, donate_argnums=(0,))(_insert_body)
+_release_blocks = functools.partial(jax.jit,
+                                    donate_argnums=(0,))(_release_body)
 
 
 @dataclass
-class Request:
-    uid: int
-    prompt: np.ndarray  # (S,) int32
-    max_new: int
-    out: list = field(default_factory=list)
-    done: bool = False
+class _Slot:
+    """Host-side state of one occupied decode slot."""
+
+    req: _Request
+    blocks: Optional[List[int]]  # physical block ids (paged mode only)
+    out: List[int] = field(default_factory=list)
+    times: List[float] = field(default_factory=list)
+
+
+class ServeReplanHook:
+    """Serve-side mirror of launch.train.ReplanHook: decode-load EMA ->
+    PlacementController -> live migrate + re-jit, under drop-frac probation
+    (there is no loss at serve time).  Owned by ContinuousBatcher; one
+    ``observe`` call per decode tick."""
+
+    def __init__(self, batcher: "ContinuousBatcher", num_ranks: int, *,
+                 every: int, per_layer: bool = True, sink=None):
+        from repro.core.dispatch import expert_capacity
+        from repro.core.monitor import LoadMonitor
+        from repro.placement import PlacementController, load_calibration
+        from repro.resilience import ReplanProbation
+
+        cfg = batcher.cfg
+        moe = cfg.moe
+        L = cfg.num_layers if per_layer else 0
+        self.batcher = batcher
+        self.per_layer = per_layer
+        self.sink = sink
+        self.monitor = LoadMonitor(moe.num_experts, ema=0.9, num_layers=L)
+        self.controller = PlacementController(
+            self.monitor, num_ranks, d_model=cfg.d_model,
+            d_hidden=moe.d_expert_hidden,
+            capacity=expert_capacity(batcher.B, moe.num_experts, moe.top_k,
+                                     moe.capacity_factor),
+            capacity_factor=moe.capacity_factor, every=every, train=False,
+            num_layers=L, constants=load_calibration())
+        self.probation = ReplanProbation(
+            window=max(4, min(64, every // 4)), sink=sink)
+        # decode ticks are cheap; sample the device load EMA sparsely like
+        # the train hook so the host never serializes on a per-tick fetch
+        self.sync_every = max(1, every // 16)
+        self._drop_ema: Optional[float] = None
+
+    def observe(self, tick: int, md: dict) -> None:
+        from repro.core.balance import MoEMetrics
+
+        drop = float(md["drop_frac"]) if "drop_frac" in md else None
+        if drop is not None:
+            self._drop_ema = (drop if self._drop_ema is None
+                              else 0.9 * self._drop_ema + 0.1 * drop)
+        load_key = "load_layers" if self.per_layer else "load"
+        if load_key in md and tick % self.sync_every == 0:
+            self.monitor.update(MoEMetrics(
+                0.0, 0.0, jax.device_get(md[load_key]),
+                drop if drop is not None else 0.0))
+        if self.probation.active:
+            decision = self.probation.observe(tick, drop=drop)
+            if decision.rollback:
+                self.batcher.apply_placement(decision.old_plan)
+                self.controller.rollback(decision.old_plan,
+                                         decision.new_plan)
+                return
+            if self.probation.active:  # still judging: defer new replans
+                return
+        old = self.controller.current
+        new = self.controller.maybe_replan(tick)
+        if new is None:
+            return
+        self.batcher.apply_placement(new)
+        # a serve-time replan must not *introduce* drops even if none were
+        # measured before it
+        self.probation.start(tick, old, new, baseline_drop=(
+            self._drop_ema if self._drop_ema is not None else 0.0))
+        if self.sink is not None:
+            self.sink.emit({"kind": "replan", "step": tick,
+                            "imbalance": self.monitor.imbalance})
 
 
 class ContinuousBatcher:
-    def __init__(self, params, cfg: ModelConfig, *, max_batch: int = 8,
-                 cache_len: int = 256, eos_id: Optional[int] = None):
+    """The continuous-batching serve loop behind ``serve.py --continuous``.
+
+    Construct from a :class:`~repro.launch.serve_api.ServeConfig` (the
+    legacy ``max_batch``/``cache_len``/``eos_id`` kwargs still work and
+    build one).  ``params`` must already be in ``placement``'s physical
+    order when a plan is passed (placement.from_logical) — the same
+    contract as serve.jit_serve_step.
+
+    Public surface: ``submit(Request)``, ``step()``, ``run()``,
+    ``apply_placement(plan)``, plus ``completions`` / ``ticks`` /
+    ``replans`` for the driver.
+    """
+
+    def __init__(self, params, cfg: ModelConfig,
+                 serve_cfg: Optional[ServeConfig] = None, *, mesh=None,
+                 placement=None, sink=None, opts: Optional[dict] = None,
+                 max_batch: Optional[int] = None,
+                 cache_len: Optional[int] = None,
+                 eos_id: Optional[int] = None):
+        if serve_cfg is None:
+            serve_cfg = ServeConfig(slots=max_batch or 8,
+                                    max_len=cache_len or 256, eos_id=eos_id)
         self.params = params
         self.cfg = cfg
-        self.B = max_batch
-        self.W = cache_len
-        self.eos_id = eos_id
-        self.cache = lm.init_cache(cfg, max_batch, cache_len)
-        self.pos = np.zeros(max_batch, np.int32)  # next position per slot
-        self.slot_req: list = [None] * max_batch
-        self.queue: list = []
-        self.next_tok = np.zeros(max_batch, np.int32)
-        self._decode = jax.jit(functools.partial(lm.decode_step, cfg=cfg))
-        self._prefill = jax.jit(functools.partial(lm.prefill, cfg=cfg))
-        self._empty_slot_cache = lm.init_cache(cfg, 1, cache_len)
+        self.scfg = serve_cfg
+        self.B = serve_cfg.slots
+        self.eos_id = serve_cfg.eos_id
+        self.paged = serve_cfg.paged and lm.supports_paged(cfg)
+        self.sink = sink
+        self.plan = placement
+        self._opts = dict(opts or {})
+        if mesh is None and serve_cfg.mesh:
+            from repro.launch.mesh import make_local_mesh
+            d, m = serve_cfg.mesh_shape()
+            mesh = make_local_mesh(d, m)
+        self.mesh = mesh
+
+        # slot + cache state
+        self.pos = np.zeros(self.B, np.int32)  # next write position per slot
+        self.next_tok = np.zeros(self.B, np.int32)
+        self.slots: List[Optional[_Slot]] = [None] * self.B
+        self.queue: List[_Request] = []
+        self.completions: List[Completion] = []
+        self.ticks = 0
+        self.replans = 0
+        if self.paged:
+            self.bs = serve_cfg.block_size
+            self.nb = serve_cfg.blocks_per_slot
+            self.pool = lm.init_paged_cache(cfg, serve_cfg.pool_blocks,
+                                            self.bs)
+            self.tables = np.zeros((self.B, self.nb), np.int32)  # NULL_BLOCK
+            self.allocator = BlockAllocator(serve_cfg.pool_blocks)
+            self._insert, self._release = _insert_blocks, _release_blocks
+            if self.mesh is not None:
+                # pin the host-side pool edits (prefill insert, retire
+                # release) to the decode step's pool sharding — the decode
+                # jit donates the pool, and a donated arg must arrive
+                # committed to the declared in_sharding
+                from repro.launch.sharding import cache_specs
+                pool_shape = jax.eval_shape(functools.partial(
+                    lm.init_paged_cache, cfg, serve_cfg.pool_blocks,
+                    self.bs))
+                cshard = jax.tree.map(
+                    lambda s: jax.sharding.NamedSharding(self.mesh, s),
+                    cache_specs(pool_shape, self.mesh, self.B, paged=True),
+                    is_leaf=lambda s: isinstance(
+                        s, jax.sharding.PartitionSpec))
+                rep = jax.sharding.NamedSharding(
+                    self.mesh, jax.sharding.PartitionSpec())
+                self.pool = jax.device_put(self.pool, cshard)
+                self._insert = jax.jit(
+                    _insert_body, in_shardings=(cshard, rep, rep),
+                    out_shardings=cshard, donate_argnums=(0,))
+                self._release = jax.jit(
+                    _release_body, in_shardings=(cshard, rep),
+                    out_shardings=cshard, donate_argnums=(0,))
+        else:
+            self.W = serve_cfg.max_len
+            self.cache = lm.init_cache(cfg, self.B, self.W)
+            self._empty_slot_cache = lm.init_cache(cfg, 1, self.W)
+
+        # online replanning (serve-time load-balance loop)
+        self._replan: Optional[ServeReplanHook] = None
+        if serve_cfg.replan_every > 0 and cfg.moe is not None:
+            ranks = self._expert_ranks()
+            self._replan = ServeReplanHook(
+                self, ranks, every=serve_cfg.replan_every,
+                per_layer=serve_cfg.per_layer_plans, sink=sink)
+            if self.plan is None:
+                # engage the placement path from tick 0 (identity plan =
+                # logical order) so every later plan switch stays on the
+                # layout-invariant placed decode
+                self.plan = self._replan.controller.current
+        self._want_metrics = sink is not None or self._replan is not None
+        self._want_loads = self._replan is not None
+        self._build_steps()
+
+    # -- jitted device steps -------------------------------------------------
+
+    def _expert_ranks(self) -> int:
+        if self.mesh is None:
+            return 1
+        from repro.launch import serve
+        d = serve.decode_dist(self.cfg, self.mesh, self.B, opts=self._opts)
+        return d.expert_parallelism if d is not None and d.expert_axes else 1
+
+    def _build_steps(self) -> None:
+        """(Re-)jit the decode and prefill steps for the current placement.
+        Placement tables bake into the jaxpr as constants, so every plan
+        switch rebuilds both."""
+        from repro.core import fmoe
+        from repro.launch import serve
+
+        cfg = self.cfg
+        if self.mesh is not None:
+            opts = dict(self._opts)
+            if self.plan is not None:
+                opts["placement"] = self.plan
+            if self.paged:
+                self._decode, _ = serve.jit_paged_serve_step(
+                    cfg, self.mesh, self.B, self.scfg.pool_blocks, self.bs,
+                    opts=opts, with_metrics=self._want_metrics,
+                    layer_loads=self._want_loads)
+            else:
+                dist = serve.decode_dist(cfg, self.mesh, self.B, opts=opts)
+                self._decode = jax.jit(serve.make_serve_step(
+                    cfg, dist=dist, with_metrics=self._want_metrics,
+                    layer_loads=self._want_loads), donate_argnums=(3,))
+            # prefill is single-sequence: token_axes drop to () (1 token row
+            # can't shard over data), psum-pinned like decode so the same
+            # placement applies on both phases of a request
+            pdist = serve.decode_dist(cfg, self.mesh, 1, opts=opts)
+        else:
+            pdist = (fmoe.DistConfig.local(placement=self.plan)
+                     if self.plan is not None else None)
+            self._decode = jax.jit(serve.make_serve_step(
+                cfg, dist=pdist, with_metrics=self._want_metrics,
+                paged=self.paged, layer_loads=self._want_loads),
+                donate_argnums=(3,))
+        self._prefill = jax.jit(
+            functools.partial(lm.prefill, cfg=cfg, dist=pdist))
+
+    def apply_placement(self, plan) -> None:
+        """Switch the live expert layout mid-traffic: permute params from
+        the current plan's physical order into ``plan``'s and re-jit the
+        serve steps.  Decode runs the psum expert mode (serve.decode_dist),
+        which combines per-slot before the fixed-order k-sum, so the tokens
+        decoded after the switch are bitwise identical to never switching
+        (tests/test_scheduler differential test)."""
+        from repro.placement import from_logical, migrate
+
+        if self.plan is not None:
+            self.params = migrate(self.params, self.plan, plan)
+        else:
+            self.params = from_logical(self.params, plan)
+        self.plan = plan
+        self._build_steps()
+        self.replans += 1
 
     # -- request lifecycle ---------------------------------------------------
 
-    def submit(self, req: Request) -> None:
+    def submit(self, req: _Request) -> None:
+        total = int(req.prompt.shape[0]) + req.max_new_tokens
+        cap = self.scfg.max_len if self.paged else self.W
+        if total > cap:
+            raise ValueError(
+                f"request {req.id}: prompt+max_new_tokens = {total} exceeds "
+                f"max_len = {cap}")
+        if req.arrival is None:
+            req.arrival = time.time()
         self.queue.append(req)
 
-    def _free_slots(self):
-        return [i for i, r in enumerate(self.slot_req) if r is None]
+    def _free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s is None]
 
     def _admit(self) -> None:
-        for slot in self._free_slots():
+        free = self._free_slots()
+        if self.scfg.policy == "static" and len(free) < self.B:
+            return  # static baseline: admit only at whole-batch boundaries
+        for slot in free:
             if not self.queue:
                 break
-            req = self.queue.pop(0)
-            prompt = jnp.asarray(req.prompt, jnp.int32)[None]  # (1, S)
-            logits, c1, _ = self._prefill(self.params, tokens=prompt,
-                                          cache=self._empty_slot_cache)
-            # insert the single-sequence cache into batch slot `slot`
+            req = self.queue[0]
+            S = int(req.prompt.shape[0])
+            blocks = None
+            if self.paged:
+                need = -(-(S + req.max_new_tokens) // self.bs)
+                blocks = self.allocator.alloc(need)
+                if blocks is None:
+                    break  # FIFO under pool pressure: no skip-ahead
+            self.queue.pop(0)
+            prompt = jnp.asarray(req.prompt, jnp.int32)[None]
+            if self.paged:
+                # prefill a temp ring rounded up to whole blocks, then
+                # block-scatter it into the request's pool rows
+                nb_p = -(-S // self.bs)
+                ring = lm.init_cache(self.cfg, 1, nb_p * self.bs)
+                logits, c1, _ = self._prefill(self.params, tokens=prompt,
+                                              cache=ring)
+                self.pool = self._insert(
+                    self.pool, c1, jnp.asarray(blocks[:nb_p], jnp.int32))
+                self.tables[slot, :len(blocks)] = blocks
+                self.tables[slot, len(blocks):] = A.NULL_BLOCK
+            else:
+                logits, c1, _ = self._prefill(self.params, tokens=prompt,
+                                              cache=self._empty_slot_cache)
+                self.cache = jax.tree.map(
+                    lambda big, one: big.at[:, slot].set(one[:, 0]),
+                    self.cache, c1)
+            now = time.time()
+            tok = int(jnp.argmax(logits[0, -1]))
+            self.slots[slot] = _Slot(req=req, blocks=blocks, out=[tok],
+                                     times=[now])
+            self.pos[slot] = S
+            self.next_tok[slot] = tok
+            if self.sink is not None:
+                self.sink.emit({"kind": "serve_admit", "tick": self.ticks,
+                                "id": req.id, "slot": slot,
+                                "queue_wait": now - req.arrival})
+
+    def _retire(self, slot: int, now: float) -> None:
+        st = self.slots[slot]
+        self.completions.append(Completion(
+            request_id=st.req.id, tokens=st.out,
+            prompt_len=int(st.req.prompt.shape[0]), queued=st.req.arrival,
+            first_token=st.times[0], done=now, token_times=st.times))
+        if self.paged:
+            self.pool = self._release(
+                self.pool, jnp.asarray(st.blocks, jnp.int32))
+            self.allocator.free(st.blocks)
+            self.tables[slot, :] = A.NULL_BLOCK
+        else:
+            # reset the slot's ring so stale entries never leak forward
             self.cache = jax.tree.map(
                 lambda big, one: big.at[:, slot].set(one[:, 0]),
-                self.cache, c1)
-            self.slot_req[slot] = req
-            self.pos[slot] = req.prompt.shape[0]
-            self.next_tok[slot] = int(jnp.argmax(logits[0, -1]))
-            req.out.append(int(self.next_tok[slot]))
-
-    def _retire(self, slot: int) -> None:
-        req = self.slot_req[slot]
-        req.done = True
-        self.slot_req[slot] = None
-        # reset the slot's cache so stale entries never leak into a new request
-        self.cache = jax.tree.map(
-            lambda big, one: big.at[:, slot].set(one[:, 0]),
-            self.cache, self._empty_slot_cache)
+                self.cache, self._empty_slot_cache)
+        self.slots[slot] = None
         self.pos[slot] = 0
+        self.next_tok[slot] = 0
+        if self.sink is not None:
+            self.sink.emit({"kind": "serve_retire", "tick": self.ticks,
+                            "id": st.req.id, "slot": slot,
+                            "tokens": len(st.out)})
 
     # -- one decode tick -----------------------------------------------------
 
@@ -91,28 +456,43 @@ class ContinuousBatcher:
         """Admit queued requests, decode one token for every active slot.
         Returns the number of active slots this tick."""
         self._admit()
-        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        active = [i for i, s in enumerate(self.slots) if s is not None]
         if not active:
             return 0
         toks = jnp.asarray(self.next_tok, jnp.int32)[:, None]  # (B, 1)
         pos = jnp.asarray(self.pos, jnp.int32)  # per-sequence positions
-        logits, self.cache, _ = self._decode(self.params, tokens=toks,
-                                             pos=pos, cache=self.cache)
+        if self.paged:
+            logits, self.pool, md = self._decode(
+                self.params, toks, pos, self.pool,
+                jnp.asarray(self.tables, jnp.int32))
+        else:
+            logits, self.cache, md = self._decode(self.params, toks, pos,
+                                                  self.cache)
         nxt = np.asarray(jnp.argmax(logits[:, 0], -1), np.int32)
+        now = time.time()
         for slot in active:
-            req = self.slot_req[slot]
+            st = self.slots[slot]
             self.pos[slot] += 1
             tok = int(nxt[slot])
-            req.out.append(tok)
+            st.out.append(tok)
+            st.times.append(now)
             self.next_tok[slot] = tok
-            if (len(req.out) >= req.max_new
+            if (len(st.out) >= st.req.max_new_tokens
                     or (self.eos_id is not None and tok == self.eos_id)):
-                self._retire(slot)
+                self._retire(slot, now)
+        self.ticks += 1
+        if self._replan is not None:
+            self._replan.observe(self.ticks, md)
         return len(active)
 
     def run(self, max_ticks: int = 10000) -> None:
+        """Drain the queue: tick until every submitted request completed."""
         for _ in range(max_ticks):
-            if not self.queue and all(r is None for r in self.slot_req):
+            if not self.queue and all(s is None for s in self.slots):
                 return
-            self.step()
+            if self.step() == 0 and self.queue:
+                raise RuntimeError(
+                    "admission stalled: the shared pool cannot cover the "
+                    "next queued request (raise ServeConfig.num_blocks or "
+                    "max_len/block_size geometry)")
         raise RuntimeError("scheduler did not drain")

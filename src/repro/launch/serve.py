@@ -39,25 +39,52 @@ def cache_len_for(cfg: ModelConfig, seq_len: int) -> int:
     return seq_len
 
 
-def make_serve_step(cfg: ModelConfig, *, dist=None, with_metrics: bool = False):
-    """``with_metrics=True`` returns a third output: a dict of scalar decode
-    telemetry (drop_frac + the repro.obs wire/drop/shadow counters, summed
-    over layers like training's loss_fn aux) — same trace, no extra syncs."""
+def make_serve_step(cfg: ModelConfig, *, dist=None, with_metrics: bool = False,
+                    paged: bool = False, layer_loads: bool = False):
+    """Build the one-token serve step.  Returns a function with a FIXED
+    3-tuple result ``(logits, cache, metrics)`` — ``metrics`` is ``{}`` when
+    neither ``with_metrics`` nor ``layer_loads`` asks for telemetry, so call
+    sites never branch on arity.
+
+    ``with_metrics`` fills the dict with scalar decode telemetry (drop_frac
+    + the repro.obs wire/drop/shadow counters, summed over layers like
+    training's loss_fn aux) — same trace, no extra syncs.  ``layer_loads``
+    adds ``load_layers`` (the (L, E) per-layer expert-load stack) and
+    ``load`` — the online serve-time replan feed the continuous batcher
+    pipes into ``LoadMonitor``.  ``paged=True`` takes a fifth argument, the
+    (B, nb) per-slot block tables, and decodes through the paged pool
+    (lm.init_paged_cache)."""
     L = max(cfg.num_layers, 1)
 
-    def serve_step(params, tokens, pos, cache):
-        logits, new_cache, m = lm.decode_step(params, cfg, tokens, pos, cache,
-                                              dist=dist)
-        if not with_metrics:
-            return logits, new_cache
-        md = {"drop_frac": m.drop_frac / L}
-        if m.obs is not None:
-            md.update(wire_elems=m.obs.wire_elems, wire_bytes=m.obs.wire_bytes,
-                      wire_bytes_intra=m.obs.wire_bytes_intra,
-                      wire_bytes_inter=m.obs.wire_bytes_inter,
-                      dropped=m.obs.dropped, shadow_hits=m.obs.shadow_hits,
-                      imbalance=m.obs.imbalance / L)
-        return logits, new_cache, md
+    def _pack(m, loads):
+        md = {}
+        if with_metrics:
+            md["drop_frac"] = m.drop_frac / L
+            if m.obs is not None:
+                md.update(wire_elems=m.obs.wire_elems,
+                          wire_bytes=m.obs.wire_bytes,
+                          wire_bytes_intra=m.obs.wire_bytes_intra,
+                          wire_bytes_inter=m.obs.wire_bytes_inter,
+                          dropped=m.obs.dropped, shadow_hits=m.obs.shadow_hits,
+                          imbalance=m.obs.imbalance / L)
+        if layer_loads:
+            md["load_layers"] = loads
+            md["load"] = m.load / L
+        return md
+
+    if paged:
+        def serve_step(params, tokens, pos, cache, block_tables):
+            res = lm.decode_step(params, cfg, tokens, pos, cache, dist=dist,
+                                 block_tables=block_tables,
+                                 layer_loads=layer_loads)
+            logits, new_cache, m = res[:3]
+            return logits, new_cache, _pack(m, res[3] if layer_loads else None)
+    else:
+        def serve_step(params, tokens, pos, cache):
+            res = lm.decode_step(params, cfg, tokens, pos, cache, dist=dist,
+                                 layer_loads=layer_loads)
+            logits, new_cache, m = res[:3]
+            return logits, new_cache, _pack(m, res[3] if layer_loads else None)
     return serve_step
 
 
@@ -104,9 +131,71 @@ def jit_serve_step(cfg: ModelConfig, mesh, batch: int, seq_len: int, *,
     rep = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
     dist = moe_dist(cfg, mesh, batch, opts=opts)
     fn = make_serve_step(cfg, dist=dist, with_metrics=with_metrics)
-    oshard = (None, cshard, None) if with_metrics else (None, cshard)
     return jax.jit(fn, in_shardings=(pshard, tshard, rep, cshard),
-                   out_shardings=oshard, donate_argnums=(3,)), cache_shape
+                   out_shardings=(None, cshard, None),
+                   donate_argnums=(3,)), cache_shape
+
+
+def decode_dist(cfg: ModelConfig, mesh, batch: int, *,
+                opts: dict | None = None):
+    """Expert-parallel config for the continuous-batching decode loop,
+    pinned to the **psum** mode.
+
+    Placement-engaged psum decode is bitwise layout-invariant (per-slot
+    combine before the fixed-order k-sum — README "Decode-time shadowing"),
+    which is the property that makes mid-traffic replans safe: the same
+    stream decoded under any plan yields identical tokens.  ``moe_dist``
+    would pick a2a whenever the slot count happens to divide the mesh, and
+    a2a capacity buffers are *not* layout-invariant, so the serving loop
+    asks for psum explicitly — at decode's 1-token-per-slot scale the
+    exchange would be latency-bound anyway.
+    """
+    d = moe_dist(cfg, mesh, batch, opts=opts)
+    if d is None or d.mode == "psum":
+        return d
+    tok = tuple(a for a in d.token_axes if a not in d.expert_axes)
+    total = 1
+    for a in tok:
+        total *= mesh.shape[a]
+    if total > 1 and batch % total:
+        tok = ()
+    return d._replace(token_axes=tok)
+
+
+def jit_paged_serve_step(cfg: ModelConfig, mesh, batch: int, num_blocks: int,
+                         block_size: int, *, opts: dict | None = None,
+                         with_metrics: bool = False,
+                         layer_loads: bool = False):
+    """Sharding-annotated paged decode step (continuous batching).
+
+    The pool (lm.init_paged_cache) is shared by every decode slot, so it
+    replicates over data axes with only head/latent dims model-sharded
+    (cache_specs(paged=True)); block tables are small host-built (B, nb)
+    int32 arrays and ride in replicated.  The MoE mode is pinned to psum
+    (``decode_dist``) so serve-time replans stay bitwise-invisible.
+    Returns ``(jitted_fn, pool_shape)``; the fn is
+    ``(params, tokens, pos, pool, tables) -> (logits, pool, metrics)`` with
+    the pool donated."""
+    opts = dict(opts or {})
+    mode = "serve" if opts.get("serve_tp") else "train"
+    pool_shape = jax.eval_shape(
+        functools.partial(lm.init_paged_cache, cfg, num_blocks, block_size))
+    cshard = jax.tree.map(
+        lambda s: jax.sharding.NamedSharding(mesh, s),
+        cache_specs(pool_shape, mesh, batch, paged=True),
+        is_leaf=lambda s: isinstance(s, jax.sharding.PartitionSpec))
+    params_shape = jax.eval_shape(
+        lambda: lm.init_params(jax.random.PRNGKey(0), cfg))
+    rcfg = cfg if opts.get("head_aware") else None
+    pshard = tree_shardings(params_shape, mesh, mode, cfg=rcfg)
+    tshard = jax.sharding.NamedSharding(mesh, batch_spec(batch, mesh))
+    rep = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+    dist = decode_dist(cfg, mesh, batch, opts=opts)
+    fn = make_serve_step(cfg, dist=dist, with_metrics=with_metrics,
+                         paged=True, layer_loads=layer_loads)
+    return jax.jit(fn, in_shardings=(pshard, tshard, rep, cshard, rep),
+                   out_shardings=(None, cshard, None),
+                   donate_argnums=(3,)), pool_shape
 
 
 def generate(params, cfg: ModelConfig, prompt: jax.Array, steps: int, *,
@@ -197,10 +286,44 @@ def plan_for_serving(params, cfg: ModelConfig, prompt: jax.Array,
     return plan, from_logical(params, plan)
 
 
+def serve_continuous(params, cfg: ModelConfig, scfg, *, prompt_len: int,
+                     gen: int, num_requests: int, sink=None) -> None:
+    """Drive the continuous-batching engine (launch/scheduler) over a
+    synthetic request stream described by the CLI flags and print the
+    serving headline numbers (tokens/sec, per-token p50/p99)."""
+    import numpy as np
+
+    from repro.launch.scheduler import ContinuousBatcher
+    from repro.launch.serve_api import Request
+
+    rng = np.random.RandomState(1)
+    batcher = ContinuousBatcher(params, cfg, scfg, sink=sink)
+    t0 = time.time()
+    for i in range(num_requests):
+        s = max(1, prompt_len - int(rng.randint(0, max(prompt_len // 2, 1))))
+        batcher.submit(Request(
+            id=i, prompt=rng.randint(0, cfg.vocab_size, s).astype(np.int32),
+            max_new_tokens=gen))
+    batcher.run()
+    dt = time.time() - t0
+    done = batcher.completions
+    toks = sum(len(c.tokens) for c in done)
+    lats = sorted(l for c in done for l in c.latencies[1:]) or [0.0]
+    print(f"continuous: {len(done)} requests, {toks} tokens in {dt:.2f}s "
+          f"({toks / max(dt, 1e-9):.1f} tok/s) over {batcher.ticks} ticks; "
+          f"per-token p50 {lats[len(lats) // 2] * 1e3:.1f}ms "
+          f"p99 {lats[min(len(lats) - 1, int(len(lats) * 0.99))] * 1e3:.1f}ms; "
+          f"replans={batcher.replans}")
+
+
 def main() -> None:
+    from repro.launch.serve_api import ServeConfig
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-360m")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="decode width: the static demo's batch, and the "
+                         "slot count when --slots is not given")
     ap.add_argument("--prompt_len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--reduced", action="store_true")
@@ -208,6 +331,27 @@ def main() -> None:
                     help="DATAxMODEL mesh for the sharded decode step (e.g. "
                          "1x4; on CPU set XLA_FLAGS="
                          "--xla_force_host_platform_device_count=N)")
+    ap.add_argument("--continuous", action="store_true",
+                    help="run the continuous-batching serve loop "
+                         "(launch/scheduler: per-step admit/retire, paged KV "
+                         "cache, online replans) over a synthetic request "
+                         "stream instead of decoding one static batch")
+    ap.add_argument("--requests", type=int, default=0,
+                    help="request count for --continuous (0 = 3x slots)")
+    ap.add_argument("--slots", type=int, default=None,
+                    help="decode slots (ServeConfig.slots; default --batch)")
+    ap.add_argument("--block_size", type=int, default=None,
+                    help="paged KV cache block rows (ServeConfig.block_size)")
+    ap.add_argument("--max_len", type=int, default=None,
+                    help="per-request prompt+gen cap (ServeConfig.max_len; "
+                         "default prompt_len + gen)")
+    ap.add_argument("--policy", default=None,
+                    choices=["continuous", "static"],
+                    help="admission policy for --continuous (static = "
+                         "admit only at whole-batch boundaries)")
+    ap.add_argument("--replan_every", type=int, default=None,
+                    help="decode ticks between online placement-replan "
+                         "polls (0 = off; needs --mesh and an MoE arch)")
     ap.add_argument("--per_layer_plans", action="store_true",
                     help="measure per-layer expert load on the prompt and "
                          "serve under a per-layer placement (decode-time "
@@ -221,18 +365,33 @@ def main() -> None:
                          "spans (chrome://tracing / perfetto)")
     args = ap.parse_args()
 
+    scfg = ServeConfig.from_args(args)
+    if args.max_len is None:
+        scfg.max_len = args.prompt_len + args.gen
+
     from repro.obs import JsonlSink
     from repro.obs import trace as obs_trace
-    sink = JsonlSink(args.metrics_out) if args.metrics_out else None
-    if args.trace:
+    sink = JsonlSink(scfg.metrics_out) if scfg.metrics_out else None
+    if scfg.trace:
         obs_trace.configure(enabled=True)
 
-    cfg = get_config(args.arch)
-    if args.reduced:
+    cfg = get_config(scfg.arch)
+    if scfg.reduced:
         cfg = reduced(cfg, num_layers=4, d_model=256)
     params = lm.init_params(jax.random.PRNGKey(0), cfg)
     prompt = jax.random.randint(jax.random.PRNGKey(1),
                                 (args.batch, args.prompt_len), 0, cfg.vocab_size)
+    if args.continuous:
+        n_req = args.requests or 3 * scfg.slots
+        serve_continuous(params, cfg, scfg, prompt_len=args.prompt_len,
+                         gen=args.gen, num_requests=n_req, sink=sink)
+        if sink is not None:
+            sink.close()
+            print(f"metrics written to {scfg.metrics_out}")
+        if scfg.trace:
+            obs_trace.export(scfg.trace)
+            print(f"trace written to {scfg.trace}")
+        return
     if args.mesh:
         from repro.launch.mesh import make_local_mesh
         d, m = (int(v) for v in args.mesh.split("x"))
@@ -256,8 +415,7 @@ def main() -> None:
             for pos in range(seq_len - 1):
                 ts = time.time()
                 with obs_trace.span("decode_step", pos=pos):
-                    res = step(params, tok, jnp.int32(pos), cache)
-                    logits, cache = res[0], res[1]
+                    logits, cache, md = step(params, tok, jnp.int32(pos), cache)
                     if telemetry:  # real per-step latency, not dispatch time
                         jax.block_until_ready(logits)
                 lat.append(time.time() - ts)
@@ -265,8 +423,7 @@ def main() -> None:
                     rec = {"kind": "decode_step", "pos": pos,
                            "wall_s": lat[-1],
                            "tokens_per_s": args.batch / max(lat[-1], 1e-9)}
-                    if len(res) > 2:
-                        rec.update({k: float(v) for k, v in res[2].items()})
+                    rec.update({k: float(v) for k, v in md.items()})
                     sink.emit(rec)
                 tok = (prompt[:, pos + 1:pos + 2] if pos + 1 < args.prompt_len
                        else jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32))

@@ -1,0 +1,160 @@
+"""Typed serving API: the one interface the scheduler, the CLI and the
+benchmarks all speak.
+
+``ServeConfig`` carries every serving-loop knob (decode slots, paged-cache
+block geometry, mesh, replan cadence); ``Request`` is what a client submits;
+``Completion`` is what comes back, with the three timestamps every serving
+SLO is written against (queued / first token / done) plus the full per-token
+emission times so p50/p99 per-token latency falls out without extra plumbing.
+
+``launch/serve.py main()`` builds a ServeConfig from its CLI flags
+(``ServeConfig.from_args``) and ``launch/scheduler.ContinuousBatcher``
+consumes it directly — flags and constructor kwargs are thin mappings onto
+this one dataclass, not parallel configuration channels.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, fields
+from typing import List, Optional
+
+import numpy as np
+
+
+@dataclass
+class ServeConfig:
+    """Serving-loop configuration (model architecture rides separately as a
+    ``repro.configs.base.ModelConfig``).
+
+    slots          fixed decode-batch width: the number of in-flight
+                   sequences one decode tick advances (vLLM-style continuous
+                   batching admits/retires into these slots per step)
+    max_len        per-request cap on prompt + generated tokens; sizes the
+                   ring cache (non-paged) and the per-slot block table
+    block_size     rows per KV-cache block (paged mode)
+    num_blocks     physical blocks in the shared pool; 0 = auto
+                   (slots * ceil(max_len / block_size) + the 2 reserved
+                   null/scratch blocks — enough that admission never blocks
+                   on pool space)
+    paged          use the paged/blocked KV cache when the model family
+                   supports it (plain attention caches; ssm/hybrid/audio
+                   state caches fall back to the contiguous per-slot ring)
+    policy         "continuous" (admit into any free slot every tick) or
+                   "static" (admit only when every slot is free — the
+                   head-of-line-blocking baseline fig11 measures against)
+    mesh           "DxM" device mesh for the sharded decode step ("" = single
+                   device)
+    replan_every   decode ticks between placement-controller polls driven by
+                   the online (L, E) decode-load feed; 0 disables serve-time
+                   replanning
+    per_layer_plans  plan per layer (PerLayerPlacement) on serve-time replans
+    eos_id         optional early-stop token id
+    arch / reduced model selection for the CLI path (ignored when the caller
+                   already has params + ModelConfig in hand)
+    metrics_out / trace   telemetry outputs (repro.obs), same semantics as
+                   train.py's flags
+    """
+
+    slots: int = 8
+    max_len: int = 256
+    block_size: int = 16
+    num_blocks: int = 0
+    paged: bool = True
+    policy: str = "continuous"
+    mesh: str = ""
+    replan_every: int = 0
+    per_layer_plans: bool = True
+    eos_id: Optional[int] = None
+    arch: str = "smollm-360m"
+    reduced: bool = False
+    metrics_out: str = ""
+    trace: str = ""
+
+    def __post_init__(self):
+        if self.policy not in ("continuous", "static"):
+            raise ValueError(f"unknown serving policy {self.policy!r}")
+        if self.block_size < 1:
+            raise ValueError("block_size must be >= 1")
+        if self.max_len < 1:
+            raise ValueError("max_len must be >= 1")
+
+    @property
+    def blocks_per_slot(self) -> int:
+        """Block-table width: logical blocks covering max_len positions."""
+        return -(-self.max_len // self.block_size)
+
+    @property
+    def pool_blocks(self) -> int:
+        """Physical pool size (auto-sized unless num_blocks is explicit).
+        Blocks 0 (null: read target of unallocated table entries) and 1
+        (scratch: write target of inactive slots) are reserved."""
+        if self.num_blocks:
+            return self.num_blocks
+        return self.slots * self.blocks_per_slot + 2
+
+    def mesh_shape(self) -> Optional[tuple]:
+        """Parsed (data, model) mesh dims, or None for single-device."""
+        if not self.mesh:
+            return None
+        d, m = (int(v) for v in self.mesh.split("x"))
+        return d, m
+
+    @classmethod
+    def from_args(cls, args) -> "ServeConfig":
+        """Thin argparse.Namespace -> ServeConfig mapping: any attribute
+        matching a field name is taken, everything else keeps its default.
+        ``--batch`` (the historical flag for the decode width) maps to
+        ``slots`` when no explicit ``--slots`` was given."""
+        kw = {}
+        names = {f.name for f in fields(cls)}
+        for name in names:
+            if getattr(args, name, None) is not None and hasattr(args, name):
+                kw[name] = getattr(args, name)
+        if "slots" not in kw and getattr(args, "batch", None) is not None:
+            kw["slots"] = args.batch
+        return cls(**kw)
+
+
+@dataclass
+class Request:
+    """One generation request.  ``arrival`` is the client-side submission
+    timestamp (time.time()); None means "stamp at submit"."""
+
+    id: int
+    prompt: np.ndarray  # (S,) int32 token ids
+    max_new_tokens: int
+    arrival: Optional[float] = None
+
+
+@dataclass
+class Completion:
+    """A finished request: generated tokens plus the serving timeline.
+
+    queued        when the request entered the queue (Request.arrival)
+    first_token   when the first generated token was emitted (prefill done)
+    done          when the last token was emitted
+    token_times   emission timestamp of every generated token — consecutive
+                  deltas are the per-token latencies fig11's p50/p99 report
+    """
+
+    request_id: int
+    tokens: List[int] = field(default_factory=list)
+    prompt_len: int = 0
+    queued: float = 0.0
+    first_token: float = 0.0
+    done: float = 0.0
+    token_times: List[float] = field(default_factory=list)
+
+    @property
+    def ttft(self) -> float:
+        """Time to first token (queue wait + prefill)."""
+        return self.first_token - self.queued
+
+    @property
+    def latencies(self) -> List[float]:
+        """Per-token latencies: first token pays the queue+prefill, the rest
+        are decode-tick deltas (including any stalls)."""
+        if not self.token_times:
+            return []
+        out = [self.token_times[0] - self.queued]
+        out.extend(b - a for a, b in zip(self.token_times, self.token_times[1:]))
+        return out

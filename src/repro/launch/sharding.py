@@ -264,18 +264,34 @@ def batch_spec(batch_size: int, mesh, extra_dims: int = 1) -> P:
 
 
 def cache_specs(cache_tree, mesh, batch_size: int,
-                seq_shard: bool = False) -> Any:
+                seq_shard: bool = False, paged: bool = False) -> Any:
     """Decode-cache specs: batch over data axes; the big dim over model.
 
     Default: trailing feature dim (head_dim / latent) over model.
     ``seq_shard``: the ring/window dim over model instead — decode attention
     then reduces over the sharded window via small psums rather than
     all-gathering the cache every layer (§Perf, decode hillclimb).
+
+    ``paged``: the tree is a paged block pool (lm.init_paged_cache — leaves
+    (L, P, bs, ...), no batch dim).  Blocks are shared across decode slots,
+    so the pool replicates over the data axes and only the trailing feature
+    dim (head_dim / latent) shards over model; block tables stay host-side.
     """
     bs = batch_spec(batch_size, mesh, 0)[0]
     mp = mesh.shape["model"] if "model" in mesh.axis_names else 1
 
+    def pool_spec(path, leaf):
+        ndim = len(leaf.shape)
+        dims = [None] * ndim
+        final = path.split("/")[-1]
+        if (final in ("k", "v", "ckv", "kr") and ndim >= 4 and mp > 1
+                and leaf.shape[-1] % mp == 0):
+            dims[-1] = "model"
+        return P(*dims)
+
     def leaf_spec(path, leaf):
+        if paged:
+            return pool_spec(path, leaf)
         ndim = len(leaf.shape)
         dims = [None] * ndim
         # batch dim: index 1 for stacked (L, B, ...) leaves, 0 otherwise

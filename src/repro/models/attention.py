@@ -264,6 +264,142 @@ def gqa_init_cache(batch: int, max_len: int, cfg: AttentionConfig, dtype) -> KVC
 
 
 # ---------------------------------------------------------------------------
+# Paged (blocked) KV cache — continuous-batching serving
+# ---------------------------------------------------------------------------
+#
+# The pool replaces the per-slot ring with shared physical blocks of
+# ``block_size`` rows; each decode slot owns a block *table* mapping its
+# logical block j (positions [j*bs, (j+1)*bs)) to a pool row, so
+# heterogeneous sequence lengths never fragment a contiguous ring.  Entry
+# order inside the gathered per-slot view equals the absolute position
+# ((p // bs) * bs + p % bs == p), and unallocated/stale entries carry
+# position -1, so decode_attention masks them to an exact-zero softmax
+# weight — the paged read is **bitwise identical** to a ring cache of length
+# blocks_per_slot * block_size (tests/test_scheduler.py locks this).
+#
+# Pool row 0 is the permanent null block (never written; -1 positions) that
+# unallocated table entries point at; row 1 is the scratch block that
+# absorbs writes from inactive slots (table rows all-null), so a fixed-width
+# decode batch can tick with empty slots without corrupting shared state.
+
+NULL_BLOCK = 0
+SCRATCH_BLOCK = 1
+RESERVED_BLOCKS = 2
+
+
+class PagedKVCache(NamedTuple):
+    k: jax.Array  # (P, bs, KV, dk) shared block pool
+    v: jax.Array  # (P, bs, KV, dv)
+    positions: jax.Array  # (P, bs) absolute positions, -1 empty
+
+
+class PagedMLACache(NamedTuple):
+    ckv: jax.Array  # (P, bs, kv_lora)
+    kr: jax.Array  # (P, bs, qk_rope)
+    positions: jax.Array  # (P, bs)
+
+
+def gqa_init_paged(num_blocks: int, block_size: int, cfg: AttentionConfig,
+                   dtype) -> PagedKVCache:
+    shape = (num_blocks, block_size, cfg.num_kv_heads, cfg.head_dim)
+    return PagedKVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype),
+                        jnp.full((num_blocks, block_size), -1, jnp.int32))
+
+
+def mla_init_paged(num_blocks: int, block_size: int, cfg: AttentionConfig,
+                   dtype) -> PagedMLACache:
+    return PagedMLACache(
+        jnp.zeros((num_blocks, block_size, cfg.kv_lora_rank), dtype),
+        jnp.zeros((num_blocks, block_size, cfg.qk_rope_head_dim), dtype),
+        jnp.full((num_blocks, block_size), -1, jnp.int32))
+
+
+def _paged_target(tables: jax.Array, posb: jax.Array, bs: int):
+    """(pb, off): write target per slot.  Null-block entries (inactive or
+    out-of-table positions) redirect to the scratch block."""
+    nb = tables.shape[1]
+    blk = jnp.clip(posb // bs, 0, nb - 1)
+    pb = tables[jnp.arange(posb.shape[0]), blk]
+    pb = jnp.where(pb == NULL_BLOCK, SCRATCH_BLOCK, pb)
+    return pb, posb % bs
+
+
+def _paged_view(pool_leaf: jax.Array, tables: jax.Array) -> jax.Array:
+    """Gather a per-slot contiguous view: (P, bs, ...) x (B, nb) ->
+    (B, nb*bs, ...).  Entry index == absolute position."""
+    g = jnp.take(pool_leaf, tables, axis=0)  # (B, nb, bs, ...)
+    B, nb, bs = g.shape[:3]
+    return g.reshape(B, nb * bs, *g.shape[3:])
+
+
+def gqa_decode_paged(params: dict, x: jax.Array, cache: PagedKVCache,
+                     tables: jax.Array, pos: jax.Array, cfg: AttentionConfig,
+                     *, window: jax.Array | int) -> tuple:
+    """One-token decode against the shared block pool.  ``tables`` (B, nb)
+    int32 maps each slot's logical blocks to pool rows (0 = unallocated)."""
+    B = x.shape[0]
+    bs = cache.k.shape[1]
+    posb = _per_seq_pos(pos, B)
+    q = linear(params["wq"], x).reshape(B, 1, cfg.num_heads, cfg.head_dim)
+    k = linear(params["wk"], x).reshape(B, 1, cfg.num_kv_heads, cfg.head_dim)
+    v = linear(params["wv"], x).reshape(B, 1, cfg.num_kv_heads, cfg.head_dim)
+    q = apply_rope(q, posb[:, None], cfg.rope_theta)
+    k = apply_rope(k, posb[:, None], cfg.rope_theta)
+    pb, off = _paged_target(tables, posb, bs)
+    new_cache = PagedKVCache(
+        cache.k.at[pb, off].set(k[:, 0].astype(cache.k.dtype)),
+        cache.v.at[pb, off].set(v[:, 0].astype(cache.v.dtype)),
+        cache.positions.at[pb, off].set(posb),
+    )
+    out = decode_attention(q, _paged_view(new_cache.k, tables),
+                           _paged_view(new_cache.v, tables),
+                           _paged_view(new_cache.positions, tables),
+                           posb[:, None], window)
+    return linear(params["wo"], out.reshape(B, 1, -1)), new_cache
+
+
+def mla_decode_paged(params: dict, x: jax.Array, cache: PagedMLACache,
+                     tables: jax.Array, pos: jax.Array, cfg: AttentionConfig,
+                     *, window: jax.Array | int) -> tuple:
+    """Absorbed-form MLA decode against the shared latent block pool."""
+    B = x.shape[0]
+    H = cfg.num_heads
+    bs = cache.ckv.shape[1]
+    posb = _per_seq_pos(pos, B)
+    q_nope, q_rope = _mla_q(params, x, cfg)
+    q_rope = apply_rope(q_rope, posb[:, None], cfg.rope_theta)
+
+    ckv = linear(params["w_dkv"], x)[:, 0]  # (B, lora)
+    kr = linear(params["w_kr"], x).reshape(B, 1, 1, cfg.qk_rope_head_dim)
+    kr = apply_rope(kr, posb[:, None], cfg.rope_theta)[:, 0, 0]
+
+    pb, off = _paged_target(tables, posb, bs)
+    new_cache = PagedMLACache(
+        cache.ckv.at[pb, off].set(ckv.astype(cache.ckv.dtype)),
+        cache.kr.at[pb, off].set(kr.astype(cache.kr.dtype)),
+        cache.positions.at[pb, off].set(posb),
+    )
+    ckv_v = _paged_view(new_cache.ckv, tables)  # (B, nb*bs, lora)
+    kr_v = _paged_view(new_cache.kr, tables)
+    pos_v = _paged_view(new_cache.positions, tables)
+
+    q_eff = jnp.einsum("bhd,hrd->bhr", q_nope[:, 0].astype(jnp.float32),
+                       params["w_uk"].astype(jnp.float32))
+    s = jnp.einsum("bhr,bwr->bhw", q_eff, ckv_v.astype(jnp.float32))
+    s += jnp.einsum("bhd,bwd->bhw", q_rope[:, 0].astype(jnp.float32),
+                    kr_v.astype(jnp.float32))
+    s *= (cfg.qk_nope_head_dim + cfg.qk_rope_head_dim) ** -0.5
+    dist = posb[:, None] - pos_v
+    valid = (pos_v >= 0) & (dist >= 0) & (dist < jnp.asarray(window, jnp.int32))
+    s = jnp.where(valid[:, None, :], s, _NEG)
+    p = jax.nn.softmax(s, -1)
+    o_lat = jnp.einsum("bhw,bwr->bhr", p, ckv_v.astype(jnp.float32))
+    out = jnp.einsum("bhr,hrd->bhd", o_lat, params["w_uv"].astype(jnp.float32))
+    out = out.reshape(B, 1, H * cfg.v_head_dim).astype(x.dtype)
+    return linear(params["wo"], out), new_cache
+
+
+# ---------------------------------------------------------------------------
 # MLA block (DeepSeek-V2)
 # ---------------------------------------------------------------------------
 

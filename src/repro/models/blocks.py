@@ -106,7 +106,8 @@ def _mixer_seq(p: dict, cfg: ModelConfig, x: jax.Array, window,
     return A.gqa_apply(p["attn"], x, a, window=window), None
 
 
-def _mixer_decode(p: dict, cfg: ModelConfig, x: jax.Array, cache, pos, window):
+def _mixer_decode(p: dict, cfg: ModelConfig, x: jax.Array, cache, pos, window,
+                  block_tables=None):
     if cfg.family == "ssm":
         # single-step time-mix via the seq path with S=1 and the cached shift
         y, new_state = R.time_mix(p["rwkv"], x, cache, cfg)
@@ -118,6 +119,12 @@ def _mixer_decode(p: dict, cfg: ModelConfig, x: jax.Array, cache, pos, window):
         y = 0.5 * (apply_norm(p["norm_a"], y_a, cfg.norm)
                    + apply_norm(p["norm_m"], y_m, cfg.norm))
         return y, {"attn": kv, "mamba": ms}
+    if block_tables is not None:  # paged/blocked pool (continuous batching)
+        if a.kind == "mla":
+            return A.mla_decode_paged(p["attn"], x, cache, block_tables, pos,
+                                      a, window=window)
+        return A.gqa_decode_paged(p["attn"], x, cache, block_tables, pos,
+                                  a, window=window)
     if a.kind == "mla":
         return A.mla_decode(p["attn"], x, cache, pos, a, window=window)
     return A.gqa_decode(p["attn"], x, cache, pos, a, window=window)
@@ -240,8 +247,16 @@ def layer_apply_prefill(p: dict, cfg: ModelConfig, x: jax.Array, cache, *,
 
 def layer_apply_decode(p: dict, cfg: ModelConfig, x: jax.Array, cache, pos, *,
                        window, dist: Optional[DistConfig] = None,
-                       impl: str = "einsum", l2p=None):
-    """x (B, 1, d), per-layer cache -> (x, new_cache, MoEMetrics|None)."""
+                       impl: str = "einsum", l2p=None, block_tables=None):
+    """x (B, 1, d), per-layer cache -> (x, new_cache, MoEMetrics|None).
+
+    ``block_tables`` (B, nb) switches the attention cache to the paged block
+    pool (models/attention paged decode) — plain attention families only;
+    recurrent-state caches (ssm/hybrid) and the audio enc-out dict keep the
+    contiguous per-slot layout."""
+    if block_tables is not None and cfg.family in ("ssm", "hybrid", "audio"):
+        raise NotImplementedError(
+            f"paged KV cache is not supported for family {cfg.family!r}")
     if cfg.family == "ssm":
         h, c1 = R.time_mix(p["rwkv"], apply_norm(p["norm1"], x, cfg.norm), cache, cfg)
         x = x + h
@@ -268,7 +283,8 @@ def layer_apply_decode(p: dict, cfg: ModelConfig, x: jax.Array, cache, pos, *,
         return x + h, {"self": kv, "enc_out": cache["enc_out"]}, metrics
 
     h, new_cache = _mixer_decode(p, cfg, apply_norm(p["norm1"], x, cfg.norm),
-                                 attn_cache, pos, window)
+                                 attn_cache, pos, window,
+                                 block_tables=block_tables)
     x = x + h
     h, metrics = _apply_ffn(p["ffn"], cfg, apply_norm(p["norm2"], x, cfg.norm), dist,
                             impl, l2p)
@@ -295,6 +311,18 @@ def layer_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype,
     if a is not None and a.kind == "mla":
         return A.mla_init_cache(batch, cache_len, a, dtype)
     return A.gqa_init_cache(batch, cache_len, a, dtype)
+
+
+def layer_paged_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
+                      dtype):
+    """Per-layer paged block pool (plain attention families only)."""
+    a = cfg.attention
+    if cfg.family in ("ssm", "hybrid", "audio") or a is None:
+        raise NotImplementedError(
+            f"paged KV cache is not supported for family {cfg.family!r}")
+    if a.kind == "mla":
+        return A.mla_init_paged(num_blocks, block_size, a, dtype)
+    return A.gqa_init_paged(num_blocks, block_size, a, dtype)
 
 
 def mixer_state(cfg: ModelConfig, batch: int, dtype):

@@ -278,21 +278,53 @@ def init_cache(cfg: ModelConfig, batch: int, cache_len: int, *,
     return jax.tree.map(lambda a: jnp.broadcast_to(a[None], (L,) + a.shape), one)
 
 
+def supports_paged(cfg: ModelConfig) -> bool:
+    """Whether the family's decode cache can be paged (plain attention
+    ring caches; recurrent/hybrid/audio state caches cannot)."""
+    return (cfg.attention is not None
+            and cfg.family not in ("ssm", "hybrid", "audio"))
+
+
+def init_paged_cache(cfg: ModelConfig, num_blocks: int,
+                     block_size: int) -> Any:
+    """Stacked (leading L dim) paged block pool shared by all decode slots.
+
+    Pool leaves have no batch dim — slots address it through per-slot block
+    tables passed to ``decode_step(block_tables=...)``.  Rows 0/1 are the
+    reserved null/scratch blocks (models/attention)."""
+    if not supports_paged(cfg):
+        raise NotImplementedError(
+            f"paged KV cache is not supported for family {cfg.family!r}")
+    dtype = jnp.dtype(cfg.dtype)
+    one = B.layer_paged_cache(cfg, num_blocks, block_size, dtype)
+    L = cfg.num_layers
+    return jax.tree.map(lambda a: jnp.broadcast_to(a[None], (L,) + a.shape), one)
+
+
 def decode_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
                 pos: jax.Array, cache: Any, *,
-                dist: Optional[DistConfig] = None, impl: str = "einsum"):
+                dist: Optional[DistConfig] = None, impl: str = "einsum",
+                block_tables: Optional[jax.Array] = None,
+                layer_loads: bool = False):
     """tokens (B, 1) at absolute position ``pos`` -> (logits (B, 1, V),
     new_cache, metrics).  A per-layer ``dist.placement`` is honored: each
     layer's decode MoE (usually the psum mode) routes through its own
     gate-id table, with shadowed hot experts served locally outside the
-    reduction (launch/serve.py wires this for the production decode step)."""
+    reduction (launch/serve.py wires this for the production decode step).
+
+    ``block_tables`` (B, nb) reads/writes the cache through the paged block
+    pool (``init_paged_cache``) instead of per-slot rings.  ``layer_loads=
+    True`` additionally returns the (L, E) per-layer expert-load stack as a
+    fourth output — the online serve-time replan feed (mirrors
+    ``forward(layer_loads=True)``)."""
     dtype = jnp.dtype(cfg.dtype)
     dist, tables = _layer_tables(cfg, dist)
     x = embed_lookup(params["embed"], tokens, dtype)
-    cache_len = _cache_len(cfg, cache)
+    cache_len = _cache_len(cfg, cache, block_tables)
     windows = jnp.minimum(B.layer_windows(cfg),
                           jnp.int32(cache_len)) if cache_len else B.layer_windows(cfg)
     n_e = _n_experts(cfg)
+    want_loads = layer_loads and cfg.moe is not None
 
     def body(carry, xs):
         x, metrics = carry
@@ -300,21 +332,30 @@ def decode_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
         l2p = xs[3] if tables is not None else None
         x, new_cache_l, m = B.layer_apply_decode(
             _cast_params(p_l, dtype), cfg, x, cache_l, pos,
-            window=window, dist=dist, impl=impl, l2p=l2p)
+            window=window, dist=dist, impl=impl, l2p=l2p,
+            block_tables=block_tables)
         metrics = metrics + m if m is not None else metrics
-        return (x.astype(dtype), metrics), new_cache_l
+        return ((x.astype(dtype), metrics),
+                (new_cache_l, m.load if want_loads else None))
 
     xs = (params["layers"], windows, cache)
     if tables is not None:
         xs += (tables,)
-    (x, metrics), new_cache = jax.lax.scan(
+    (x, metrics), (new_cache, loads) = jax.lax.scan(
         body, (x, MoEMetrics.zero(n_e)), xs)
     x = apply_norm(params["final_norm"], x, cfg.norm)
-    return _logits(params, cfg, x), new_cache, metrics
+    logits = _logits(params, cfg, x)
+    if layer_loads:
+        if loads is None:
+            loads = jnp.zeros((cfg.num_layers, n_e))
+        return logits, new_cache, metrics, loads
+    return logits, new_cache, metrics
 
 
-def _cache_len(cfg: ModelConfig, cache: Any) -> int:
-    """Ring-buffer length (0 for pure-state caches)."""
+def _cache_len(cfg: ModelConfig, cache: Any,
+               block_tables: Optional[jax.Array] = None) -> int:
+    """Ring-buffer length (0 for pure-state caches).  With a paged pool the
+    visible length is the gathered per-slot view: table width x block size."""
     if cfg.family == "ssm":
         return 0
     leaf = cache
@@ -322,4 +363,6 @@ def _cache_len(cfg: ModelConfig, cache: Any) -> int:
         leaf = cache["attn"]
     elif cfg.family == "audio":
         leaf = cache["self"]
+    if block_tables is not None:
+        return block_tables.shape[1] * leaf.positions.shape[-1]
     return leaf.positions.shape[-1]

@@ -380,8 +380,9 @@ def test_serve_step_with_metrics_single_device():
     assert float(md["imbalance"]) == 1.0
 
     plain = make_serve_step(cfg, with_metrics=False)
-    assert len(plain(params, tok, jnp.int32(0),
-                     lm.init_cache(cfg, 1, cache_len=8))) == 2
+    _, _, md = plain(params, tok, jnp.int32(0),
+                     lm.init_cache(cfg, 1, cache_len=8))
+    assert md == {}  # fixed 3-tuple arity: empty metrics, never a 2-tuple
 
 
 @pytest.mark.tier1

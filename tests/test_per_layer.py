@@ -235,7 +235,9 @@ def test_fmoe_apply_rejects_whole_per_layer_plan():
     params = fmoe.fmoe_init(jax.random.PRNGKey(0), 16, cfg)
     x = jnp.zeros((4, 16))
     with pytest.raises(TypeError):
-        fmoe.fmoe_apply(params, x, cfg, placement=identity_per_layer(8, 1, 2))
+        fmoe.fmoe_apply(params, x, cfg,
+                        dist=fmoe.DistConfig.local(
+                            placement=identity_per_layer(8, 1, 2)))
 
 
 def test_local_layer_honors_l2p_table():
@@ -247,7 +249,8 @@ def test_local_layer_honors_l2p_table():
     plan = _random_plan(8, 1, 0, 3)
     pp = from_logical(params, plan)
     y0, m0 = fmoe.fmoe_apply(params, x, cfg)
-    y1, m1 = fmoe.fmoe_apply(pp, x, cfg, placement=plan)
+    y1, m1 = fmoe.fmoe_apply(pp, x, cfg,
+                             dist=fmoe.DistConfig.local(placement=plan))
     y2, m2 = jax.jit(lambda p, x, t: fmoe.fmoe_apply(p, x, cfg, l2p=t))(
         pp, x, jnp.asarray(plan.logical_to_physical))
     np.testing.assert_array_equal(np.asarray(y0), np.asarray(y1))

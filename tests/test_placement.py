@@ -195,7 +195,7 @@ def test_local_path_with_index_table_matches_bitwise(layer):
     plan = _some_plan(S=4)
     y0, m0 = fmoe.fmoe_apply(params, x, CFG)
     y1, m1 = fmoe.fmoe_apply(from_logical(params, plan), x, CFG,
-                             placement=plan)
+                             dist=fmoe.DistConfig.local(placement=plan))
     np.testing.assert_array_equal(np.asarray(y0), np.asarray(y1))
     np.testing.assert_array_equal(np.asarray(m0.load), np.asarray(m1.load))
     table = router_index_table(plan)
@@ -209,7 +209,7 @@ def test_local_ragged_path_with_placement(layer):
     plan = _some_plan(S=0)
     y0, _ = fmoe.fmoe_apply(params, x, cfg)
     y1, _ = fmoe.fmoe_apply(from_logical(params, plan), x, cfg,
-                            placement=plan)
+                            dist=fmoe.DistConfig.local(placement=plan))
     np.testing.assert_allclose(np.asarray(y0), np.asarray(y1), atol=1e-6)
 
 

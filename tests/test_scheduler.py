@@ -1,13 +1,19 @@
-"""Continuous batching: staggered requests through shared decode batches must
-reproduce each request's isolated greedy generation exactly."""
+"""Continuous batching engine: staggered requests through shared decode
+batches must reproduce each request's isolated greedy generation exactly;
+the paged KV cache must be bitwise identical to the contiguous ring; a
+placement replan mid-stream must be invisible in the token stream."""
+import warnings
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+import dist_utils as du
 from repro.configs import get_config, reduced
-from repro.launch.scheduler import ContinuousBatcher, Request
+from repro.launch.scheduler import ContinuousBatcher
 from repro.launch.serve import generate
+from repro.launch.serve_api import Completion, Request, ServeConfig
 from repro.models import lm
 
 
@@ -24,39 +30,48 @@ def _isolated(params, cfg, prompt, n):
     return np.asarray(seq[0, len(prompt):]).tolist()
 
 
+def _by_id(batcher):
+    return {c.request_id: c.tokens for c in batcher.completions}
+
+
 def test_batched_equals_isolated(setup):
     cfg, params = setup
     rng = np.random.default_rng(0)
     prompts = [rng.integers(0, cfg.vocab_size, size=s).astype(np.int32)
                for s in (5, 9, 3)]
-    reqs = [Request(uid=i, prompt=p, max_new=6) for i, p in enumerate(prompts)]
 
     sched = ContinuousBatcher(params, cfg, max_batch=2, cache_len=64)
-    for r in reqs:
-        sched.submit(r)
+    for i, p in enumerate(prompts):
+        sched.submit(Request(id=i, prompt=p, max_new_tokens=6))
     sched.run()
-    assert all(r.done for r in reqs)
+    out = _by_id(sched)
+    assert sorted(out) == [0, 1, 2]
 
-    for r, p in zip(reqs, prompts):
+    for i, p in enumerate(prompts):
         expect = _isolated(params, cfg, p, 6)
-        assert r.out == expect, (r.uid, r.out, expect)
+        assert out[i] == expect, (i, out[i], expect)
 
 
 def test_slots_reused_and_staggered_arrivals(setup):
     cfg, params = setup
     rng = np.random.default_rng(1)
     sched = ContinuousBatcher(params, cfg, max_batch=2, cache_len=64)
-    first = Request(0, rng.integers(0, cfg.vocab_size, 4).astype(np.int32),
-                    max_new=3)
+    first = Request(id=0, prompt=rng.integers(
+        0, cfg.vocab_size, 4).astype(np.int32), max_new_tokens=3)
     sched.submit(first)
     sched.step()  # first running alone
-    late = Request(1, rng.integers(0, cfg.vocab_size, 7).astype(np.int32),
-                   max_new=5)
+    late = Request(id=1, prompt=rng.integers(
+        0, cfg.vocab_size, 7).astype(np.int32), max_new_tokens=5)
     sched.submit(late)  # arrives mid-flight
     sched.run()
-    assert first.done and late.done
-    assert first.out == _isolated(params, cfg, first.prompt, 3)
-    assert late.out == _isolated(params, cfg, late.prompt, 5)
+    out = _by_id(sched)
+    assert out[0] == _isolated(params, cfg, first.prompt, 3)
+    assert out[1] == _isolated(params, cfg, late.prompt, 5)
+    # the serving timeline is filled in and ordered
+    for c in sched.completions:
+        assert c.queued <= c.first_token <= c.done
+        assert len(c.token_times) == len(c.tokens)
+        assert all(l >= 0 for l in c.latencies)
 
 
 def test_eos_frees_slot(setup):
@@ -65,9 +80,199 @@ def test_eos_frees_slot(setup):
     prompt = rng.integers(0, cfg.vocab_size, 4).astype(np.int32)
     ref = _isolated(params, cfg, prompt, 8)
     eos = ref[2]  # force an early stop at the 3rd generated token
-    req = Request(0, prompt, max_new=8)
     sched = ContinuousBatcher(params, cfg, max_batch=1, cache_len=64,
                               eos_id=int(eos))
-    sched.submit(req)
+    sched.submit(Request(id=0, prompt=prompt, max_new_tokens=8))
     sched.run()
-    assert req.done and req.out == ref[:3]
+    assert _by_id(sched)[0] == ref[:3]
+
+
+# -- paged KV cache ----------------------------------------------------------
+
+
+def _mixed_stream(cfg, n=9, seed=0):
+    rng = np.random.RandomState(seed)
+    return [Request(id=i,
+                    prompt=rng.randint(0, cfg.vocab_size,
+                                       rng.randint(3, 20)).astype(np.int32),
+                    max_new_tokens=int(rng.randint(2, 12)), arrival=0.0)
+            for i in range(n)]
+
+
+def _run_stream(params, cfg, scfg, reqs):
+    b = ContinuousBatcher(params, cfg, scfg)
+    for r in reqs:
+        b.submit(Request(id=r.id, prompt=r.prompt,
+                         max_new_tokens=r.max_new_tokens, arrival=0.0))
+    b.run()
+    return _by_id(b), b
+
+
+def test_paged_matches_ring_bitwise(setup):
+    """The central paged-cache claim: decoding through the block-table view
+    over the shared pool is bitwise identical to the contiguous per-slot
+    ring, across admissions, retires, slot reuse and partial tail blocks."""
+    cfg, params = setup
+    reqs = _mixed_stream(cfg)
+    paged, bp = _run_stream(params, cfg, ServeConfig(
+        slots=3, max_len=48, block_size=8, paged=True), reqs)
+    ring, br = _run_stream(params, cfg, ServeConfig(
+        slots=3, max_len=48, block_size=8, paged=False), reqs)
+    assert bp.paged and not br.paged
+    assert sorted(paged) == sorted(ring) == list(range(len(reqs)))
+    for i in paged:
+        assert paged[i] == ring[i], (i, paged[i], ring[i])
+
+
+def test_paged_mla_matches_ring_bitwise():
+    """Same bitwise claim for the MLA (latent) cache family."""
+    cfg = reduced(get_config("deepseek-v2-236b"), num_layers=2, d_model=64)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    reqs = _mixed_stream(cfg, n=5, seed=3)
+    paged, _ = _run_stream(params, cfg, ServeConfig(
+        slots=2, max_len=40, block_size=8, paged=True), reqs)
+    ring, _ = _run_stream(params, cfg, ServeConfig(
+        slots=2, max_len=40, block_size=8, paged=False), reqs)
+    for i in paged:
+        assert paged[i] == ring[i], (i, paged[i], ring[i])
+
+
+def test_block_reuse_under_pool_pressure(setup):
+    """A pool too small for all requests at once: admission blocks FIFO,
+    retired requests' blocks are recycled, every request still reproduces
+    its isolated generation, and the pool drains back to fully free."""
+    cfg, params = setup
+    rng = np.random.default_rng(4)
+    prompts = [rng.integers(0, cfg.vocab_size, 5).astype(np.int32)
+               for _ in range(3)]
+    # each request needs ceil((5+6)/8) = 2 blocks; 3 usable blocks total
+    # (num_blocks=5 minus the 2 reserved) so two can never fly together
+    scfg = ServeConfig(slots=2, max_len=16, block_size=8, num_blocks=5)
+    b = ContinuousBatcher(params, cfg, scfg)
+    assert b.allocator.free_blocks == 3
+    for i, p in enumerate(prompts):
+        b.submit(Request(id=i, prompt=p, max_new_tokens=6))
+    b.run()
+    out = _by_id(b)
+    for i, p in enumerate(prompts):
+        assert out[i] == _isolated(params, cfg, p, 6)
+    assert b.allocator.free_blocks == 3  # every block returned
+    assert (b.tables == 0).all()  # tables reset to the null block
+
+
+def test_submit_rejects_over_cap(setup):
+    cfg, params = setup
+    b = ContinuousBatcher(params, cfg, ServeConfig(slots=1, max_len=16))
+    with pytest.raises(ValueError, match="exceeds max_len"):
+        b.submit(Request(id=0, prompt=np.zeros(12, np.int32),
+                         max_new_tokens=8))
+
+
+def test_static_policy_head_of_line_blocks(setup):
+    """policy="static" admits only at whole-batch boundaries: short
+    requests wait on the batch's longest, costing ticks the continuous
+    policy saves — the same decode path, so tokens stay identical."""
+    cfg, params = setup
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, cfg.vocab_size, 4).astype(np.int32)
+               for _ in range(4)]
+    lens = [2, 8, 2, 8]
+
+    def drive(policy):
+        b = ContinuousBatcher(params, cfg, ServeConfig(
+            slots=2, max_len=16, block_size=8, policy=policy))
+        for i, (p, n) in enumerate(zip(prompts, lens)):
+            b.submit(Request(id=i, prompt=p, max_new_tokens=n))
+        b.run()
+        return _by_id(b), b.ticks
+
+    cont, t_cont = drive("continuous")
+    stat, t_stat = drive("static")
+    assert cont == stat  # identical decode path, identical tokens
+    assert t_stat > t_cont  # head-of-line blocking costs real ticks
+
+
+# -- serving API -------------------------------------------------------------
+
+
+def test_scheduler_request_reexport_deprecated():
+    import repro.launch.scheduler as scheduler
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        cls = scheduler.Request
+    assert cls is Request
+    assert any(issubclass(x.category, DeprecationWarning) for x in w)
+
+
+def test_serve_config_from_args():
+    from types import SimpleNamespace
+    args = SimpleNamespace(batch=4, slots=None, block_size=32, max_len=None,
+                           policy="static", replan_every=None, mesh=None)
+    scfg = ServeConfig.from_args(args)
+    assert scfg.slots == 4  # --batch maps onto slots when --slots absent
+    assert scfg.block_size == 32 and scfg.policy == "static"
+    assert scfg.max_len == 256 and scfg.replan_every == 0  # defaults kept
+    args.slots = 16
+    assert ServeConfig.from_args(args).slots == 16  # explicit slots wins
+    with pytest.raises(ValueError, match="policy"):
+        ServeConfig(policy="batched")
+
+
+def test_completion_latencies():
+    c = Completion(request_id=0, tokens=[1, 2, 3], prompt_len=4, queued=10.0,
+                   first_token=10.5, done=10.7,
+                   token_times=[10.5, 10.6, 10.7])
+    assert c.ttft == pytest.approx(0.5)
+    assert c.latencies == pytest.approx([0.5, 0.1, 0.1])
+
+
+# -- mid-stream replan (fake devices) ----------------------------------------
+
+
+def test_replan_mid_stream_bitwise():
+    """Switching the expert placement between decode ticks — live param
+    migration + re-jit, exactly what the online replan path does — must
+    leave every decoded token bitwise identical: the serving decode dist is
+    pinned to the psum mode, whose per-slot combine is layout-invariant."""
+    du.run("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.configs import get_config, reduced
+        from repro.models import lm
+        from repro.launch.scheduler import ContinuousBatcher
+        from repro.launch.serve_api import Request, ServeConfig
+        from repro.placement import identity_per_layer
+        from repro.placement.plan import ExpertPlacement, per_layer_placement
+
+        cfg = reduced(get_config("fastmoe-gpt"), num_layers=2, d_model=64)
+        E, L = cfg.moe.num_experts, cfg.num_layers
+        params = lm.init_params(jax.random.PRNGKey(0), cfg)
+        rng = np.random.RandomState(0)
+        reqs = [dict(id=i,
+                     prompt=rng.randint(0, cfg.vocab_size,
+                                        5 + (i % 6)).astype(np.int32),
+                     max_new_tokens=4 + (i % 5)) for i in range(8)]
+        # rank-swapping permutation + 2 shadowed hot experts per layer:
+        # both mechanisms a serve-time plan uses (E=4 on 2 ranks)
+        plan = per_layer_placement([
+            ExpertPlacement(E, 2, (1, 3, 0, 2), num_shadow=2),
+            ExpertPlacement(E, 2, (2, 0, 3, 1), num_shadow=2)])
+
+        def run(switch_at):
+            scfg = ServeConfig(slots=4, max_len=24, block_size=8, mesh="1x2")
+            b = ContinuousBatcher(params, cfg, scfg,
+                                  placement=identity_per_layer(E, 2, L))
+            for r in reqs:
+                b.submit(Request(arrival=0.0, **r))
+            while b.queue or any(s is not None for s in b.slots):
+                b.step()
+                if switch_at is not None and b.ticks == switch_at:
+                    b.apply_placement(plan)
+            return {c.request_id: c.tokens for c in b.completions}
+
+        base = run(None)
+        moved = run(3)
+        assert sorted(base) == sorted(moved) == list(range(8))
+        for i in base:
+            assert base[i] == moved[i], (i, base[i], moved[i])
+        print("BITWISE", sum(len(v) for v in base.values()))
+        """, devices=2)

@@ -141,7 +141,7 @@ def test_serve_step_shadowed_decode_bit_exact():
         outs = []
         with mesh:
             for t in range(6):
-                logits, cache = step(p, toks[:, t:t+1], jnp.int32(t), cache)
+                logits, cache, _ = step(p, toks[:, t:t+1], jnp.int32(t), cache)
                 outs.append(np.asarray(logits))
         return outs
 

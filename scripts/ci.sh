@@ -9,9 +9,12 @@
 #                              parallelism, per-layer placement + decode
 #                              shadowing, pipelined exchange, the ragged
 #                              (dropless) a2a flat AND two-level on the
-#                              2-node x 4-inner fake mesh, and the shadowed
-#                              serve step (tests/dist_utils.py is the shared
-#                              harness)
+#                              2-node x 4-inner fake mesh, the router-zoo
+#                              sweep (every cfg.router vs its single-rank
+#                              oracle, dense==dispatched expert-choice,
+#                              shared-expert zero-wire, DeepSeek-V2
+#                              train+decode), and the shadowed serve step
+#                              (tests/dist_utils.py is the shared harness)
 #   ./scripts/ci.sh --faults   the fault drills only: SIGKILL mid-save +
 #                              --resume, injected-NaN skip/retry, resume
 #                              equivalence, drop-spike fallback, replan
@@ -37,7 +40,7 @@ if [ "$1" = "--dist" ]; then
     shift
     exec python -m pytest -q tests/test_distributed.py tests/test_pipeline.py \
         tests/test_placement_dist.py tests/test_ragged_a2a.py \
-        tests/test_hier_a2a.py \
+        tests/test_hier_a2a.py tests/test_router_zoo.py \
         tests/test_serve.py::test_serve_step_shadowed_decode_bit_exact "$@"
 fi
 

@@ -66,6 +66,18 @@ class MoEConfig:
     num_shared_experts: int = 0  # DeepSeek-V2 always-on experts
     dense_residual: bool = False  # Arctic: dense FFN in parallel with MoE
     capacity_factor: float = 1.25
+    # routing variant (the gate is user-swappable, paper §3.1):
+    #   "topk"          softmax top-k (gate_policy picks the score order)
+    #   "noisy_topk"    Shazeer et al. 2017 learned-noise top-k (exploration)
+    #   "gumbel"        gumbel-softmax perturbed top-k (StableMoE-style
+    #                   exploration; deterministic == "topk" when no rng)
+    #   "expert_choice" Zhou et al. 2022: experts pick tokens — exact
+    #                   per-expert capacity by construction (no drops,
+    #                   flat load, no balance loss)
+    #   "frozen"        StableMoE stage 2: route through the frozen
+    #                   distilled router (w_frozen, stop-gradient)
+    router: str = "topk"
+    router_temperature: float = 1.0  # gumbel perturbation scale
     # "softmax_topk": softmax over all experts then take top-k (GShard)
     # "topk_softmax": top-k logits then softmax over the k (Switch/FastMoE Alg.1)
     gate_policy: str = "softmax_topk"

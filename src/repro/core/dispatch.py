@@ -168,6 +168,57 @@ def combine_ragged_slots(y_sorted: jax.Array, plan: RaggedPlan,
 
 
 # ---------------------------------------------------------------------------
+# Expert-choice dispatch — exact capacities by construction (Zhou et al. 2022)
+# ---------------------------------------------------------------------------
+#
+# Expert-choice inverts the selection: each expert picks its top-C tokens, so
+# every expert buffer is exactly C rows — no capacity padding waste, no drops,
+# flat load.  Dispatch is a plain gather ``x[token_idx]`` into the same
+# (E, C, d) grid the capacity machinery exchanges, and the ragged layout is
+# the degenerate uniform case ``group_sizes == C`` — both exchange paths get
+# a second client without new plumbing.
+
+
+def ec_capacity(num_tokens: int, num_experts: int,
+                capacity_factor: float) -> int:
+    """Per-expert row count for expert-choice routing.
+
+    Must match ``gate.expert_choice_moe``'s dense reference exactly — the
+    dispatched paths are differentially tested against it.  Clamped to the
+    token count: an expert can't pick more tokens than exist (top-C over T
+    rows requires C <= T), and beyond that every expert already takes
+    everything.
+    """
+    return max(1, min(num_tokens,
+                      int(num_tokens * capacity_factor / num_experts)))
+
+
+def combine_ec(out: jax.Array, token_idx: jax.Array, weights: jax.Array,
+               num_tokens: int) -> jax.Array:
+    """Scatter-add weighted expert outputs back to token order.
+
+    ``out`` (E, C, dout) must be in LOGICAL expert order (callers gather
+    physically-placed outputs through the plan's table first) so the
+    scatter-add ordering — and therefore the f32 rounding — is invariant to
+    the expert layout, matching the dense reference bitwise.
+    """
+    E, C, dout = out.shape
+    y = jnp.zeros((num_tokens, dout), out.dtype)
+    return y.at[token_idx.reshape(-1)].add(
+        (out * weights[..., None].astype(out.dtype)).reshape(E * C, dout))
+
+
+def ec_to_physical(token_idx: jax.Array, table: jax.Array | None) -> jax.Array:
+    """Permute the (E, C) expert-choice token grid from logical to physical
+    expert order (row e of the result belongs to physical slot e).  Uniform
+    capacities make this a pure row permutation — group sizes are unchanged.
+    ``table`` is the logical->physical id table (None = identity)."""
+    if table is None:
+        return token_idx
+    return jnp.zeros_like(token_idx).at[table].set(token_idx)
+
+
+# ---------------------------------------------------------------------------
 # Cross-rank ragged plans — the distributed dropless exchange (ISSUE 4)
 # ---------------------------------------------------------------------------
 #

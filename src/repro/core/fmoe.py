@@ -27,7 +27,8 @@ from repro.configs.base import MoEConfig
 from repro.core import dispatch as D
 from repro.core import pipeline
 from repro.core.balance import MoEMetrics, load_balance_loss, load_metrics, router_z_loss
-from repro.core.gate import gate_forward, gate_init
+from repro.core.gate import (expert_choice_forward, gate_forward, gate_init,
+                             route_tokens, router_distill_loss, router_init)
 from repro.obs import counters as obs_counters
 from repro.obs.counters import ObsCounters
 
@@ -103,6 +104,9 @@ class DistConfig(NamedTuple):
     node_axis: Optional[str] = None  # inter-node axis of the two-level
     # ragged exchange (must lead expert_axes); None = flat exchange
     inter_bound: int = 0  # slim inter-node shard rows (0 = n_inner * bound)
+    router: Optional[str] = None  # override cfg.router for this distribution
+    # (e.g. launch/serve pins the decode router without touching the model
+    # config); None = use MoEConfig.router
 
     @classmethod
     def local(cls, placement=None) -> "DistConfig":
@@ -285,7 +289,7 @@ def fmoe_init(rng: jax.Array, d_model: int, cfg: MoEConfig, *, act: str = "swigl
     """Parameters for one MoE FFN block."""
     ks = jax.random.split(rng, 4)
     params = {
-        "router": gate_init(ks[0], d_model, cfg.num_experts, dtype=jnp.float32),
+        "router": router_init(ks[0], d_model, cfg, dtype=jnp.float32),
         "experts": _ffn_init(ks[1], cfg.num_experts, d_model,
                              cfg.d_expert_hidden, act, dtype),
     }
@@ -333,13 +337,61 @@ def _imbalance(owned_load: jax.Array, mp: int, E_local: int) -> jax.Array:
     return per_rank.max() / jnp.maximum(per_rank.mean(), 1e-6)
 
 
+def _aux_loss(router: dict, x: jax.Array, g, cfg: MoEConfig) -> jax.Array:
+    """Balance loss, plus the StableMoE stage-1 distillation term whenever a
+    frozen-router-to-be is riding along (its gradient reaches only
+    ``w_frozen``, so the live gate is unperturbed)."""
+    aux = load_balance_loss(g.probs, g.expert_ids, cfg.num_experts)
+    if cfg.router != "frozen" and "w_frozen" in router:
+        aux = aux + router_distill_loss(router, x, g)
+    return aux
+
+
+def _ec_route(router: dict, x: jax.Array, cfg: MoEConfig, table):
+    """Expert-choice routing shared by the four MoE paths.
+
+    Returns (C, token_idx (E, C) logical order, ti_phys (E, C) physical
+    order, weights (E, C), logits).  Uniform exact capacities mean the
+    physical grid is a pure row permutation of the logical one.
+    """
+    C = D.ec_capacity(x.shape[0], cfg.num_experts, cfg.capacity_factor)
+    token_idx, weights, _, logits = expert_choice_forward(
+        router, x, cfg, capacity=C)
+    return C, token_idx, D.ec_to_physical(token_idx, table), weights, logits
+
+
+def _ec_flat_load(E: int) -> jax.Array:
+    """Expert-choice load is flat by construction — every expert takes
+    exactly C rows (the LoadMonitor sees imbalance 1.0 and the placement
+    planner treats it as a no-replan signal)."""
+    return jnp.full((E,), 1.0 / E, jnp.float32)
+
+
 def _moe_local(x: jax.Array, router: dict, experts: dict, cfg: MoEConfig,
                act: str, expert_fn: Callable, rng=None, placement=None,
                impl: str = "einsum", l2p=None):
     T = x.shape[0]
-    g = gate_forward(router, x, cfg, rng=rng)
-    expert_ids = g.expert_ids
     table = _route_table(placement, l2p)
+    if cfg.router == "expert_choice":
+        C, token_idx, ti_phys, ec_w, logits = _ec_route(router, x, cfg, table)
+        E = cfg.num_experts
+        if cfg.dispatch == "ragged":
+            # the degenerate uniform-ragged case: group_sizes == C everywhere
+            xs = x[ti_phys.reshape(-1)]  # (E*C, d) physical-expert-major
+            ys = RAGGED_FNS[impl](experts, xs,
+                                  jnp.full((E,), C, jnp.int32), act)
+            out = ys.reshape(E, C, -1)
+        else:
+            out = expert_fn(experts, x[ti_phys], act)  # (E, C, dout)
+        if table is not None:
+            out = out[table]  # combine in logical order (bitwise invariant)
+        y = D.combine_ec(out, token_idx, ec_w, T)
+        metrics = MoEMetrics(jnp.zeros(()), router_z_loss(logits),
+                             _ec_flat_load(E), jnp.zeros(()),
+                             obs_counters.local_counters(dropped=jnp.zeros(())))
+        return y, metrics
+    g = route_tokens(router, x, cfg, rng=rng)
+    expert_ids = g.expert_ids
     if table is not None:
         # experts arrive in the plan's physical order; route through the
         # logical->physical index table (routing semantics unchanged)
@@ -362,7 +414,7 @@ def _moe_local(x: jax.Array, router: dict, experts: dict, cfg: MoEConfig,
         load, drop = load_metrics(plan.load, plan.keep, T * cfg.top_k)
     if table is not None:
         load = load[table]  # logical order
-    metrics = MoEMetrics(load_balance_loss(g.probs, g.expert_ids, cfg.num_experts),
+    metrics = MoEMetrics(_aux_loss(router, x, g, cfg),
                          router_z_loss(g.logits), load, drop,
                          obs_counters.local_counters(
                              dropped=drop * (T * cfg.top_k)))
@@ -375,7 +427,7 @@ def _moe_local(x: jax.Array, router: dict, experts: dict, cfg: MoEConfig,
 
 
 def _moe_a2a(x, router, experts, extra, shadow, l2p, cfg: MoEConfig, act,
-             expert_fn, dist: DistConfig, impl: str = "einsum"):
+             expert_fn, dist: DistConfig, impl: str = "einsum", rng=None):
     """Tokens sharded over all mesh axes; experts sharded over ``expert_axis``.
 
     Per-rank: gate -> dispatch into (E, C, d) -> all-to-all over the expert
@@ -406,26 +458,44 @@ def _moe_a2a(x, router, experts, extra, shadow, l2p, cfg: MoEConfig, act,
         place = None
     table = _route_table(place, l2p)
 
-    g = gate_forward(router, x, cfg)
-    C = D.expert_capacity(t, E, cfg.top_k, cfg.capacity_factor)
-    spec = shadow_spec(place, E, C)
+    ec = cfg.router == "expert_choice"
+    if ec:
+        # experts pick tokens: exact uniform capacities, the (E, C, d) buffer
+        # is a plain gather and the exchange machinery below runs unchanged
+        C, token_idx, ti_phys, ec_w, ec_logits = _ec_route(router, x, cfg,
+                                                           table)
+        g = plan = None
+        spec = shadow_spec(place, E, C)
+        # the planner's capacity shrink prices padded a2a bytes; EC buffers
+        # are exactly sized, so a shrink would only drop — restore C for all
+        spec = spec._replace(main_capacity=C, shadow_capacity=C)
+        buf = x[ti_phys]  # (E, C, d)
+        assigned = jnp.full((E,), C, jnp.int32)
+    else:
+        if rng is not None:
+            for a_ in dist.token_axes:
+                rng = jax.random.fold_in(rng, jax.lax.axis_index(a_))
+        g = route_tokens(router, x, cfg, rng=rng)
+        C = D.expert_capacity(t, E, cfg.top_k, cfg.capacity_factor)
+        spec = shadow_spec(place, E, C)
+        expert_ids = g.expert_ids
+        if table is not None:
+            expert_ids = table[expert_ids]
+        if place is not None:
+            plan = D.make_capacity_plan(expert_ids, E,
+                                        tuple(int(c) for c in spec.capacities))
+        else:
+            plan = D.make_capacity_plan(expert_ids, E, C)
+        buf = D.dispatch_capacity(x, plan, E)  # (E, width, d)
+        assigned = plan.load
     E_ns = spec.num_owned  # physical slots [0, E_ns) take the a2a
     E_local = E_ns // mp
     Cm = spec.main_capacity
-    expert_ids = g.expert_ids
-    if table is not None:
-        expert_ids = table[expert_ids]
-    if place is not None:
-        plan = D.make_capacity_plan(expert_ids, E,
-                                    tuple(int(c) for c in spec.capacities))
-    else:
-        plan = D.make_capacity_plan(expert_ids, E, C)
-    buf = D.dispatch_capacity(x, plan, E)  # (E, width, d)
     buf, buf_shadow = split_buffer(buf, spec)
 
     # ---- global data exchange (Fig 2), owned experts only ----
     n_chunks = pipeline.resolve_chunks(dist.overlap_chunks or 1, Cm)
-    counts = plan.load[:E_ns].reshape(mp, E_local)
+    counts = assigned[:E_ns].reshape(mp, E_local)
     # §5.2 follow-on: with chunking the counts exchange decomposes into
     # ppermutes too, so the pipelined HLO has no blocking all-to-all at all
     incoming = pipeline.counts_all_to_all(counts, ax, mp,
@@ -457,7 +527,11 @@ def _moe_a2a(x, router, experts, extra, shadow, l2p, cfg: MoEConfig, act,
 
     # ---- shadowed hot experts: every rank, own tokens, zero a2a bytes ----
     out = merge_outputs(out, out_shadow, spec)
-    y = D.combine_capacity(out, plan, g.combine_weights)
+    if ec:
+        out_log = out if table is None else out[table]
+        y = D.combine_ec(out_log, token_idx, ec_w, t)
+    else:
+        y = D.combine_capacity(out, plan, g.combine_weights)
 
     # shared-expert / dense-residual FFNs on the LOCAL token shard with
     # replicated weights — avoids the full-token replication SPMD falls back
@@ -475,7 +549,7 @@ def _moe_a2a(x, router, experts, extra, shadow, l2p, cfg: MoEConfig, act,
     if spec.num_shadow:
         # shadowed experts never cross the wire; their global load is the
         # psum of local assignment counts over every token-holding axis
-        shadow_load = jax.lax.psum(plan.load[E_ns:], axes)
+        shadow_load = jax.lax.psum(assigned[E_ns:], axes)
         load_global = jnp.concatenate([load_global,
                                        shadow_load.astype(load_global.dtype)])
     if dist.obs:
@@ -489,7 +563,10 @@ def _moe_a2a(x, router, experts, extra, shadow, l2p, cfg: MoEConfig, act,
         load_global = load_global[table]
     load, _ = load_metrics(load_global, None,
                            jnp.maximum(load_global.sum(), 1))
-    _, drop = load_metrics(plan.load, plan.keep, t * cfg.top_k)
+    if ec:
+        drop = jnp.zeros(())  # exact capacities: nothing to drop
+    else:
+        _, drop = load_metrics(plan.load, plan.keep, t * cfg.top_k)
     drop_pm = jax.lax.pmean(drop, axes)
     if dist.obs:
         obs = obs_counters.exchange_counters(
@@ -502,8 +579,9 @@ def _moe_a2a(x, router, experts, extra, shadow, l2p, cfg: MoEConfig, act,
     else:
         obs = ObsCounters.zero()
     metrics = MoEMetrics(
-        jax.lax.pmean(load_balance_loss(g.probs, g.expert_ids, E), axes),
-        jax.lax.pmean(router_z_loss(g.logits), axes),
+        jnp.zeros(()) if ec
+        else jax.lax.pmean(_aux_loss(router, x, g, cfg), axes),
+        jax.lax.pmean(router_z_loss(ec_logits if ec else g.logits), axes),
         load,
         drop_pm,
         obs,
@@ -512,7 +590,8 @@ def _moe_a2a(x, router, experts, extra, shadow, l2p, cfg: MoEConfig, act,
 
 
 def _moe_a2a_ragged(x, router, experts, extra, shadow, l2p, cfg: MoEConfig,
-                    act, expert_fn, dist: DistConfig, impl: str = "einsum"):
+                    act, expert_fn, dist: DistConfig, impl: str = "einsum",
+                    rng=None):
     """Dropless (ragged) expert parallelism — the load-sized exchange.
 
     Where the capacity path pads every expert to C rows before the wire,
@@ -549,20 +628,35 @@ def _moe_a2a_ragged(x, router, experts, extra, shadow, l2p, cfg: MoEConfig,
         place = None
     table = _route_table(place, l2p)
 
-    g = gate_forward(router, x, cfg)
-    expert_ids = g.expert_ids
     E_ns = E  # physical slots [0, E_ns) take the a2a; the rest are shadowed
-    if table is not None:
-        expert_ids = table[expert_ids]
     if place is not None:
         E_ns = place.num_owned
     E_local = E_ns // mp
-    n = t * cfg.top_k
+    ec = cfg.router == "expert_choice"
+    if ec:
+        # exact capacities = the degenerate uniform-ragged case: the sorted
+        # rows are the gathered (E, C) token grid flattened physical-major,
+        # with group_sizes == C everywhere — the exchange runs unchanged
+        C, token_idx, ti_phys, ec_w, ec_logits = _ec_route(router, x, cfg,
+                                                           table)
+        g = plan = None
+        n = E * C
+        gs_phys = jnp.full((E,), C, jnp.int32)
+        x_sorted = x[ti_phys.reshape(-1)]  # (n, d)
+    else:
+        if rng is not None:
+            for a_ in dist.token_axes:
+                rng = jax.random.fold_in(rng, jax.lax.axis_index(a_))
+        g = route_tokens(router, x, cfg, rng=rng)
+        expert_ids = g.expert_ids
+        if table is not None:
+            expert_ids = table[expert_ids]
+        n = t * cfg.top_k
+        plan = D.make_ragged_plan(expert_ids, E)  # full physical-order sort
+        gs_phys = plan.group_sizes
+        x_sorted = D.dispatch_ragged(x, plan)  # (n, d)
     B = dist.ragged_bound or n
-
-    plan = D.make_ragged_plan(expert_ids, E)  # full physical-order sort
-    x_sorted = D.dispatch_ragged(x, plan)  # (n, d)
-    xplan = D.make_ragged_xplan(plan.group_sizes, n, E_ns, mp, B)
+    xplan = D.make_ragged_xplan(gs_phys, n, E_ns, mp, B)
     send = (jnp.zeros((mp * B, d), x.dtype)
             .at[xplan.send_dest].set(x_sorted, mode="drop")
             .reshape(mp, B, d))
@@ -578,7 +672,7 @@ def _moe_a2a_ragged(x, router, experts, extra, shadow, l2p, cfg: MoEConfig,
         xs_sh = jnp.zeros((n, d), x.dtype).at[shadow_dest].set(x_sorted,
                                                                mode="drop")
         fill_fn = lambda: RAGGED_FNS[impl](shadow, xs_sh,
-                                           plan.group_sizes[E_ns:], act)
+                                           gs_phys[E_ns:], act)
 
     wire = dist.wire_jnp_dtype
     node_ax = dist.node_axis
@@ -716,14 +810,19 @@ def _moe_a2a_ragged(x, router, experts, extra, shadow, l2p, cfg: MoEConfig,
     if shadow:
         y_sorted = y_sorted + fill_out.at[shadow_dest].get(mode="fill",
                                                            fill_value=0)
-    y = D.combine_ragged(y_sorted, plan, g.combine_weights)
+    if ec:
+        out_grid = y_sorted.reshape(E, C, -1)
+        out_log = out_grid if table is None else out_grid[table]
+        y = D.combine_ec(out_log, token_idx, ec_w, t)
+    else:
+        y = D.combine_ragged(y_sorted, plan, g.combine_weights)
 
     for p in extra.values():  # see _moe_a2a (§Perf residual fix)
         y = y + dense_ffn(p, x, act)
 
     # ---- metrics: global assigned load + bound-overflow drops ----
     axes = tuple(dist.token_axes)
-    load_global = jax.lax.psum(plan.group_sizes, axes)
+    load_global = jax.lax.psum(gs_phys, axes)
     if dist.obs:
         # physical order: owned slots [0, E_ns) took the exchange, the tail
         # [E_ns, E) are shadowed hot experts served locally on every rank
@@ -763,8 +862,9 @@ def _moe_a2a_ragged(x, router, experts, extra, shadow, l2p, cfg: MoEConfig,
     else:
         obs = ObsCounters.zero()
     metrics = MoEMetrics(
-        jax.lax.pmean(load_balance_loss(g.probs, g.expert_ids, E), axes),
-        jax.lax.pmean(router_z_loss(g.logits), axes),
+        jnp.zeros(()) if ec
+        else jax.lax.pmean(_aux_loss(router, x, g, cfg), axes),
+        jax.lax.pmean(router_z_loss(ec_logits if ec else g.logits), axes),
         load,
         drop_pm,
         obs,
@@ -773,7 +873,7 @@ def _moe_a2a_ragged(x, router, experts, extra, shadow, l2p, cfg: MoEConfig,
 
 
 def _moe_psum(x, router, experts, extra, shadow, l2p, cfg: MoEConfig, act,
-              expert_fn, dist: DistConfig, impl: str = "einsum"):
+              expert_fn, dist: DistConfig, impl: str = "einsum", rng=None):
     """Tokens NOT sharded over the expert axis (decode): every rank gates all
     its tokens, computes only its local experts, partial outputs psum over the
     expert axis.  No all-to-all; communication = one psum of (t, d).
@@ -824,16 +924,22 @@ def _moe_psum(x, router, experts, extra, shadow, l2p, cfg: MoEConfig, act,
         place = None
     table = _route_table(place, l2p)
 
-    g = gate_forward(router, x, cfg)
+    rank = 0  # row-major rank within the (possibly tuple) expert axis group
+    for a in dist.expert_axes:
+        rank = rank * dist.mesh.shape[a] + jax.lax.axis_index(a)
+    if cfg.router == "expert_choice":
+        return _moe_psum_ec(x, router, experts, extra, shadow, table, rank,
+                            cfg, act, expert_fn, dist, impl)
+    if rng is not None:
+        for a_ in dist.token_axes:
+            rng = jax.random.fold_in(rng, jax.lax.axis_index(a_))
+    g = route_tokens(router, x, cfg, rng=rng)
     expert_ids = g.expert_ids
     if table is not None:
         expert_ids = table[expert_ids]
     # layout-invariant slot-wise reduction only when a placement is engaged;
     # the plain path keeps the k-fold-cheaper combined psum (see docstring)
     slotwise = table is not None or bool(shadow)
-    rank = 0  # row-major rank within the (possibly tuple) expert axis group
-    for a in dist.expert_axes:
-        rank = rank * dist.mesh.shape[a] + jax.lax.axis_index(a)
     if cfg.dispatch == "ragged":
         E_ns = place.num_owned if place is not None else E
         E_local = E_ns // mp
@@ -942,8 +1048,88 @@ def _moe_psum(x, router, experts, extra, shadow, l2p, cfg: MoEConfig, act,
         obs = ObsCounters.zero()
     if table is not None:
         load_pm = load_pm[table]  # logical order
-    metrics = MoEMetrics(pm(load_balance_loss(g.probs, g.expert_ids, E)),
+    metrics = MoEMetrics(pm(_aux_loss(router, x, g, cfg)),
                          pm(router_z_loss(g.logits)), load_pm, drop_pm, obs)
+    return y, metrics
+
+
+def _moe_psum_ec(x, router, experts, extra, shadow, table, rank,
+                 cfg: MoEConfig, act, expert_fn, dist: DistConfig,
+                 impl: str = "einsum"):
+    """Expert-choice under the psum (decode) mode.
+
+    Tokens are replicated over the expert axis, so every rank routes the
+    *global* token set identically — the (E, C) grid is the dense
+    reference's, exactly.  Each rank computes only its owned expert rows of
+    the grid (zeros elsewhere), partial grids psum over the expert axis
+    (disjoint blocks: the reduction adds exact zeros, so the result is
+    bitwise the local grid), shadowed experts are computed on every rank
+    outside the reduction, and the combine scatter-adds in logical expert
+    order — bitwise layout-invariant by the same argument as the slot-wise
+    token-choice combine.
+    """
+    ax = dist.expert_axis
+    mp = dist.expert_parallelism
+    E = cfg.num_experts
+    t, d = x.shape
+    C, token_idx, ti_phys, ec_w, ec_logits = _ec_route(router, x, cfg, table)
+    place = dist.placement
+    E_ns = place.num_owned if place is not None else E
+    E_local = E_ns // mp
+    if cfg.dispatch == "ragged":
+        n = E * C
+        x_sorted = x[ti_phys.reshape(-1)]  # (n, d) physical-expert-major
+        i = jnp.arange(n, dtype=jnp.int32)
+        lo = rank * E_local * C  # my owned segment (uniform C rows/expert)
+        mine = (i >= lo) & (i < lo + E_local * C)
+        dest = jnp.where(mine, i - lo, n).astype(jnp.int32)  # shift to 0
+        xs = jnp.zeros((n, d), x.dtype).at[dest].set(x_sorted, mode="drop")
+        ys = RAGGED_FNS[impl](experts, xs,
+                              jnp.full((E_local,), C, jnp.int32), act)
+        y_rows = jax.lax.psum(
+            ys.at[dest].get(mode="fill", fill_value=0), ax)
+        psum_elems, psum_dtype = y_rows.size, y_rows.dtype
+        if shadow:
+            lo_sh = E_ns * C  # sorted tail = shadow rows, shifted to 0
+            dest_sh = jnp.where(i >= lo_sh, i - lo_sh, n).astype(jnp.int32)
+            xs_sh = jnp.zeros((n, d), x.dtype).at[dest_sh].set(x_sorted,
+                                                               mode="drop")
+            ys_sh = RAGGED_FNS[impl](shadow, xs_sh,
+                                     jnp.full((E - E_ns,), C, jnp.int32), act)
+            y_rows = y_rows + ys_sh.at[dest_sh].get(mode="fill", fill_value=0)
+        out_grid = y_rows.reshape(E, C, -1)
+    else:
+        buf = x[ti_phys]  # (E, C, d)
+        buf_local = jax.lax.dynamic_slice_in_dim(buf, rank * E_local,
+                                                 E_local, axis=0)
+        out_local = expert_fn(experts, buf_local, act)  # (E_local, C, dout)
+        out = jax.lax.psum(jax.lax.dynamic_update_slice_in_dim(
+            jnp.zeros((E_ns, C, out_local.shape[-1]), out_local.dtype),
+            out_local, rank * E_local, axis=0), ax)
+        psum_elems, psum_dtype = out.size, out.dtype
+        if E_ns < E:
+            # shadowed experts: every rank, same tokens, outside the psum
+            out = jnp.concatenate([out, expert_fn(shadow, buf[E_ns:], act)],
+                                  axis=0)
+        out_grid = out
+    out_log = out_grid if table is None else out_grid[table]
+    y = D.combine_ec(out_log, token_idx, ec_w, t)
+    for p in extra.values():  # see _moe_a2a
+        y = y + dense_ffn(p, x, act)
+
+    axes = tuple(dist.token_axes)
+    pm = (lambda v: jax.lax.pmean(v, axes)) if axes else (lambda v: v)
+    if dist.obs:
+        n_ranks = _axes_size(dist, axes)
+        shadow_hits = jnp.float32((E - E_ns) * C * n_ranks)
+        obs = obs_counters.reduction_counters(
+            payload_elems=psum_elems, payload_dtype=psum_dtype,
+            dropped=jnp.zeros(()), shadow_hits=shadow_hits,
+            imbalance=jnp.ones(()))
+    else:
+        obs = ObsCounters.zero()
+    metrics = MoEMetrics(jnp.zeros(()), pm(router_z_loss(ec_logits)),
+                         _ec_flat_load(E), jnp.zeros(()), obs)
     return y, metrics
 
 
@@ -995,6 +1181,11 @@ def fmoe_apply(params: dict, x: jax.Array, cfg: MoEConfig, *, act: str = "swiglu
             "dist channel instead — DistConfig.local(placement=plan) for "
             "the single-worker path, dist._replace(placement=plan) for a "
             "meshed one", DeprecationWarning, stacklevel=2)
+    if dist is not None and dist.router is not None and dist.router != cfg.router:
+        # the dist channel can pin the routing variant (e.g. serve-time
+        # frozen routing) without touching the model config
+        import dataclasses
+        cfg = dataclasses.replace(cfg, router=dist.router)
     if dist is not None and dist.mesh is None:
         # DistConfig.local carrier: unwrap to the single-worker path
         if placement is None:
@@ -1084,19 +1275,31 @@ def fmoe_apply(params: dict, x: jax.Array, cfg: MoEConfig, *, act: str = "swiglu
             extra = {}
         xspec = {k: jax.tree.map(lambda _: P(None, None), v)
                  for k, v in extra.items()}
-        fn = functools.partial(local, cfg=cfg, act=act, expert_fn=expert_fn,
-                               dist=dist, impl=impl)
+        has_l2p = l2p is not None
+        has_rng = rng is not None
+
+        def fn(xf_, router_, experts_, extra_, shadow_, *rest):
+            # optional trailing operands, in order: l2p table, gate rng (the
+            # paths fold the rng with their token-axis indices so every
+            # shard explores independently)
+            _l2p = rest[0] if has_l2p else None
+            _rng = rest[int(has_l2p)] if has_rng else None
+            return local(xf_, router_, experts_, extra_, shadow_, _l2p,
+                         cfg=cfg, act=act, expert_fn=expert_fn, dist=dist,
+                         impl=impl, rng=_rng)
+
         mspec = MoEMetrics(P(), P(), P(None), P(),
                            ObsCounters(P(), P(), P(), P(), P(), P(), P()))
         in_specs = [tok_spec, jax.tree.map(lambda _: P(None, None), router),
                     espec, xspec, sspec]
         operands = [xf, router, experts, extra, shadow]
-        if l2p is not None:
+        if has_l2p:
             # the per-layer gate-id table rides replicated into the region
             operands.append(jnp.asarray(l2p, jnp.int32))
             in_specs.append(P(None))
-        else:
-            fn = functools.partial(fn, l2p=None)
+        if has_rng:
+            operands.append(rng)
+            in_specs.append(P(None))
         y, metrics = compat.shard_map(
             fn, mesh=dist.mesh,
             in_specs=tuple(in_specs),

@@ -8,6 +8,7 @@ cache is capped at SWA_CAP and per-layer windows are clamped (DESIGN.md §4).
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import functools
 import time
 
@@ -363,6 +364,12 @@ def main() -> None:
     ap.add_argument("--trace", default="",
                     help="write a Chrome trace of host-side decode_step "
                          "spans (chrome://tracing / perfetto)")
+    ap.add_argument("--router", default="",
+                    choices=["", "topk", "noisy_topk", "gumbel",
+                             "expert_choice", "frozen"],
+                    help="override the MoE routing variant for serving "
+                         "(all routers are deterministic at decode: no rng "
+                         "is threaded, so gumbel == topk here)")
     args = ap.parse_args()
 
     scfg = ServeConfig.from_args(args)
@@ -378,6 +385,9 @@ def main() -> None:
     cfg = get_config(scfg.arch)
     if scfg.reduced:
         cfg = reduced(cfg, num_layers=4, d_model=256)
+    if args.router and cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, router=args.router))
     params = lm.init_params(jax.random.PRNGKey(0), cfg)
     prompt = jax.random.randint(jax.random.PRNGKey(1),
                                 (args.batch, args.prompt_len), 0, cfg.vocab_size)

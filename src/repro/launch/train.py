@@ -132,22 +132,34 @@ def make_train_step(cfg: ModelConfig, opt: AdamW, *, dist=None,
     step never materializes the (M, H) hidden activation in HBM.
     """
 
-    def grads_of(params, batch):
+    # exploration routers perturb gate selection with a per-step key derived
+    # from the step counter (deterministic, resume-stable); every other
+    # router stays rng-free so existing runs are bit-identical
+    explore = (cfg.moe is not None
+               and cfg.moe.router in ("noisy_topk", "gumbel"))
+
+    def grads_of(params, batch, rng=None):
         return jax.value_and_grad(
-            lambda p: lm.loss_fn(p, cfg, batch, dist=dist, impl=impl),
+            lambda p: lm.loss_fn(p, cfg, batch, dist=dist, impl=impl,
+                                 rng=rng),
             has_aux=True)(params)
 
     def train_step(params, opt_state, batch, step):
+        rng = (jax.random.fold_in(jax.random.PRNGKey(17), step)
+               if explore else None)
         if num_microbatches == 1:
-            (loss, aux), grads = grads_of(params, batch)
+            (loss, aux), grads = grads_of(params, batch, rng)
         else:
             def split(x):
                 b = x.shape[0] // num_microbatches
                 return x.reshape(num_microbatches, b, *x.shape[1:])
             micro = jax.tree.map(split, batch)
+            rngs = (jax.random.split(rng, num_microbatches) if explore
+                    else jnp.zeros((num_microbatches,), jnp.uint32))
 
-            def body(acc, mb):
-                (l, a), g = grads_of(params, mb)
+            def body(acc, xs):
+                mb, r = xs
+                (l, a), g = grads_of(params, mb, r if explore else None)
                 return jax.tree.map(jnp.add, acc, (g, l, a)), None
 
             zero_g = jax.tree.map(jnp.zeros_like, params)
@@ -163,7 +175,7 @@ def make_train_step(cfg: ModelConfig, opt: AdamW, *, dist=None,
                     "dropped": jnp.zeros(()), "shadow_hits": jnp.zeros(()),
                     "imbalance": jnp.zeros(())}
             (grads, loss, aux), _ = jax.lax.scan(
-                body, (zero_g, jnp.zeros(()), aux0), micro)
+                body, (zero_g, jnp.zeros(()), aux0), (micro, rngs))
             inv = 1.0 / num_microbatches
             grads = jax.tree.map(lambda g: g * inv, grads)
             loss, aux = loss * inv, jax.tree.map(lambda a: a * inv, aux)
@@ -441,6 +453,19 @@ def main() -> None:
                     help="override the MoE dispatch mode (ragged = dropless "
                          "sorted tokens; with --mesh it runs the ragged "
                          "load-sized all-to-all exchange)")
+    ap.add_argument("--router", default="",
+                    choices=["", "topk", "noisy_topk", "gumbel",
+                             "expert_choice", "frozen"],
+                    help="override the MoE routing variant (see "
+                         "MoEConfig.router; expert_choice emits exact "
+                         "per-expert capacities and a flat load)")
+    ap.add_argument("--freeze_router_at", type=int, default=0,
+                    help="StableMoE two-stage: at this step the live gate "
+                         "stops routing and the distilled lightweight "
+                         "router takes over (cfg flips to router='frozen' "
+                         "and the step re-jits; requires a distilling "
+                         "router — noisy_topk or gumbel — so params carry "
+                         "w_frozen)")
     ap.add_argument("--ragged_bound", default="0",
                     help="ragged exchange: rows per peer shard (static "
                          "pad-to-max-per-peer width; 0 = local tokens * "
@@ -509,6 +534,15 @@ def main() -> None:
     if args.dispatch and cfg.moe is not None:
         cfg = dataclasses.replace(
             cfg, moe=dataclasses.replace(cfg.moe, dispatch=args.dispatch))
+    if args.router and cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, router=args.router))
+    if args.freeze_router_at and (
+            cfg.moe is None
+            or cfg.moe.router not in ("noisy_topk", "gumbel")):
+        raise SystemExit("--freeze_router_at needs a distilling router "
+                         "(--router noisy_topk or gumbel) so params carry "
+                         "w_frozen")
     opt = AdamW(lr=args.lr)
 
     opts = {"overlap_chunks": args.overlap_chunks,
@@ -608,6 +642,34 @@ def main() -> None:
     try:
         while step < args.steps:
             batch = {k: jnp.asarray(v) for k, v in next(batch_iter).items()}
+            if (args.freeze_router_at and step >= args.freeze_router_at
+                    and cfg.moe is not None and cfg.moe.router != "frozen"):
+                # StableMoE stage 2: distillation is over — route through
+                # w_frozen from here on.  Pure config flip + re-jit (params
+                # already carry the distilled router); gate-id tables stop
+                # changing, so later replans are pure load responses.
+                cfg = dataclasses.replace(
+                    cfg, moe=dataclasses.replace(cfg.moe, router="frozen"))
+                if args.mesh:
+                    step_fn, pshard, oshard = jit_train_step(
+                        cfg, opt, mesh, args.batch, args.seq,
+                        num_microbatches=args.microbatches, opts=opts,
+                        placement=hook.placement if hook is not None
+                        else None)
+                    params = jax.device_put(params, pshard)
+                    opt_state = jax.device_put(opt_state, oshard)
+                    if hook is not None:
+                        hook.cfg = cfg  # replan re-jits keep the frozen gate
+                else:
+                    step_fn = jax.jit(make_train_step(
+                        cfg, opt, num_microbatches=args.microbatches,
+                        impl=args.impl))
+                obs_events.emit(sink, obs_events.ROUTER_FROZEN, step=step)
+                if sink is not None:
+                    modeled = modeled_of(step_fn, params, opt_state, batch,
+                                         step)
+                print(f"step {step:5d} router frozen: gate-id tables are "
+                      f"now stable")
             if step == start_step and sink is not None:
                 modeled = modeled_of(step_fn, params, opt_state, batch, step)
             while True:  # retry loop, bounded by the guard's max_bad_steps

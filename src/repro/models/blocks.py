@@ -80,12 +80,15 @@ def layer_init(rng: jax.Array, cfg: ModelConfig, *, cross: bool = False) -> dict
 
 
 def _apply_ffn(p: dict, cfg: ModelConfig, x: jax.Array,
-               dist: Optional[DistConfig], impl: str = "einsum", l2p=None):
+               dist: Optional[DistConfig], impl: str = "einsum", l2p=None,
+               rng=None):
     """``l2p``: this layer's logical->physical gate-id table, scanned out of
-    a stacked per-layer placement by models/lm.py (None = shared/no plan)."""
+    a stacked per-layer placement by models/lm.py (None = shared/no plan).
+    ``rng``: optional per-layer gate key (exploration routers: noisy_topk /
+    gumbel); None keeps every router deterministic."""
     if cfg.moe is not None:
         return fmoe_apply(p, x, cfg.moe, act=cfg.act, dist=dist, impl=impl,
-                          l2p=l2p)
+                          l2p=l2p, rng=rng)
     return dense_ffn(p, x, cfg.act), None
 
 
@@ -156,7 +159,7 @@ def layer_apply_seq(p: dict, cfg: ModelConfig, x: jax.Array, *, window,
                     dist: Optional[DistConfig] = None,
                     enc_out: Optional[jax.Array] = None,
                     mixer_state: Optional[Any] = None,
-                    impl: str = "einsum", l2p=None):
+                    impl: str = "einsum", l2p=None, rng=None):
     """x (B, S, d) -> (x, MoEMetrics|None).  mixer_state: SSM initial state
     (zeros created by the caller for ssm/hybrid families)."""
     xn = apply_norm(p["norm1"], x, cfg.norm)
@@ -175,7 +178,7 @@ def layer_apply_seq(p: dict, cfg: ModelConfig, x: jax.Array, *, window,
         metrics = None
     else:
         h, metrics = _apply_ffn(p.get("ffn"), cfg, apply_norm(p["norm2"], x, cfg.norm), dist,
-                                impl, l2p)
+                                impl, l2p, rng)
     return x + h, metrics
 
 

@@ -130,7 +130,7 @@ def forward(params: dict, cfg: ModelConfig, tokens: jax.Array, *,
             frames: Optional[jax.Array] = None,
             patches: Optional[jax.Array] = None,
             dist: Optional[DistConfig] = None, impl: str = "einsum",
-            layer_loads: bool = False):
+            layer_loads: bool = False, rng: Optional[jax.Array] = None):
     """tokens (B, S) -> (logits (B, S', V), MoEMetrics).
 
     vlm: ``patches`` (B, P, d) are prepended; logits cover the full combined
@@ -139,6 +139,9 @@ def forward(params: dict, cfg: ModelConfig, tokens: jax.Array, *,
     ``layer_loads=True`` additionally returns the per-layer expert load
     stack (L, E) — expert skew is per layer, and the per-layer placement
     planner feeds on this instead of the layer-summed ``metrics.load``.
+    ``rng`` arms gate exploration (noisy_topk / gumbel routers): it splits
+    into per-layer keys riding the layer scan; None keeps routing
+    deterministic (the eval/serve stance for every router).
     """
     dtype = jnp.dtype(cfg.dtype)
     dist, tables = _layer_tables(cfg, dist)
@@ -154,14 +157,18 @@ def forward(params: dict, cfg: ModelConfig, tokens: jax.Array, *,
     state0 = B.mixer_state(cfg, batch, dtype)
     n_e = _n_experts(cfg)
     want_loads = layer_loads and cfg.moe is not None
+    has_rng = rng is not None and cfg.moe is not None
 
     def body(carry, xs):
         x, metrics = carry
-        (p_l, window), l2p = xs[:2], (xs[2] if tables is not None else None)
+        p_l, window = xs[:2]
+        rest = xs[2:]
+        l2p = rest[0] if tables is not None else None
+        rng_l = rest[int(tables is not None)] if has_rng else None
         x, m = B.layer_apply_seq(_cast_params(p_l, dtype), cfg, x,
                                  window=window, dist=dist,
                                  enc_out=enc_out, mixer_state=state0,
-                                 impl=impl, l2p=l2p)
+                                 impl=impl, l2p=l2p, rng=rng_l)
         metrics = metrics + m if m is not None else metrics
         return ((x.astype(dtype), metrics),
                 m.load if want_loads else None)
@@ -171,6 +178,8 @@ def forward(params: dict, cfg: ModelConfig, tokens: jax.Array, *,
     xs = (params["layers"], windows)
     if tables is not None:
         xs += (tables,)
+    if has_rng:
+        xs += (jax.random.split(rng, cfg.num_layers),)
     (x, metrics), loads = jax.lax.scan(body, (x, MoEMetrics.zero(n_e)), xs)
     x = apply_norm(params["final_norm"], x, cfg.norm)
     logits = _logits(params, cfg, x)
@@ -182,15 +191,17 @@ def forward(params: dict, cfg: ModelConfig, tokens: jax.Array, *,
 
 
 def loss_fn(params: dict, cfg: ModelConfig, batch: dict, *,
-            dist: Optional[DistConfig] = None, impl: str = "einsum"):
+            dist: Optional[DistConfig] = None, impl: str = "einsum",
+            rng: Optional[jax.Array] = None):
     """Next-token cross-entropy + MoE aux losses.  batch: {"tokens", and
     optionally "frames"/"patches"}.  ``impl`` picks the expert kernels
-    (einsum | pallas | fused — see repro.core.fmoe.EXPERT_FNS)."""
+    (einsum | pallas | fused — see repro.core.fmoe.EXPERT_FNS).  ``rng``
+    arms train-time gate exploration (see :func:`forward`)."""
     tokens = batch["tokens"]
     logits, metrics, loads = forward(params, cfg, tokens,
                                      frames=batch.get("frames"),
                                      patches=batch.get("patches"), dist=dist,
-                                     impl=impl, layer_loads=True)
+                                     impl=impl, layer_loads=True, rng=rng)
     if cfg.frontend == "vision" and "patches" in batch:
         logits = logits[:, batch["patches"].shape[1]:]  # text positions only
     targets = tokens[:, 1:]

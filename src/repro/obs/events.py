@@ -30,6 +30,9 @@ RESUME = "resume"  # training resumed from a complete checkpoint
 REPLAN_ROLLBACK = "replan_rollback"  # post-replan regression: plan reverted
 REPLAN_COMMIT = "replan_commit"  # probation passed; new plan kept
 
+# routing (launch.train --freeze_router_at)
+ROUTER_FROZEN = "router_frozen"  # gate distillation ended; frozen router live
+
 # telemetry self-reporting (launch.train modeled bytes)
 MODELED_ERROR = "modeled_bytes_error"  # HLO byte modeling unavailable
 

@@ -435,12 +435,13 @@ class PlacementController:
                  d_hidden: int, capacity: int, capacity_factor: float = 1.0,
                  every: int = 200, min_gain: float = 0.02, train: bool = True,
                  shrink_capacity: bool = True, bytes_per_elem: int = 4,
-                 num_layers: int = 0,
+                 num_layers: int = 0, flat_tol: float = 0.02,
                  constants: Optional[CostConstants] = None):
         self.monitor = monitor
         self.num_ranks = num_ranks
         self.every = every
         self.min_gain = min_gain
+        self.flat_tol = flat_tol
         self.num_layers = num_layers
         self.constants = constants if constants is not None else CostConstants()
         self.kw = dict(d_model=d_model, d_hidden=d_hidden, capacity=capacity,
@@ -458,6 +459,7 @@ class PlacementController:
             self.current = identity_placement(monitor.num_experts, num_ranks)
         self.replans = 0
         self.rollbacks = 0
+        self.flat_skips = 0  # replan ticks short-circuited by flat load
         # plans that regressed post-migration and were rolled back
         # (launch.train.ReplanHook probation): never propose them again
         self._blacklist: set = set()
@@ -480,15 +482,40 @@ class PlacementController:
         self.blacklist(bad_plan)
         self.rollbacks += 1
 
+    def _is_flat(self, load) -> bool:
+        """True when every expert's share is within ``flat_tol`` of uniform.
+
+        Expert-choice routing produces exactly this by construction (1/E per
+        expert), and well-balanced token-choice gates approach it — either
+        way no layout can beat the identity-ish one we already run, so the
+        planner short-circuits instead of burning a plan+cost pass."""
+        load = np.asarray(load, np.float64)
+        rows = load if load.ndim == 2 else load[None, :]
+        for row in rows:
+            tot = row.sum()
+            if tot <= 0:
+                return False
+            share = row / tot
+            if share.max() * row.shape[0] > 1.0 + self.flat_tol:
+                return False
+        return True
+
     def maybe_replan(self, step: int):
         """New plan to migrate to, or None to keep the current layout."""
         if self.every <= 0 or step == 0 or step % self.every:
             return None
         if self.num_layers:
             load = self.monitor.load_ema_layers
-            cand = plan_placement_per_layer(load, self.num_ranks, **self.kw)
         else:
             load = self.monitor.load_ema
+        if self._is_flat(load):
+            # flat load (expert-choice by construction, or a converged gate):
+            # no placement can improve on uniform — keep the current layout.
+            self.flat_skips += 1
+            return None
+        if self.num_layers:
+            cand = plan_placement_per_layer(load, self.num_ranks, **self.kw)
+        else:
             cand = plan_placement(load, self.num_ranks, **self.kw)
         if cand in self._blacklist:
             return None

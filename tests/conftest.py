@@ -10,8 +10,8 @@ TIER1_MODULES = {
     "test_calibrate", "test_dispatch", "test_fmoe", "test_fused_ffn",
     "test_fused_ffn_bwd", "test_gate", "test_gate_variants",
     "test_hier_a2a", "test_hlo_regression", "test_obs", "test_per_layer",
-    "test_placement", "test_ragged_a2a", "test_resilience", "test_scheduler",
-    "test_serve",
+    "test_placement", "test_ragged_a2a", "test_resilience",
+    "test_router_zoo", "test_scheduler", "test_serve",
     "test_sharding_rules", "test_substrate",
 }
 

@@ -112,12 +112,41 @@ def skew_router(env, hot=(10.0, 5.0)) -> SimpleNamespace:
                            x=jnp.abs(env.x) + 0.1)
 
 
+# the router sweep axis: every variant must pass the same dispatch x impl x
+# dist x overlap differential sweep (single-rank oracle, same assertions)
+ROUTERS = ("topk", "noisy_topk", "gumbel", "expert_choice", "frozen")
+
+
 def oracle(env, impl: str = "einsum", params=None, x=None):
     """The single-rank reference: fmoe_apply with no dist."""
     from repro.core import fmoe
 
     return fmoe.fmoe_apply(params if params is not None else env.params,
                            x if x is not None else env.x, env.cfg, impl=impl)
+
+
+def oracle_sharded(env, n_shards: int, impl: str = "einsum", params=None,
+                   x=None):
+    """Shard-wise single-rank reference: fmoe_apply per token shard,
+    concatenated back.  This is the oracle for routers whose decision
+    depends on the token *population* — expert-choice picks each expert's
+    top-C from the tokens it can see, so under token sharding the reference
+    routes each shard independently (n_shards = the product of the dist's
+    token axes).  With n_shards=1 it degenerates to :func:`oracle`."""
+    from repro.core import fmoe
+
+    p = params if params is not None else env.params
+    xv = x if x is not None else env.x
+    xf = xv.reshape(-1, xv.shape[-1])
+    assert xf.shape[0] % n_shards == 0
+    shards = xf.reshape(n_shards, -1, xv.shape[-1])
+    ys, loads = [], []
+    for i in range(n_shards):
+        y, m = fmoe.fmoe_apply(p, shards[i], env.cfg, impl=impl)
+        ys.append(y)
+        loads.append(m.load)
+    return (jnp.concatenate(ys, 0).reshape(xv.shape),
+            jnp.stack(loads).mean(0))
 
 
 def dist_apply(env, mesh, dist, params=None, x=None, impl: str = "einsum"):
@@ -131,13 +160,19 @@ def dist_apply(env, mesh, dist, params=None, x=None, impl: str = "einsum"):
                 x if x is not None else env.x)
 
 
-def layer_grads(env, dist, mesh=None, params=None, impl: str = "einsum"):
-    """Grads of a scalar loss through the layer ((y**2).mean() + aux)."""
+def layer_grads(env, dist, mesh=None, params=None, impl: str = "einsum",
+                aux_weight: float = 0.01):
+    """Grads of a scalar loss through the layer ((y**2).mean() + aux).
+
+    ``aux_weight=0.0`` drops the aux term — the bitwise grad comparisons
+    use it because the sharded balance loss (pmean of per-shard f·P) is a
+    *different function* than the single-rank global one, so its grads
+    legitimately diverge beyond rounding."""
     from repro.core import fmoe
 
     def loss(p):
         y, m = fmoe.fmoe_apply(p, env.x, env.cfg, dist=dist, impl=impl)
-        return (y ** 2).mean() + 0.01 * m.aux_loss
+        return (y ** 2).mean() + aux_weight * m.aux_loss
 
     p = params if params is not None else env.params
     if mesh is None:
@@ -188,9 +223,10 @@ def assert_grads_match(g_ref, g_dist, *, bitwise_experts: bool = True,
         else:
             np.testing.assert_allclose(a, b, atol=router_atol,
                                        err_msg=f"experts/{k}")
-    np.testing.assert_allclose(np.asarray(g_ref["router"]["w"]),
-                               np.asarray(g_dist["router"]["w"]),
-                               atol=router_atol, err_msg="router/w")
+    for rk in g_ref["router"]:  # w, plus w_noise / w_frozen per router
+        np.testing.assert_allclose(np.asarray(g_ref["router"][rk]),
+                                   np.asarray(g_dist["router"][rk]),
+                                   atol=router_atol, err_msg=f"router/{rk}")
     for l_ref, l_dist in zip(jax.tree.leaves(g_ref), jax.tree.leaves(g_dist)):
         assert np.isfinite(np.asarray(l_ref, np.float32)).all()
         assert np.isfinite(np.asarray(l_dist, np.float32)).all()

@@ -46,6 +46,50 @@ def test_matrix_matches_single_rank_oracle(dispatch, dist_mode):
     assert "matrix cell ok" in out
 
 
+# the router axis of the same matrix (ISSUE 10 hard bar: new routers slot
+# into the existing sweep — same oracle, same assertions, no parallel
+# plumbing).  One subprocess per router; dispatch × dist × overlap inside.
+# "topk" is the baseline above; expert-choice routes per token shard, so its
+# oracle is the shard-wise local apply over the dist's token axes.
+@pytest.mark.parametrize("router", ["noisy_topk", "gumbel", "expert_choice",
+                                    "frozen"])
+def test_router_matrix_matches_single_rank_oracle(router):
+    out = du.run(f"""
+    import numpy as np, jax.numpy as jnp
+    import dist_utils as du
+    from repro.core import fmoe
+    router = {router!r}
+    mesh = du.make_mesh()
+    for dispatch in ("capacity", "ragged"):
+        env = du.moe_env(dispatch=dispatch, router=router)
+        for axes in (("data", "model"), ("data",)):
+            for nc in ((0, 2) if axes == ("data", "model") else (0,)):
+                dist = fmoe.DistConfig(mesh, axes, overlap_chunks=nc)
+                if router == "expert_choice":
+                    n_tok = 1
+                    for a in dist.token_axes:
+                        n_tok *= mesh.shape[a]
+                    y_ref, load_ref = du.oracle_sharded(env, n_tok)
+                else:
+                    y_ref, m_ref = du.oracle(env)
+                    load_ref = m_ref.load
+                y, m = du.dist_apply(env, mesh, dist)
+                du.assert_close(y, y_ref, 1e-5, msg=(dispatch, axes, nc))
+                np.testing.assert_allclose(np.asarray(m.load),
+                                           np.asarray(load_ref), atol=1e-6)
+                if router == "expert_choice":
+                    # flat by construction, and dropless at any shard count
+                    np.testing.assert_allclose(
+                        np.asarray(m.load), 1.0 / env.cfg.num_experts,
+                        atol=1e-6)
+                    assert float(m.drop_frac) == 0.0
+                if dispatch == "ragged":
+                    assert float(m.drop_frac) == 0.0
+    print("router cell ok")
+    """)
+    assert "router cell ok" in out
+
+
 def test_a2a_and_psum_match_naive_baseline():
     """The paper-faithful oracle: the Rau-style masked loop."""
     print(du.run("""

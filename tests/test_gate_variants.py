@@ -1,13 +1,25 @@
-"""Gate variants (noisy top-k, expert-choice) + load monitor + flash kernel."""
+"""Gate variants (noisy top-k, expert-choice) + load monitor + flash kernel.
+
+The property tests at the bottom sweep the routing zoo (ISSUE 10 satellite):
+expert-choice capacity exactness, combine-weight normalization across every
+router, frozen-router determinism, and gumbel temperature -> argmax
+convergence.  They ride tests/_hypothesis_compat — skipped (not faked green)
+when hypothesis isn't installed."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from _hypothesis_compat import given, settings, st
 from repro.configs.base import MoEConfig
+from repro.core import dispatch as D
 from repro.core import fmoe
 from repro.core.gate import (expert_choice_forward, expert_choice_moe,
-                             gate_init, noisy_topk_forward, noisy_topk_init)
+                             gate_init, gumbel_topk_forward,
+                             noisy_topk_forward, noisy_topk_init,
+                             route_tokens, router_init)
 from repro.core.monitor import LoadMonitor, expert_placement
 
 
@@ -45,8 +57,8 @@ def test_expert_choice_perfectly_balanced():
     # by construction every expert processes exactly C tokens
     T = 64
     C = int(T * 2.0 / 8)
-    idx, w, _ = expert_choice_forward(params["router"], x.reshape(-1, 16),
-                                      CFG, capacity=C)
+    idx, w, _, _ = expert_choice_forward(params["router"], x.reshape(-1, 16),
+                                         CFG, capacity=C)
     assert idx.shape == (8, C)
 
 
@@ -74,6 +86,97 @@ def test_expert_placement_balances_load():
         worker_loads[w] += load[e]
     # greedy: spread within 25% of ideal (=9.0)
     assert worker_loads.max() <= 9.0 * 1.25
+
+
+# ---------------------------------------------------------------------------
+# Routing-zoo properties (hypothesis; skip when the library is absent)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(T=st.integers(8, 96), E=st.sampled_from([2, 4, 8]),
+       cf=st.floats(1.0, 4.0))
+def test_expert_choice_capacity_exact_and_dropless(T, E, cf):
+    """EC emits the exact per-expert capacity: every expert fills all C
+    slots with valid token indices, the layer reports zero drops and a flat
+    1/E load at ANY capacity_factor >= 1."""
+    cfg = MoEConfig(num_experts=E, top_k=min(2, E), d_expert_hidden=32,
+                    router="expert_choice", capacity_factor=cf)
+    params = fmoe.fmoe_init(jax.random.PRNGKey(0), 16, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(T * 131 + E), (T, 16))
+    C = D.ec_capacity(T, E, cf)
+    assert 1 <= C <= T
+    idx, w, probs, _ = expert_choice_forward(params["router"], x, cfg,
+                                             capacity=C)
+    assert idx.shape == (E, C) and w.shape == (E, C)
+    assert bool(((idx >= 0) & (idx < T)).all())
+    y, m = fmoe.fmoe_apply(params, x, cfg)
+    assert float(m.drop_frac) == 0.0
+    np.testing.assert_allclose(np.asarray(m.load), 1.0 / E, atol=1e-6)
+    assert float(m.aux_loss) == 0.0  # balanced by construction, no aux
+
+
+@settings(max_examples=25, deadline=None)
+@given(router=st.sampled_from(["topk", "noisy_topk", "gumbel", "frozen"]),
+       T=st.integers(1, 64), seed=st.integers(0, 2 ** 31 - 1),
+       explore=st.booleans())
+def test_combine_weights_normalized_across_routers(router, T, seed, explore):
+    """Every token-choice router's combine weights sum to 1 per token —
+    with or without an exploration rng."""
+    cfg = MoEConfig(num_experts=8, top_k=2, d_expert_hidden=32, router=router)
+    params = router_init(jax.random.PRNGKey(0), 16, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(seed % 9973 + 1), (T, 16))
+    rng = jax.random.PRNGKey(seed) if explore else None
+    g = route_tokens(params, x, cfg, rng=rng)
+    assert g.expert_ids.shape == (T, 2)
+    np.testing.assert_allclose(np.asarray(g.combine_weights.sum(-1)), 1.0,
+                               rtol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2 ** 31 - 1))
+def test_frozen_router_deterministic(seed):
+    """After the freeze: same tokens -> same ids regardless of the rng, and
+    the ids are invariant to live-gate updates (only w_frozen scores) —
+    gate-id tables are stable, the StableMoE stage-2 contract."""
+    cfg = MoEConfig(num_experts=8, top_k=2, d_expert_hidden=32,
+                    router="frozen")
+    params = router_init(jax.random.PRNGKey(0), 16, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(seed % 9973 + 1), (48, 16))
+    g1 = route_tokens(params, x, cfg, rng=jax.random.PRNGKey(seed))
+    g2 = route_tokens(params, x, cfg, rng=jax.random.fold_in(
+        jax.random.PRNGKey(seed), 1))
+    np.testing.assert_array_equal(np.asarray(g1.expert_ids),
+                                  np.asarray(g2.expert_ids))
+    # perturbing the live gate w moves nothing: frozen scores only
+    bumped = {**params, "w": params["w"] + 3.0}
+    g3 = route_tokens(bumped, x, cfg)
+    np.testing.assert_array_equal(np.asarray(g1.expert_ids),
+                                  np.asarray(g3.expert_ids))
+    np.testing.assert_array_equal(np.asarray(g1.combine_weights),
+                                  np.asarray(g3.combine_weights))
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2 ** 31 - 1))
+def test_gumbel_temperature_converges_to_argmax(seed):
+    """temperature -> 0 recovers the deterministic softmax top-k selection
+    even WITH an exploration rng; a hot temperature actually explores."""
+    cfg_cold = MoEConfig(num_experts=8, top_k=2, d_expert_hidden=32,
+                         router="gumbel", router_temperature=1e-7)
+    params = router_init(jax.random.PRNGKey(0), 16, cfg_cold)
+    x = jax.random.normal(jax.random.PRNGKey(seed % 9973 + 1), (64, 16))
+    rng = jax.random.PRNGKey(seed)
+    det = gumbel_topk_forward(params, x, cfg_cold)  # rng=None: exact top-k
+    cold = gumbel_topk_forward(params, x, cfg_cold, rng=rng)
+    np.testing.assert_array_equal(np.asarray(cold.expert_ids),
+                                  np.asarray(det.expert_ids))
+    np.testing.assert_allclose(np.asarray(cold.combine_weights),
+                               np.asarray(det.combine_weights), atol=1e-6)
+    cfg_hot = dataclasses.replace(cfg_cold, router_temperature=10.0)
+    hot = gumbel_topk_forward(params, x, cfg_hot, rng=rng)
+    assert not np.array_equal(np.asarray(hot.expert_ids),
+                              np.asarray(det.expert_ids))
 
 
 # ---------------------------------------------------------------------------
